@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the XLA (ref) path is the executable-speed number; the
+Pallas kernels run in interpret mode (correctness only — their timing is NOT
+TPU-indicative and is reported separately as *_interpret).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lagrange import CodeSpec, generator_matrix
+from repro.kernels.lagrange_encode.kernel import encode_matrix_pallas
+from repro.kernels.lagrange_encode.ref import encode_matrix_ref
+from repro.kernels.coded_gradient.kernel import coded_gradient_pallas
+from repro.kernels.coded_gradient.ref import coded_gradient_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # Lagrange encode at the paper's sim scale: G (150,50) x X (50, 40000)
+    spec = CodeSpec(15, 10, 50, 2)
+    g = generator_matrix(spec)
+    x = jnp.asarray(rng.normal(size=(50, 40_000)), jnp.float32)
+    us_ref = _time(jax.jit(encode_matrix_ref), g, x)
+    us_int = _time(lambda a, b: encode_matrix_pallas(a, b, interpret=True), g, x, iters=2)
+    rows.append({"name": "lagrange_encode_xla", "us_per_call": us_ref,
+                 "derived": "shape=150x50@50x40000"})
+    rows.append({"name": "lagrange_encode_pallas_interpret", "us_per_call": us_int,
+                 "derived": "interpret=True;correctness-path"})
+
+    # fused coded gradient at EC2 scale-ish: (150 chunks, 25 rows, 3000 cols)
+    xt = jnp.asarray(rng.normal(size=(150, 25, 1000)), jnp.float32)
+    yt = jnp.asarray(rng.normal(size=(150, 25, 1)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1000, 1)), jnp.float32)
+    us_ref = _time(jax.jit(coded_gradient_ref), xt, yt, w)
+    us_int = _time(lambda a, b, c: coded_gradient_pallas(a, b, c, interpret=True),
+                   xt, yt, w, iters=2)
+    rows.append({"name": "coded_gradient_xla", "us_per_call": us_ref,
+                 "derived": "shape=150x25x1000"})
+    rows.append({"name": "coded_gradient_pallas_interpret", "us_per_call": us_int,
+                 "derived": "interpret=True;correctness-path"})
+
+    # flash attention (small): B1 H4 S256 D64
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    us_ref = _time(jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True)), q, k, v)
+    us_int = _time(lambda a, b, c: flash_attention_pallas(
+        a, b, c, causal=True, block_q=64, block_k=64, interpret=True), q, k, v, iters=2)
+    rows.append({"name": "flash_attention_xla", "us_per_call": us_ref,
+                 "derived": "B1H4S256D64,GQA2"})
+    rows.append({"name": "flash_attention_pallas_interpret", "us_per_call": us_int,
+                 "derived": "interpret=True;correctness-path"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""§Roofline reporter: aggregates experiments/dryrun/*.json into the
+per-(arch x cell) three-term table used by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "experiments", "dryrun")
+
+
+def load(dir_: str = DEFAULT_DIR, pod_tag: str = "pod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{pod_tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(dir_: str = DEFAULT_DIR) -> list[dict]:
+    rows = []
+    for rec in load(dir_):
+        name = f"roofline_{rec['arch']}_{rec['cell']}"
+        if "skipped" in rec:
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"SKIP:{rec['skipped']}"})
+            continue
+        if "error" in rec:
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": f"ERROR:{rec['error'][:80]}"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": r["bound_s"] * 1e6,
+            "derived": (
+                f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+                f"collective_s={r['collective_s']:.4g};dom={r['dominant']};"
+                f"useful={r['useful_flops_ratio']:.3f};"
+                f"mem_dev_GiB={rec['memory'].get('per_device_total', 0)/2**30:.2f}"
+            ),
+        })
+    return rows
+
+
+def markdown_table(dir_: str = DEFAULT_DIR, pod_tag: str = "pod") -> str:
+    lines = [
+        "| arch | cell | compute (s) | memory (s) | collective (s) | dominant | "
+        "MODEL/HLO flops | mem/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(dir_, pod_tag):
+        if "skipped" in rec:
+            lines.append(f"| {rec['arch']} | {rec['cell']} | — | — | — | N/A | — | — |")
+            continue
+        if "error" in rec:
+            lines.append(f"| {rec['arch']} | {rec['cell']} | ERROR |  |  |  |  |  |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['cell']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{rec['memory'].get('per_device_total', 0)/2**30:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Tables:
+  fig3_sim       paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)
+  fig4_ec2       paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)
+  table_kstar    recovery-threshold table (eqs. 15/16)
+  bench_kernels  Pallas-kernel + XLA-path microbenchmarks
+  coded_dp       beyond-paper: LEA-coded microbatch DP in the trainer
+  roofline       33-cell dry-run roofline terms (from experiments/dryrun)
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, coded_dp_bench, fig3_sim, fig4_ec2,
+                            roofline, table_kstar)
+
+    suites = [
+        ("fig3_sim", fig3_sim.run),
+        ("fig4_ec2", fig4_ec2.run),
+        ("table_kstar", table_kstar.run),
+        ("bench_kernels", bench_kernels.run),
+        ("coded_dp", coded_dp_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")
+        except Exception as e:  # pragma: no cover
+            failed = True
+            print(f"{name},0,\"SUITE ERROR: {e}\"", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

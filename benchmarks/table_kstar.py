@@ -1,0 +1,38 @@
+"""Recovery-threshold table (paper eqs. 15/16 + Sec. 3.1 worked examples)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.lagrange import CodeSpec
+
+
+CASES = [
+    # (n, r, k, deg_f, expected K*, where in the paper)
+    (15, 10, 50, 2, 99, "Sec6.1 sim"),
+    (15, 10, 50, 1, 50, "Sec6.2 EC2 k=50"),
+    (15, 10, 100, 1, 100, "Sec6.2 EC2 k=100"),
+    (15, 10, 120, 1, 120, "Sec6.2 EC2 k=120"),
+    (3, 2, 2, 2, 3, "Sec3.1 example 1"),
+    (3, 2, 4, 2, 6, "Sec3.1 example 2 (repetition)"),
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    t0 = time.time()
+    for n, r, k, deg, want, where in CASES:
+        spec = CodeSpec(n, r, k, deg)
+        got = spec.recovery_threshold
+        assert got == want, (where, got, want)
+        rows.append({
+            "name": f"kstar_{where.replace(' ', '_')}",
+            "us_per_call": (time.time() - t0) * 1e6 / len(CASES),
+            "derived": f"n={n};r={r};k={k};deg={deg};Kstar={got};mode={spec.mode}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""LM training driver on the public API (CPU-runnable reduced config).
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen3_0_6b] [--steps 30]
+
+Uses the full trainer (checkpointing + LEA-coded DP + compression available
+via flags on repro.launch.train); asserts the loss actually decreases.
+For the production-scale run, drop --smoke and launch on a pod:
+    python -m repro.launch.train --arch qwen3_0_6b --steps 1000 ...
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    out = train_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "64", "--lr", "3e-3",
+    ])
+    losses = [h["loss"] for h in out["history"] if "loss" in h]
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f} "
+          f"({out['wall_s']:.1f}s)")
+    assert losses[-1] < losses[0], "training must reduce the loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

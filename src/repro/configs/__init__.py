@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own workload.  ``get_config(name)`` / ``list_configs()`` are the registry."""
+
+from .base import ArchConfig, SHAPE_CELLS, ShapeCell, get_config, list_configs  # noqa: F401

@@ -1,0 +1,45 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab_size=32_768,
+    mlp_type="swiglu",
+    n_experts=8,
+    top_k=2,
+    window=4096,
+    microbatch=16,
+    scan_groups=8,
+    opt_state_dtype="bfloat16",
+    grad_accum_dtype="bfloat16",      # §Perf B2
+    remat_policy="save_rowparallel",  # §Perf B1: -26%% collective term
+    source="[arXiv:2401.04088; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="mixtral-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=512,
+    mlp_type="swiglu",
+    n_experts=4,
+    top_k=2,
+    window=32,
+    dtype="float32",
+    remat=False,
+)

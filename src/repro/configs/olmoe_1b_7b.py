@@ -1,0 +1,41 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8.  [arXiv:2409.02060; hf]"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50_304,
+    mlp_type="swiglu",
+    qk_norm=True,
+    n_experts=64,
+    top_k=8,
+    microbatch=8,
+    scan_groups=4,
+    moe_impl="ep",   # §Perf D: expert parallelism, collective term -90%
+    source="[arXiv:2409.02060; hf]",
+)
+
+SMOKE = ArchConfig(
+    name="olmoe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=512,
+    mlp_type="swiglu",
+    qk_norm=True,
+    n_experts=8,
+    top_k=2,
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,44 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed.  [arXiv:2212.04356]
+
+``input_specs`` provides 1500 precomputed frame embeddings (the post-conv
+mel-spectrogram stream); 4 encoder + 4 decoder layers, GELU MLP.  Positional:
+RoPE substitutes whisper's learned/sinusoidal embeddings (DESIGN §9).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51_865,
+    mlp_type="gelu",
+    frontend="audio_stub",
+    frontend_tokens=1500,
+    microbatch=8,
+    source="[arXiv:2212.04356; unverified]",
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    mlp_type="gelu",
+    frontend="audio_stub",
+    frontend_tokens=16,
+    dtype="float32",
+    remat=False,
+)

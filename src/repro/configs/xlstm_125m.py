@@ -1,0 +1,37 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks (d_ff=0: blocks own their
+projections).  [arXiv:2405.04517; unverified]
+
+12 blocks, sLSTM at positions (3, 9) (~the paper's mLSTM:sLSTM ratio).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50_304,
+    slstm_at=(3, 9),
+    microbatch=4,
+    source="[arXiv:2405.04517; unverified]",
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=0,
+    vocab_size=512,
+    slstm_at=(1,),
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,43 @@
+"""Core library: the paper's contribution (LCC encoding + LEA scheduling)."""
+
+from .lagrange import (  # noqa: F401
+    FIELD_P,
+    CodeSpec,
+    alpha_points,
+    beta_points,
+    decode,
+    decode_matrix,
+    decode_matrix_modp,
+    encode,
+    generator_matrix,
+    generator_matrix_modp,
+    matmul_modp,
+    recovery_threshold,
+)
+from .lea import (  # noqa: F401
+    EstimatorState,
+    LoadParams,
+    allocate,
+    estimated_transitions,
+    init_estimator,
+    predicted_good_prob,
+    round_success,
+    success_prob_all_prefixes,
+    update_estimator,
+)
+from .markov import (  # noqa: F401
+    initial_states,
+    sample_trajectory,
+    speeds_from_states,
+    stationary_good_prob,
+    step_states,
+)
+from .throughput import STRATEGIES, compare, simulate, timely_throughput  # noqa: F401
+from .coded_ops import (  # noqa: F401
+    CodedDataset,
+    chunk_gradient,
+    coded_linear_gradient,
+    coded_matmul,
+    encode_dataset,
+    uncoded_linear_gradient,
+)

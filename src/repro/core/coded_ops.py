@@ -1,0 +1,128 @@
+"""Coded computation ops: encode-once, evaluate-per-round, decode-on-K*.
+
+These are the ML-facing operations the paper's system executes each round:
+
+  * :func:`coded_matmul`          — f(X_j) = X_j @ w           (deg f = 1)
+  * :func:`coded_linear_gradient` — f(X_j,y_j) = X_jᵀ(X_j w−y) (deg f = 2)
+
+Both follow the paper's protocol: the dataset is Lagrange-encoded once
+(`encode_dataset`), each round every worker evaluates f on (a prefix of) its
+r stored encoded chunks, and the master decodes from the K* fastest results.
+On-time-ness is injected as a boolean mask (produced by the scheduler /
+simulator), keeping shapes static for XLA.
+
+The Pallas kernels in ``repro.kernels`` accelerate the two hot spots
+(`lagrange_encode` GEMM and the fused degree-2 gradient); these jnp versions
+are the oracles they are tested against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lagrange import CodeSpec, decode_matrix, encode, generator_matrix
+
+
+@dataclasses.dataclass
+class CodedDataset:
+    """Encoded dataset as stored across workers: chunk v lives on worker v//r."""
+
+    spec: CodeSpec
+    x_tilde: jnp.ndarray            # (nr, rows, cols)
+    y_tilde: jnp.ndarray | None     # (nr, rows) or None
+
+    @property
+    def nr(self) -> int:
+        return self.spec.nr
+
+
+def encode_dataset(
+    spec: CodeSpec,
+    x_chunks: jnp.ndarray,
+    y_chunks: jnp.ndarray | None = None,
+    encode_fn=encode,
+) -> CodedDataset:
+    """Encode (k, rows, cols) data chunks (and optionally (k, rows) targets).
+
+    ``encode_fn`` lets callers swap in the Pallas kernel
+    (``repro.kernels.lagrange_encode.ops.encode``).
+    """
+    if x_chunks.shape[0] != spec.k:
+        raise ValueError(f"expected {spec.k} chunks, got {x_chunks.shape[0]}")
+    g = generator_matrix(spec, x_chunks.dtype)
+    x_t = encode_fn(g, x_chunks)
+    y_t = encode_fn(g, y_chunks) if y_chunks is not None else None
+    return CodedDataset(spec=spec, x_tilde=x_t, y_tilde=y_t)
+
+
+def _first_kstar_mask(on_time: jnp.ndarray, kstar: int) -> jnp.ndarray:
+    """Indices of the K* lexicographically-first on-time chunks (static shape).
+
+    The master only needs *any* K* on-time results (Defn. 4.1); we take the
+    first K* in chunk order.  Caller must guarantee >= K* are on time.
+    """
+    order = jnp.argsort(~on_time, stable=True)  # on-time chunks first
+    return order[:kstar]
+
+
+def coded_matmul(
+    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray
+) -> jnp.ndarray:
+    """Decode f(X_j) = X_j @ w from on-time encoded evaluations.
+
+    ``on_time`` is a concrete (nr,) bool array from the scheduler (which chunk
+    evaluations arrived before the deadline).  Returns (k, rows[, ...]).
+    """
+    spec = coded.spec
+    on_time = np.asarray(on_time)
+    if int(on_time.sum()) < spec.recovery_threshold:
+        raise TimeoutError(
+            f"round failed: {int(on_time.sum())} < K*={spec.recovery_threshold} on-time results"
+        )
+    results = jnp.einsum("vrc,c...->vr...", coded.x_tilde, w)
+    received = np.nonzero(on_time)[0][: spec.recovery_threshold]
+    d = decode_matrix(spec, received, results.dtype)
+    return jnp.tensordot(d, results[jnp.asarray(received)], axes=1)
+
+
+def chunk_gradient(x_tilde_v: jnp.ndarray, y_tilde_v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-chunk degree-2 evaluation f(X̃,ỹ) = X̃ᵀ(X̃ w − ỹ) — worker-side op."""
+    resid = x_tilde_v @ w - y_tilde_v
+    return x_tilde_v.T @ resid
+
+
+def coded_linear_gradient(
+    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray, gradient_fn=None
+) -> jnp.ndarray:
+    """Full least-squares gradient sum_j X_jᵀ(X_j w − y_j) via LCC (deg f = 2).
+
+    ``gradient_fn(x_tilde, y_tilde, w) -> (nr, cols)`` defaults to a vmapped
+    :func:`chunk_gradient`; the Pallas fused kernel slots in here.
+    """
+    spec = coded.spec
+    if coded.y_tilde is None:
+        raise ValueError("dataset was encoded without targets")
+    if spec.deg_f != 2:
+        raise ValueError("linear-model gradient is a degree-2 polynomial; spec.deg_f must be 2")
+    on_time = np.asarray(on_time)
+    if int(on_time.sum()) < spec.recovery_threshold:
+        raise TimeoutError(
+            f"round failed: {int(on_time.sum())} < K*={spec.recovery_threshold} on-time results"
+        )
+    if gradient_fn is None:
+        gradient_fn = jax.vmap(chunk_gradient, in_axes=(0, 0, None))
+    results = gradient_fn(coded.x_tilde, coded.y_tilde, w)       # (nr, cols)
+    received = np.nonzero(on_time)[0][: spec.recovery_threshold]
+    d = decode_matrix(spec, received, results.dtype)
+    per_chunk = jnp.tensordot(d, results[jnp.asarray(received)], axes=1)  # (k, cols)
+    return jnp.sum(per_chunk, axis=0)
+
+
+def uncoded_linear_gradient(x_chunks: jnp.ndarray, y_chunks: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: sum_j X_jᵀ(X_j w − y_j) computed directly on the raw data."""
+    grads = jax.vmap(chunk_gradient, in_axes=(0, 0, None))(x_chunks, y_chunks, w)
+    return jnp.sum(grads, axis=0)

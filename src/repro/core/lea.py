@@ -1,0 +1,182 @@
+"""Estimate-and-Allocate (EA) — the load-allocation half of LEA (Sec. 3.2).
+
+The paper's 4 phases map to:
+  (1) Load Assignment  -> :func:`allocate`    (linear search over i~, eq. 7/8)
+  (2) Local Computation-> simulated in core/throughput.py / executed by
+                          runtime/fault_tolerance.py
+  (3) Aggregation/Obs. -> the caller passes observed worker states
+  (4) Update           -> :func:`update_estimator`
+
+Efficiency note (beyond the paper's pseudocode): the estimated success
+probability (8) is a Poisson-binomial tail.  Instead of the exponential
+sum over subsets G ⊆ [i~], we evaluate all n prefixes with one O(n^2)
+dynamic program (`lax.scan` convolving one Bernoulli at a time), so one
+allocation costs O(n^2) total rather than O(2^n) — the linear search of the
+paper then reads the tails off the DP table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EstimatorState(NamedTuple):
+    """Per-worker transition counts + last observed state.
+
+    counts[:, 0] = C_{g->g}, counts[:, 1] = C_{g->b},
+    counts[:, 2] = C_{b->g}, counts[:, 3] = C_{b->b}.
+    """
+
+    counts: jnp.ndarray      # (n, 4) float32
+    prev_state: jnp.ndarray  # (n,) int32, 1=good 0=bad
+    seen_prev: jnp.ndarray   # () bool — False before the first observation
+
+
+def init_estimator(n: int) -> EstimatorState:
+    return EstimatorState(
+        counts=jnp.zeros((n, 4), jnp.float32),
+        prev_state=jnp.zeros((n,), jnp.int32),
+        seen_prev=jnp.asarray(False),
+    )
+
+
+def update_estimator(state: EstimatorState, observed: jnp.ndarray) -> EstimatorState:
+    """Phase (4): fold one round's observed states (n,) into the counts.
+
+    The first observation only sets ``prev_state`` (no transition yet).
+    """
+    prev, cur = state.prev_state, observed.astype(jnp.int32)
+    inc = jnp.stack(
+        [
+            (prev == 1) & (cur == 1),
+            (prev == 1) & (cur == 0),
+            (prev == 0) & (cur == 1),
+            (prev == 0) & (cur == 0),
+        ],
+        axis=-1,
+    ).astype(jnp.float32)
+    counts = jnp.where(state.seen_prev, state.counts + inc, state.counts)
+    return EstimatorState(counts=counts, prev_state=cur, seen_prev=jnp.asarray(True))
+
+
+def estimated_transitions(state: EstimatorState) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(p̂_gg, p̂_bb) with add-one smoothing (paper leaves t=0 behaviour open;
+    Laplace smoothing avoids 0/0 and washes out as counts grow)."""
+    c = state.counts
+    p_gg = (c[:, 0] + 1.0) / (c[:, 0] + c[:, 1] + 2.0)
+    p_bb = (c[:, 3] + 1.0) / (c[:, 2] + c[:, 3] + 2.0)
+    return p_gg, p_bb
+
+
+def predicted_good_prob(state: EstimatorState) -> jnp.ndarray:
+    """p̂_{g,i}(m+1): p̂_gg if last seen good, else 1 - p̂_bb (Phase 4)."""
+    p_gg, p_bb = estimated_transitions(state)
+    return jnp.where(state.prev_state == 1, p_gg, 1.0 - p_bb)
+
+
+# ---------------------------------------------------------------------------
+# Success probability + allocation (Phase 1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LoadParams:
+    """Static load-allocation parameters for one deployment."""
+
+    n: int
+    kstar: int      # optimal recovery threshold K*
+    ell_g: int      # min(mu_g * d, r)  — good-state load
+    ell_b: int      # mu_b * d          — bad-state load (always finishes)
+
+    def __post_init__(self):
+        if self.ell_g <= self.ell_b:
+            raise ValueError("ell_g must exceed ell_b (otherwise allocation is trivial)")
+
+
+def success_prob_all_prefixes(p_good_sorted: jnp.ndarray, lp: LoadParams) -> jnp.ndarray:
+    """P̂(i~) for every i~ in 1..n, given p_good sorted descending.  (n,) float.
+
+    P̂(i~) = P[ Binom-mixture(top i~) >= w(i~) ],
+    w(i~)  = ceil((K* - (n - i~) * ell_b) / ell_g)   (eq. 7/8).
+
+    One O(n^2) DP: scan over workers, carry the Poisson-binomial pmf of the
+    good-worker count among the first i~ workers; read the tail per prefix.
+    """
+    n = lp.n
+    i_tilde = jnp.arange(1, n + 1)
+    # w(i~); values <= 0 mean "always enough", > i~ mean "impossible".
+    w = jnp.ceil((lp.kstar - (n - i_tilde) * lp.ell_b) / lp.ell_g).astype(jnp.int32)
+
+    def body(pmf, p):
+        # pmf over counts 0..n (length n+1); convolve one Bernoulli(p).
+        shifted = jnp.concatenate([jnp.zeros((1,), pmf.dtype), pmf[:-1]])
+        new = pmf * (1.0 - p) + shifted * p
+        return new, new
+
+    pmf0 = jnp.zeros((n + 1,), jnp.float32).at[0].set(1.0)
+    _, pmfs = jax.lax.scan(body, pmf0, p_good_sorted.astype(jnp.float32))  # (n, n+1)
+
+    counts = jnp.arange(n + 1)[None, :]
+    tail_mask = counts >= jnp.maximum(w, 0)[:, None]
+    tails = jnp.sum(pmfs * tail_mask, axis=-1)
+    # w > i~  -> infeasible -> probability 0 (eq. 7).
+    return jnp.where(w > i_tilde, 0.0, tails)
+
+
+def allocate(p_good: jnp.ndarray, lp: LoadParams) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Phase (1): the LEA load assignment.
+
+    Returns ``(loads, i_star)`` where ``loads`` is the (n,) int32 allocation in
+    the *original worker order* (the i* workers with the largest p_good get
+    ell_g, the rest ell_b — Lemma 4.5), and ``i_star`` the argmax of P̂.
+    """
+    order = jnp.argsort(-p_good)                      # descending
+    p_sorted = p_good[order]
+    probs = success_prob_all_prefixes(p_sorted, lp)   # (n,)
+    i_star = jnp.argmax(probs) + 1                    # in 1..n
+    ranks = jnp.argsort(order)                        # rank of each worker
+    loads = jnp.where(ranks < i_star, lp.ell_g, lp.ell_b).astype(jnp.int32)
+    return loads, i_star
+
+
+def success_prob_bruteforce(p_good_sorted: jnp.ndarray, lp: LoadParams, i_tilde: int) -> float:
+    """Reference implementation of eq. (8) by exponential enumeration (tests)."""
+    import itertools
+
+    import numpy as np
+
+    p = np.asarray(p_good_sorted)[:i_tilde]
+    w = math_ceil((lp.kstar - (lp.n - i_tilde) * lp.ell_b) / lp.ell_g)
+    if w > i_tilde:
+        return 0.0
+    total = 0.0
+    for mask in itertools.product([0, 1], repeat=i_tilde):
+        if sum(mask) >= max(w, 0):
+            prob = 1.0
+            for i, m in enumerate(mask):
+                prob *= p[i] if m else (1.0 - p[i])
+            total += prob
+    return float(total)
+
+
+def math_ceil(x: float) -> int:
+    import math
+
+    return int(math.ceil(x))
+
+
+def round_success(loads: jnp.ndarray, states: jnp.ndarray, lp: LoadParams,
+                  mu_g: float, mu_b: float, deadline: float) -> jnp.ndarray:
+    """Did the master receive >= K* evaluations by the deadline?
+
+    Worker i returns all ``loads[i]`` results iff loads[i]/speed_i <= d
+    (speeds are deterministic given the state — Sec. 2.2).
+    """
+    speeds = jnp.where(states == 1, mu_g, mu_b)
+    on_time = loads.astype(jnp.float32) / speeds <= deadline + 1e-9
+    received = jnp.sum(jnp.where(on_time, loads, 0))
+    return received >= lp.kstar

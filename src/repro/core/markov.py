@@ -1,0 +1,57 @@
+"""Two-state Markov worker-speed model (Sec. 2.2 of the paper).
+
+State convention throughout the codebase: ``1 = good``, ``0 = bad``.
+Each worker i has transition probs ``p_gg[i] = P[good -> good]`` and
+``p_bb[i] = P[bad -> bad]``; chains are mutually independent and initialized
+from their stationary distribution (as in the paper).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def stationary_good_prob(p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
+    """pi_g = (1 - p_bb) / (2 - p_gg - p_bb) for an irreducible 2-state chain."""
+    return (1.0 - p_bb) / (2.0 - p_gg - p_bb)
+
+
+def initial_states(key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
+    """Sample worker states (n,) int32 from the stationary distribution."""
+    pi_g = stationary_good_prob(p_gg, p_bb)
+    return (jax.random.uniform(key, p_gg.shape) < pi_g).astype(jnp.int32)
+
+
+def step_states(
+    key: jax.Array, states: jnp.ndarray, p_gg: jnp.ndarray, p_bb: jnp.ndarray
+) -> jnp.ndarray:
+    """One Markov transition for all n workers."""
+    u = jax.random.uniform(key, states.shape)
+    stay_good = u < p_gg
+    leave_bad = u < (1.0 - p_bb)
+    return jnp.where(states == 1, stay_good, leave_bad).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def sample_trajectory(
+    key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int
+) -> jnp.ndarray:
+    """(rounds, n) int32 state trajectory, initial state from stationary dist."""
+    k0, k1 = jax.random.split(key)
+    s0 = initial_states(k0, p_gg, p_bb)
+
+    def body(carry, k):
+        s = step_states(k, carry, p_gg, p_bb)
+        return s, s
+
+    keys = jax.random.split(k1, rounds - 1)
+    _, tail = jax.lax.scan(body, s0, keys)
+    return jnp.concatenate([s0[None], tail], axis=0)
+
+
+def speeds_from_states(states: jnp.ndarray, mu_g: float, mu_b: float) -> jnp.ndarray:
+    """Map 0/1 states to evaluations-per-second speeds."""
+    return jnp.where(states == 1, mu_g, mu_b)

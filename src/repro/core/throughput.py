@@ -1,0 +1,141 @@
+"""Timely-computation-throughput simulator (Defn. 2.1, Sec. 6.1).
+
+Simulates M rounds of deadline-constrained coded computation over n two-state
+Markov workers and measures R(d, eta) = (1/M) * sum_m N_m(d) for a strategy:
+
+  * ``lea``          — the paper's LEA (estimator + optimal allocator)
+  * ``static``       — paper's simulation benchmark: iid allocation from the
+                       *true stationary distribution*, resampled until the
+                       total load >= K* (Sec. 6.1)
+  * ``static_equal`` — paper's EC2 benchmark: ell_g/ell_b with prob 1/2 each
+  * ``oracle``       — genie-aided optimum of Thm. 4.6 (knows the Markov model
+                       and the previous state) — the upper bound R*(d)
+
+The whole M-round loop is a single ``lax.scan`` (fast enough for M=1e5 on CPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lea as lea_mod
+from . import markov
+from .lea import EstimatorState, LoadParams
+
+STRATEGIES = ("lea", "static", "static_equal", "oracle")
+
+
+class _OraclePrev(NamedTuple):
+    """Scan carry for the genie strategy: last round's true states."""
+
+    state: jnp.ndarray
+    seen: jnp.ndarray
+
+
+def _static_loads(key: jax.Array, pi_g: jnp.ndarray, lp: LoadParams) -> jnp.ndarray:
+    """iid two-level loads from worker-wise good-probability ``pi_g``,
+    rejection-resampled (bounded) until total >= K* (paper Sec. 6.1)."""
+
+    def cond(carry):
+        i, _, loads = carry
+        return (jnp.sum(loads) < lp.kstar) & (i < 128)
+
+    def body(carry):
+        i, k, _ = carry
+        k, sub = jax.random.split(k)
+        draw = jax.random.uniform(sub, pi_g.shape) < pi_g
+        loads = jnp.where(draw, lp.ell_g, lp.ell_b).astype(jnp.int32)
+        return (i + 1, k, loads)
+
+    init = (jnp.int32(0), key, jnp.zeros(pi_g.shape, jnp.int32))
+    _, _, loads = jax.lax.while_loop(cond, body, init)
+    return loads
+
+
+@partial(jax.jit, static_argnames=("strategy", "lp", "rounds"))
+def simulate(
+    key: jax.Array,
+    strategy: str,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g: float,
+    mu_b: float,
+    deadline: float,
+    rounds: int,
+) -> jnp.ndarray:
+    """Run M rounds; returns (rounds,) bool success indicators N_m(d)."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
+    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    round_keys = jax.random.split(k_rounds, rounds)
+
+    def lea_round(est: EstimatorState, xs):
+        _, s_m = xs
+        p_good = jnp.where(
+            est.seen_prev, lea_mod.predicted_good_prob(est), jnp.full_like(pi_g, 0.5)
+        )
+        loads, _ = lea_mod.allocate(p_good, lp)
+        ok = lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+        est = lea_mod.update_estimator(est, s_m)
+        return est, ok
+
+    def static_round(carry, xs):
+        k, s_m = xs
+        loads = _static_loads(k, pi_g, lp)
+        return carry, lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+
+    def static_equal_round(carry, xs):
+        k, s_m = xs
+        loads = _static_loads(k, jnp.full_like(pi_g, 0.5), lp)
+        return carry, lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+
+    def oracle_round(prev, xs):
+        _, s_m = xs
+        # genie: exact conditional good-probability given last round's state
+        p_good = jnp.where(prev.seen, jnp.where(prev.state == 1, p_gg, 1.0 - p_bb), pi_g)
+        loads, _ = lea_mod.allocate(p_good, lp)
+        ok = lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+        return _OraclePrev(state=s_m, seen=jnp.asarray(True)), ok
+
+    xs = (round_keys, states)
+    if strategy == "lea":
+        _, succ = jax.lax.scan(lea_round, lea_mod.init_estimator(lp.n), xs)
+    elif strategy == "static":
+        _, succ = jax.lax.scan(static_round, jnp.int32(0), xs)
+    elif strategy == "static_equal":
+        _, succ = jax.lax.scan(static_equal_round, jnp.int32(0), xs)
+    else:
+        init = _OraclePrev(state=jnp.zeros_like(p_gg, dtype=jnp.int32), seen=jnp.asarray(False))
+        _, succ = jax.lax.scan(oracle_round, init, xs)
+    return succ
+
+
+def timely_throughput(successes: jnp.ndarray) -> float:
+    """R(d, eta) — eq. (2)."""
+    return float(jnp.mean(successes.astype(jnp.float32)))
+
+
+def compare(
+    key: jax.Array,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g: float,
+    mu_b: float,
+    deadline: float,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+) -> dict[str, float]:
+    """Throughput for several strategies on a *shared* worker trajectory."""
+    out = {}
+    for s in strategies:
+        succ = simulate(key, s, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds)
+        out[s] = timely_throughput(succ)
+    return out

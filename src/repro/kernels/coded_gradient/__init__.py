@@ -1,0 +1,1 @@
+from .ops import coded_gradient  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused worker-side degree-2 evaluation X~^T (X~ W - Y).
+
+This is the per-round compute the paper's workers execute (linear-regression
+gradient, Sec. 2.1 example).  Fusing the two GEMMs keeps the residual
+``X~ W - Y`` in VMEM — it never round-trips through HBM, halving the HBM
+traffic for the common case P << C (arithmetic intensity of the pair is
+dominated by streaming X~ once instead of twice).
+
+Layout per grid step (one encoded chunk v, one C-tile):
+  x   (R, C)  chunk           — R<=256 rows, full row block resident
+  w   (C, P)  round input     — resident
+  y   (R, P)  targets         — resident
+  out (C, P)  gradient
+
+The residual needs the FULL C contraction, so the C axis of ``x`` is kept
+whole per chunk (R*C*4 bytes <= a few MB in all paper configs; asserted).
+Grid is over chunks only — chunks are embarrassingly parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _coded_grad_kernel(x_ref, y_ref, w_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)          # (R, C)
+    y = y_ref[0].astype(jnp.float32)          # (R, P)
+    w = w_ref[...].astype(jnp.float32)        # (C, P)
+    resid = jnp.dot(x, w, preferred_element_type=jnp.float32) - y
+    o_ref[0, :, :] = jnp.dot(x.T, resid, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_gradient_pallas(
+    x_tilde: jnp.ndarray,   # (nr, R, C)
+    y_tilde: jnp.ndarray,   # (nr, R, P)
+    w: jnp.ndarray,         # (C, P)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:           # (nr, C, P)
+    nr, r_rows, c = x_tilde.shape
+    _, _, p = y_tilde.shape
+    assert w.shape == (c, p), (w.shape, c, p)
+    footprint = 4 * (r_rows * c + r_rows * p + 2 * c * p)
+    if footprint > _VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"chunk working set {footprint/2**20:.1f} MiB exceeds VMEM budget; "
+            "shrink chunk rows R or split C externally"
+        )
+    return pl.pallas_call(
+        _coded_grad_kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((1, r_rows, c), lambda v: (v, 0, 0)),
+            pl.BlockSpec((1, r_rows, p), lambda v: (v, 0, 0)),
+            pl.BlockSpec((c, p), lambda v: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, p), lambda v: (v, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, c, p), w.dtype),
+        interpret=interpret,
+    )(x_tilde, y_tilde, w)

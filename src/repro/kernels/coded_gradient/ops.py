@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the fused coded-gradient kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import coded_gradient_pallas
+from .ref import coded_gradient_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def coded_gradient(
+    x_tilde: jnp.ndarray, y_tilde: jnp.ndarray, w: jnp.ndarray,
+    *, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(nr,R,C),(nr,R,P),(C,P) -> (nr,C,P): all chunk gradients, fused.
+
+    Accepts vector targets/weights ((nr,R) and (C,)) and squeezes back.
+    """
+    squeeze = False
+    if y_tilde.ndim == 2 and w.ndim == 1:
+        y_tilde = y_tilde[..., None]
+        w = w[:, None]
+        squeeze = True
+    if interpret is None:
+        interpret = _default_interpret()
+    out = coded_gradient_pallas(x_tilde, y_tilde, w, interpret=interpret)
+    return out[..., 0] if squeeze else out
+
+
+__all__ = ["coded_gradient", "coded_gradient_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused degree-2 coded gradient."""
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_gradient_ref(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """X^T (X W - Y) for one chunk: (R,C),(R,P),(C,P) -> (C,P), f32 accum."""
+    resid = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) - y.astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32).T, resid,
+                   preferred_element_type=jnp.float32).astype(w.dtype)
+
+
+def coded_gradient_ref(x_tilde: jnp.ndarray, y_tilde: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(nr,R,C),(nr,R,P),(C,P) -> (nr,C,P)."""
+    return jax.vmap(chunk_gradient_ref, in_axes=(0, 0, None))(x_tilde, y_tilde, w)

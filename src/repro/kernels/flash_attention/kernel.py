@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: causal/sliding-window GQA flash attention (forward).
+
+Online-softmax tiling (FlashAttention) adapted to the TPU memory hierarchy:
+
+  * grid = (B, Hq, Sq/bq, Sk/bk); the KV axis is the innermost, "arbitrary"
+    dimension — running max/denominator/accumulator live in VMEM scratch and
+    are carried across KV steps;
+  * bq x D accumulator in float32; m/l broadcast across the 128-lane minor
+    dim (TPU vector layout);
+  * causal and sliding-window blocks that are fully masked are skipped with
+    ``pl.when`` (no MXU work issued);
+  * GQA: query head h reads KV head h // (Hq//Hkv) via the BlockSpec index
+    map — no KV repeat is materialized.
+
+On this CPU container the kernel is validated with ``interpret=True`` against
+``ref.attention_ref``; the LM stack's XLA path (models/layers.py) is the
+compile-target used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    sq: int, sk: int, bq: int, bk: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- block-level skip decision (causal diagonal + window band) --------
+    off = sk - sq                       # query positions are right-aligned
+    q_lo = iq * bq + off
+    q_hi = q_lo + bq - 1
+    k_lo = ik * bk
+    k_hi = k_lo + bk - 1
+    run = jnp.asarray(True)
+    if causal:
+        run &= k_lo <= q_hi             # some key not in the future
+    if window is not None:
+        run &= k_hi > q_lo - window     # some key inside the window
+    run &= k_lo < sk                    # not a fully-padded KV block
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # (bq, bk)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < sk                           # key padding
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, 0]                        # (bq,)
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                 # exp(-inf - -inf) guards
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,           # (B, Hq, Sq, D)
+    k: jnp.ndarray,           # (B, Hkv, Sk, D)
+    v: jnp.ndarray,           # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = float(d) ** -0.5
+
+    bq = min(block_q, _round_up(sq, 8))
+    bk = min(block_k, _round_up(sk, 8))
+    sq_p, sk_p = _round_up(sq, bq), _round_up(sk, bk)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        sq=sq, sk=sk, bq=bq, bk=bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq_p // bq, sk_p // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window: int | None = None,
+    scale: float | None = None, interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
+    )
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for causal/windowed GQA attention."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,          # (B, Hq, Sq, D)
+    k: jnp.ndarray,          # (B, Hkv, Sk, D)
+    v: jnp.ndarray,          # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding-window size (None = full)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-friendly)
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from .ops import encode, encode_matrix  # noqa: F401

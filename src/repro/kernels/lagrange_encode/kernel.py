@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: Lagrange encode as a VMEM-tiled GEMM.
+
+Encoding is ``X~ = G @ X`` with a small, reused generator ``G`` (nr x k —
+nr<=few hundred in all paper settings) and a wide data matrix ``X``
+(k x cols, cols = chunk_rows*chunk_cols, typically 1e5..1e7).  The TPU-native
+shape of this computation:
+
+  * grid over (nr-tiles, col-tiles); the *entire* contraction axis k is kept
+    resident in VMEM per tile (k <= 512 in every deployed config, so a
+    (bm, k) G-tile plus a (k, bn) X-tile is < 1 MB at bm=bn=128*q);
+  * MXU-aligned tiles (multiples of 128 on both output dims);
+  * float32 accumulation regardless of the storage dtype (bf16 in prod).
+
+The same kernel serves decode (D @ Y) — it is the identical GEMM shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(g_ref, x_ref, o_ref):
+    g = g_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jnp.dot(
+        g.astype(jnp.float32), x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def encode_matrix_pallas(
+    g: jnp.ndarray,
+    x2d: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(nr, k) @ (k, cols) -> (nr, cols) with explicit VMEM tiling.
+
+    Pads nr/cols up to tile multiples (k is kept whole — it is the small,
+    always-resident axis).
+    """
+    nr, k = g.shape
+    k2, cols = x2d.shape
+    assert k == k2, (g.shape, x2d.shape)
+    bm = min(block_m, _round_up(nr, 8))
+    bn = min(block_n, _round_up(cols, 128))
+    nr_p = _round_up(nr, bm)
+    cols_p = _round_up(cols, bn)
+    g_p = jnp.pad(g, ((0, nr_p - nr), (0, 0)))
+    x_p = jnp.pad(x2d, ((0, 0), (0, cols_p - cols)))
+
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=(nr_p // bm, cols_p // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr_p, cols_p), x2d.dtype),
+        interpret=interpret,
+    )(g_p, x_p)
+    return out[:nr, :cols]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m

@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the Lagrange-encode kernel.
+
+On CPU (this container) the Pallas kernel runs in ``interpret=True``; on TPU
+set ``interpret=False`` (the default flips on backend detection).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import encode_matrix_pallas
+from .ref import encode_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def encode_matrix(g: jnp.ndarray, x2d: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return encode_matrix_pallas(g, x2d, interpret=interpret)
+
+
+def encode(g: jnp.ndarray, x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Drop-in for ``repro.core.lagrange.encode``: (nr,k) x (k,*dims)."""
+    lead = x.shape[0]
+    out2d = encode_matrix(g, x.reshape(lead, -1), interpret=interpret)
+    return out2d.reshape((g.shape[0],) + x.shape[1:])
+
+
+__all__ = ["encode", "encode_matrix", "encode_ref"]

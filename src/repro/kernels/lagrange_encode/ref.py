@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Lagrange encode/decode GEMM."""
+
+import jax.numpy as jnp
+
+
+def encode_matrix_ref(g: jnp.ndarray, x2d: jnp.ndarray) -> jnp.ndarray:
+    """(nr, k) @ (k, cols) in float32 accumulation."""
+    return jnp.dot(g, x2d, preferred_element_type=jnp.float32).astype(x2d.dtype)
+
+
+def encode_ref(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(nr, k) x (k, *dims) -> (nr, *dims)."""
+    lead = x.shape[0]
+    out2d = encode_matrix_ref(g, x.reshape(lead, -1))
+    return out2d.reshape((g.shape[0],) + x.shape[1:])

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production mesh, extract memory/cost/collective numbers for EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the device
+count at first init.  (Tests/benches import other modules and see 1 device.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+  ... add --multi-pod for the (2,16,16) pod mesh.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPE_CELLS, get_config, list_configs
+from repro.models import api
+from repro.models.sharding import use_mesh
+from repro.launch import hlo_cost
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+# long_500k needs sub-quadratic attention; these archs have a mechanism
+# (SSM state / rolling SWA window); pure full-attention archs are N/A
+# (documented in DESIGN.md §6).
+LONG_CTX_ARCHS = {"zamba2_7b", "xlstm_125m", "mixtral_8x22b"}
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\s*\("
+)
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+for _k in list(_DTYPE_BYTES):
+    pass
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    base = _DTYPE_BYTES.get(dtype, 4 if not dtype.startswith("f8") else 1)
+    return n * base
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum operand bytes of every collective in the (per-device) optimized HLO."""
+    per_op: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # operands are inside the call parens; take shapes appearing after the
+        # op name (the result shape(s) precede the op name).
+        args = line[m.end():]
+        size = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(args))
+        if size == 0:  # e.g. `all-reduce(%param)` without inline shapes
+            head = line[: m.start()]
+            size = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+        per_op[op] = per_op.get(op, 0) + size
+        count[op] = count.get(op, 0) + 1
+    return {"per_op_bytes": per_op, "counts": count,
+            "total_bytes": int(sum(per_op.values()))}
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic useful FLOPs per step: 6ND train / 2ND forward (MoE: active)."""
+    n = cfg.active_params() if cfg.n_experts else cfg.n_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch      # decode: one token per sequence
+
+
+def runnable(arch: str, cell_name: str) -> tuple[bool, str]:
+    if cell_name == "long_500k" and arch not in LONG_CTX_ARCHS:
+        return False, "N/A: pure full-attention arch; no sub-quadratic mechanism (DESIGN §6)"
+    return True, ""
+
+
+def lower_cell(arch: str, cell_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Build + lower + compile one cell; returns the result record."""
+    cfg = get_config(arch, **(overrides or {}))
+    cell = SHAPE_CELLS[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec: dict = {
+        "arch": arch, "cell": cell_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "devices": int(n_dev),
+    }
+    t0 = time.time()
+    with mesh, use_mesh(mesh):
+        specs = api.input_specs(cfg, cell)
+        batch_sh = api.batch_shardings(cfg, mesh, specs)
+        if cell.kind == "train":
+            state_abs = api.abstract_state(cfg)
+            state_sh = api.state_shardings(cfg, mesh, state_abs)
+            step = api.make_train_step(cfg, grad_shardings=state_sh.params)
+            jitted = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_abs, specs)
+        elif cell.kind == "prefill":
+            params_abs = api.abstract_params(cfg)
+            params_sh = api.param_shardings(cfg, mesh, params_abs)
+            step = api.make_prefill_step(cfg, max_len=cell.seq_len)
+            # shard the produced KV cache (seq over tp) — it is the big output
+            _, cache_out_abs = jax.eval_shape(step, params_abs, specs)
+            cache_out_sh = api.cache_shardings(cfg, mesh, cache_out_abs)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(None, cache_out_sh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            params_abs = api.abstract_params(cfg)
+            params_sh = api.param_shardings(cfg, mesh, params_abs)
+            cache_abs = api.abstract_cache(cfg, cell.global_batch, cell.seq_len)
+            cache_sh = api.cache_shardings(cfg, mesh, cache_abs)
+            step = api.make_serve_step(cfg)
+            jitted = jax.jit(
+                step, in_shardings=(params_sh, cache_sh, batch_sh),
+                out_shardings=(None, cache_sh), donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_abs, cache_abs, specs)
+        rec["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- analyses --------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+        rec["memory"]["per_device_total"] = (
+            rec["memory"]["argument_bytes"] + rec["memory"]["output_bytes"]
+            + rec["memory"]["temp_bytes"] - rec["memory"]["alias_bytes"]
+        )
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    # Backend cost_analysis does NOT multiply while-loop bodies by their trip
+    # count on CPU (verified; see hlo_cost module docstring), so the roofline
+    # numbers come from our own HLO walker; the backend dict is kept as aux.
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost_backend"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))
+                               and ("flops" in k or "bytes" in k)}
+    except Exception as e:  # pragma: no cover
+        rec["cost_backend"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    walked = hlo_cost.analyze(hlo)
+    flops = walked.flops
+    bytes_acc = walked.hbm_bytes
+    rec["cost"] = {
+        "matmul_flops": walked.matmul_flops,
+        "other_flops": walked.other_flops,
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+    }
+    coll = {
+        "per_op_bytes": {k: int(v) for k, v in walked.per_collective.items()},
+        "total_bytes": int(walked.collective_bytes),
+    }
+    rec["collectives"] = coll
+
+    # ---- roofline terms (per-chip seconds; DESIGN §7 / task spec) ---------
+    cfg_cell = SHAPE_CELLS[cell_name]
+    mf = model_flops(get_config(arch), cfg_cell)
+    compute_t = flops / PEAK_FLOPS_BF16
+    memory_t = bytes_acc / HBM_BW
+    collective_t = coll["total_bytes"] / ICI_BW
+    dom = max(
+        ("compute", compute_t), ("memory", memory_t), ("collective", collective_t),
+        key=lambda kv: kv[1],
+    )[0]
+    rec["roofline"] = {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_acc,
+        "per_device_collective_bytes": coll["total_bytes"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "dominant": dom,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(flops * n_dev, 1.0),
+        "bound_s": max(compute_t, memory_t, collective_t),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (repeatable) — §Perf iterations")
+    ap.add_argument("--tag", default=None, help="suffix for the output json")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for a in list_configs():
+            for c in SHAPE_CELLS:
+                cells.append((a, c))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    pod_tag = "multipod" if args.multi_pod else "pod"
+    if args.tag:
+        pod_tag = f"{pod_tag}__{args.tag}"
+    failures = []
+    for arch, cell in cells:
+        out_path = os.path.join(args.out, f"{arch}__{cell}__{pod_tag}.json")
+        if args.skip_existing and os.path.exists(out_path):
+            print(f"[skip-existing] {arch} x {cell}")
+            continue
+        ok, why = runnable(arch, cell)
+        if not ok:
+            rec = {"arch": arch, "cell": cell, "skipped": why}
+            print(f"[SKIP] {arch} x {cell}: {why}")
+        else:
+            print(f"[dryrun] {arch} x {cell} ({pod_tag}) "
+                  f"{overrides if overrides else ''}...", flush=True)
+            try:
+                rec = lower_cell(arch, cell, args.multi_pod, overrides)
+                rec["overrides"] = overrides
+                r = rec["roofline"]
+                print(
+                    f"  ok: compile={rec['compile_s']}s "
+                    f"mem/dev={rec['memory'].get('per_device_total', 0)/2**30:.2f}GiB "
+                    f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                    f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+                    f"useful={r['useful_flops_ratio']:.2f}",
+                    flush=True,
+                )
+            except Exception as e:
+                rec = {"arch": arch, "cell": cell, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                failures.append((arch, cell, str(e)[:200]))
+                print(f"  FAIL: {e}", flush=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for a, c, e in failures:
+            print(f"  {a} x {c}: {e}")
+        raise SystemExit(1)
+    print("\nall cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Production target: TPU v5e, 16x16 = 256 chips per
+pod; the multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N first)"
+        )
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants for the roofline model (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,9 @@
+"""Model zoo: the 10 assigned architectures on a shared layer library."""
+
+from .api import (  # noqa: F401
+    Model,
+    get_model,
+    input_specs,
+    make_serve_step,
+    make_train_step,
+)

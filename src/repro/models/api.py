@@ -1,0 +1,360 @@
+"""Public model API: family dispatch, step builders, input specs, shardings.
+
+This is the layer the launcher/dry-run consume:
+
+  * :func:`get_model`       — family -> (init_params, train_loss, prefill, ...)
+  * :func:`make_train_step` — loss+grad+microbatch-accumulate+AdamW, jit-ready
+  * :func:`make_serve_step` / :func:`make_prefill_step`
+  * :func:`input_specs`     — ShapeDtypeStruct stand-ins per (arch x cell)
+  * :func:`state_shardings` / :func:`batch_shardings` / :func:`cache_shardings`
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.optim import TrainState, adamw_init, adamw_update, cosine_warmup
+from . import encdec, hybrid, lm, xlstm
+from .sharding import use_mesh, resolve
+
+
+class Model(NamedTuple):
+    init_params: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        mod = encdec
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "ssm" and cfg.d_ff == 0:
+        mod = xlstm
+    else:
+        mod = lm
+    return Model(mod.init_params, mod.train_loss, mod.prefill, mod.decode_step, mod.init_cache)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if cell.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {}
+        if cfg.frontend == "vision_stub":
+            text = s - cfg.frontend_tokens
+            specs["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+            specs["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_tokens, cfg.d_model), f)
+        elif cfg.frontend == "audio_stub":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.frontend_tokens, cfg.d_model), f)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"next_token": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def make_batch(cfg: ArchConfig, cell: ShapeCell, key) -> dict[str, jnp.ndarray]:
+    """Concrete random batch (smoke tests / examples)."""
+    specs = input_specs(cfg, cell)
+    out = {}
+    for name, sd in specs.items():
+        k = jax.random.fold_in(key, hash(name) % (2**31))
+        if sd.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sd.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sd.shape, jnp.float32).astype(sd.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, grad_transform: Callable | None = None,
+                    grad_shardings=None):
+    """(TrainState, batch) -> (TrainState, metrics) with microbatch grad accum.
+
+    ``grad_transform(grads) -> grads`` is the hook where runtime features
+    (gradient compression, coded-DP decode) plug in.  ``grad_shardings``
+    (pytree of NamedSharding matching params) pins the microbatch gradient
+    accumulator to the parameter layout so the partitioner emits per-micro
+    reduce-scatters instead of full-tensor all-reduces (§Perf A2).
+    """
+    model = get_model(cfg)
+    mb = max(1, cfg.microbatch)
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_shardings)
+
+    def train_step(state: TrainState, batch):
+        def loss_fn(params, sub):
+            return model.train_loss(params, sub, cfg)
+
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        elif cfg.accum_mode == "loss_scan":
+            # §Perf optimization: one jax.grad over the scanned-microbatch
+            # loss.  The per-micro forward is checkpointed (one micro's
+            # activations live at a time) and the parameter cotangent is
+            # accumulated by scan-backward in the PARAM dtype (bf16) with a
+            # single deferred cross-data reduce — vs. the baseline's f32
+            # accumulator + per-micro all-reduces.
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+            def total_loss(params):
+                def body(acc, sub):
+                    return acc + loss_fn(params, sub), None
+
+                body = jax.checkpoint(body)
+                total, _ = jax.lax.scan(body, jnp.zeros(()), split)
+                return total / mb
+
+            loss, grads = jax.value_and_grad(total_loss)(state.params)
+        else:
+            split = jax.tree.map(lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+            def acc_fn(carry, sub):
+                loss_acc, g_acc = carry
+                loss_i, g_i = jax.value_and_grad(loss_fn)(state.params, sub)
+                g_acc = _pin(jax.tree.map(
+                    lambda a, b_: a + b_.astype(acc_dt), g_acc, _pin(g_i)))
+                return (loss_acc + loss_i, g_acc), None
+
+            zero = (jnp.zeros(()),
+                    _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                      state.params)))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, split)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: (g / mb).astype(jnp.float32), grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        lr = cosine_warmup(state.step + 1, peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        new_state, om = adamw_update(state, grads, lr)
+        return new_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, max_len: int | None = None,
+                      attn_impl: str | None = None):
+    """attn_impl override: prefill at >=8k sequence defaults to ``blockwise``
+    (online-softmax in XLA) — dense S^2 scores do not fit HBM at 32k."""
+    if attn_impl is None and max_len is not None and max_len >= 8192:
+        attn_impl = "blockwise"
+    if attn_impl is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cfg, max_len=max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    model = get_model(cfg)
+
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(params, batch, cache, cfg)
+        return logits, cache
+
+    return serve_step
+
+
+def init_state(cfg: ArchConfig, key) -> TrainState:
+    params = get_model(cfg).init_params(key, cfg)
+    return adamw_init(params, jnp.dtype(cfg.opt_state_dtype))
+
+
+def abstract_state(cfg: ArchConfig) -> TrainState:
+    """TrainState of ShapeDtypeStructs — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_state(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(cfg, batch, max_len))
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: get_model(cfg).init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+_IN_NAMES = {"wq", "wk", "wv", "w_up", "w_gate", "in_proj", "w_if", "w_gates",
+             "w1", "embed_in", "patch_proj"}
+_OUT_NAMES = {"wo", "w_down", "out_proj", "w_o", "w2"}
+
+
+def _axis_size(mesh: Mesh, logical: str) -> int:
+    with use_mesh(mesh):
+        spec = resolve((logical,))[0]
+    if spec is None:
+        return 1
+    names = spec if isinstance(spec, tuple) else (spec,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def _param_spec(path: tuple[str, ...], shape: tuple[int, ...], tp: int, fsdp: int,
+                ep_mode: bool = False) -> P:
+    name = path[-1]
+    nd = len(shape)
+
+    def ok(dim, size):
+        return size > 1 and shape[dim] % size == 0
+
+    if (ep_mode and nd == 4 and name in ("w_gate", "w_up", "w_down")
+            and ok(1, tp)):
+        # expert parallelism: each tp shard owns E/tp experts outright
+        return P(None, "tp", None, None)
+
+    if name == "embed":                       # (V, d): vocab over tp, d over fsdp
+        return P("tp" if ok(0, tp) else None, "fsdp" if ok(1, fsdp) else None)
+    if name == "lm_head":                     # (d, V)
+        return P("fsdp" if ok(0, fsdp) else None, "tp" if ok(1, tp) else None)
+    if name == "router":                      # (L, d, E)
+        return P(None, "fsdp" if ok(1, fsdp) else None, None)
+    if name in ("conv_w", "conv_b"):          # depthwise conv: shard channels
+        ch = nd - 1
+        spec = [None] * nd
+        if ok(ch, tp):
+            spec[ch] = "tp"
+        return P(*spec)
+    if name in _IN_NAMES or name in _OUT_NAMES:
+        # trailing two dims are (in, out); leading dims (layer stack / experts)
+        # stay unsharded.
+        spec: list = [None] * nd
+        d_in, d_out = nd - 2, nd - 1
+        if name in _IN_NAMES:
+            if ok(d_in, fsdp):
+                spec[d_in] = "fsdp"
+            if ok(d_out, tp):
+                spec[d_out] = "tp"
+        else:
+            if ok(d_in, tp):
+                spec[d_in] = "tp"
+            if ok(d_out, fsdp):
+                spec[d_out] = "fsdp"
+        return P(*spec)
+    # norms, biases, gates, small vectors: replicate
+    return P()
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_tree) -> Any:
+    tp = _axis_size(mesh, "tp")
+    fsdp = _axis_size(mesh, "fsdp")
+    ep_mode = (cfg.n_experts > 0 and getattr(cfg, "moe_impl", "dense") == "ep"
+               and tp > 1 and cfg.n_experts % tp == 0)
+
+    def assign(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        with use_mesh(mesh):
+            spec = _param_spec(keys, leaf.shape, tp, fsdp, ep_mode)
+            return NamedSharding(mesh, resolve(tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, state: TrainState) -> TrainState:
+    ps = param_shardings(cfg, mesh, state.params)
+    return TrainState(
+        params=ps,
+        m=param_shardings(cfg, mesh, state.m),
+        v=param_shardings(cfg, mesh, state.v),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, specs: dict) -> dict:
+    dp = _axis_size(mesh, "dp")
+
+    def assign(leaf):
+        b = leaf.shape[0]
+        lead = "dp" if (dp > 1 and b % dp == 0) else None
+        with use_mesh(mesh):
+            return NamedSharding(mesh, resolve((lead,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(assign, specs)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_tree) -> Any:
+    """KV caches: batch over dp, sequence over tp (+dp when batch can't shard).
+
+    SSM/conv/xlstm states: batch over dp; largest model dim over tp when
+    divisible.  Exact layouts per DESIGN.md §5.
+    """
+    dp = _axis_size(mesh, "dp")
+    tp = _axis_size(mesh, "tp")
+
+    def assign(path, leaf):
+        keys = tuple(p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path)
+        name = keys[0] if keys else ""
+        shape = leaf.shape
+        with use_mesh(mesh):
+            if name == "pos" or not shape:
+                return NamedSharding(mesh, P())
+            if name in ("k", "v", "ck", "cv"):
+                # (L|napps, B, Hkv, S, Dh)
+                b, s_dim = shape[1], shape[3]
+                batch_ok = dp > 1 and b % dp == 0
+                seq = []
+                if not batch_ok and dp > 1 and s_dim % (dp * tp) == 0:
+                    seq_spec = ("dp", "tp")
+                elif tp > 1 and s_dim % tp == 0:
+                    seq_spec = "tp"
+                else:
+                    seq_spec = None
+                return NamedSharding(
+                    mesh,
+                    resolve((None, "dp" if batch_ok else None, None, seq_spec, None)),
+                )
+            if name == "ssm":                  # (L, B, nh, hd, ds)
+                b, nh = shape[1], shape[2]
+                return NamedSharding(mesh, resolve((
+                    None, "dp" if dp > 1 and b % dp == 0 else None,
+                    "tp" if tp > 1 and nh % tp == 0 else None, None, None)))
+            if name == "conv":                 # (L, B, K-1, C)
+                b, ch = shape[1], shape[3]
+                return NamedSharding(mesh, resolve((
+                    None, "dp" if dp > 1 and b % dp == 0 else None, None,
+                    "tp" if tp > 1 and ch % tp == 0 else None)))
+            # xlstm block states: (B, ...) — batch over dp, biggest tail dim over tp
+            spec: list = [None] * len(shape)
+            if dp > 1 and shape[0] % dp == 0:
+                spec[0] = "dp"
+            if len(shape) > 1:
+                tail = int(np.argmax(shape[1:])) + 1
+                if tp > 1 and shape[tail] % tp == 0:
+                    spec[tail] = "tp"
+            return NamedSharding(mesh, resolve(tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)

@@ -1,0 +1,268 @@
+"""Zamba2-style hybrid: Mamba2 backbone + SHARED attention block every
+``attn_every`` layers (weights shared across applications).
+
+Layer schedule is realized as explicit group scans (no data-dependent
+lax.cond): ``G = L // attn_every`` full groups of [shared-attn -> attn_every
+Mamba2 layers] plus a tail group of [shared-attn -> L % attn_every layers].
+Applications = G (+1 if tail) — 14 KV slots for the 81-layer config.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .lm import _logits
+from .sharding import shard
+
+Params = dict[str, Any]
+
+
+def group_split(cfg) -> tuple[int, int]:
+    """(full_groups, tail_layers)."""
+    return cfg.n_layers // cfg.attn_every, cfg.n_layers % cfg.attn_every
+
+
+def n_attn_apps(cfg) -> int:
+    g, t = group_split(cfg)
+    return g + (1 if t else 0)
+
+
+def _mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, ds, hd = L.mamba2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    Ln = cfg.n_layers
+    proj_out = 2 * d_in + 2 * ds + nh
+    conv_ch = d_in + 2 * ds
+    return {
+        "ln": jnp.ones((Ln, d), dtype),
+        "in_proj": (jax.random.normal(ks[0], (Ln, d, proj_out), jnp.float32) * 0.02).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (Ln, cfg.ssm_conv, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((Ln, conv_ch), dtype),
+        "dt_bias": jnp.zeros((Ln, nh), jnp.float32),
+        "a_log": jnp.zeros((Ln, nh), jnp.float32),
+        "d_skip": jnp.ones((Ln, nh), jnp.float32),
+        "norm": jnp.ones((Ln, d_in), dtype),
+        "out_proj": (
+            jax.random.normal(ks[2], (Ln, d_in, d), jnp.float32)
+            * 0.02 / math.sqrt(2 * Ln)
+        ).astype(dtype),
+    }
+
+
+def _shared_attn_params(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 8)
+
+    def w(k, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dtype)
+
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "wq": w(ks[0], d, hq * hd),
+        "wk": w(ks[1], d, hkv * hd),
+        "wv": w(ks[2], d, hkv * hd),
+        "wo": w(ks[3], hq * hd, d),
+        "w_gate": w(ks[4], d, f),
+        "w_up": w(ks[5], d, f),
+        "w_down": w(ks[6], f, d),
+    }
+
+
+def init_params(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": (jax.random.normal(k1, (v, d), jnp.float32) * 0.02).astype(dtype),
+        "mamba": _mamba_params(k2, cfg, dtype),
+        "shared": _shared_attn_params(k3, cfg, dtype),
+        "ln_f": jnp.ones((d,), dtype),
+        "lm_head": (jax.random.normal(k4, (d, v), jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def _split_groups(tree, cfg):
+    g, t = group_split(cfg)
+    main = jax.tree.map(
+        lambda a: a[: g * cfg.attn_every].reshape((g, cfg.attn_every) + a.shape[1:]), tree
+    )
+    tail = jax.tree.map(lambda a: a[g * cfg.attn_every:], tree) if t else None
+    return main, tail
+
+
+def _shared_block_train(x, sp, cfg, positions, *, return_kv=False):
+    out = L.attention_train(
+        L.rms_norm(x, sp["ln1"]), sp, cfg, positions=positions, return_kv=return_kv
+    )
+    att, kv = (out if return_kv else (out, None))
+    x = x + att
+    x = x + L.mlp(L.rms_norm(x, sp["ln2"]), sp, cfg)
+    return (x, kv) if return_kv else x
+
+
+def train_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "dp", None, None)
+    positions = jnp.arange(x.shape[1])
+    sp = params["shared"]
+
+    def mamba_body(carry, mp):
+        y = L.mamba2_scan(L.rms_norm(carry, mp["ln"]), mp, cfg)
+        return shard(carry + y, "dp", None, None), None
+
+    def group_body(carry, gp):
+        x2 = _shared_block_train(carry, sp, cfg, positions)
+        x2, _ = jax.lax.scan(mamba_body, x2, gp)
+        return x2, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    main, tail = _split_groups(params["mamba"], cfg)
+    x, _ = jax.lax.scan(group_body, x, main)
+    if tail is not None:
+        x = _shared_block_train(x, sp, cfg, positions)
+        x, _ = jax.lax.scan(mamba_body, x, tail)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x, cfg)
+    pred, tgt = logits[:, :-1], tokens[:, 1:]
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    true = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_in, nh, ds, hd_ssm = L.mamba2_dims(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    napps = n_attn_apps(cfg)
+    conv_ch = d_in + 2 * ds
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch_size, nh, hd_ssm, ds), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1, conv_ch), dtype),
+        "k": jnp.zeros((napps, batch_size, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((napps, batch_size, hkv, max_len, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _pad_kv(k, v, max_len, dtype):
+    pad = max_len - k.shape[2]
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(dtype)
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(dtype)
+    return k, v
+
+
+def prefill(params, batch, cfg, *, max_len: int | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "dp", None, None)
+    positions = jnp.arange(s)
+    sp = params["shared"]
+
+    def mamba_body(carry, mp):
+        y, st = L.mamba2_scan(L.rms_norm(carry, mp["ln"]), mp, cfg, return_state=True)
+        return shard(carry + y, "dp", None, None), st
+
+    def group_body(carry, gp):
+        x2, (k, v) = _shared_block_train(carry, sp, cfg, positions, return_kv=True)
+        k, v = _pad_kv(k, v, max_len, carry.dtype)
+        x2, states = jax.lax.scan(mamba_body, x2, gp)
+        return x2, ((k, v), states)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    main, tail = _split_groups(params["mamba"], cfg)
+    x, ((ks, vs), main_states) = jax.lax.scan(group_body, x, main)
+    ssm_list = [main_states[0].reshape((-1,) + main_states[0].shape[2:])]
+    conv_list = [main_states[1].reshape((-1,) + main_states[1].shape[2:])]
+    if tail is not None:
+        x, (k_t, v_t) = _shared_block_train(x, sp, cfg, positions, return_kv=True)
+        k_t, v_t = _pad_kv(k_t, v_t, max_len, x.dtype)
+        ks = jnp.concatenate([ks, k_t[None]], axis=0)
+        vs = jnp.concatenate([vs, v_t[None]], axis=0)
+        x, tail_states = jax.lax.scan(mamba_body, x, tail)
+        ssm_list.append(tail_states[0])
+        conv_list.append(tail_states[1])
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    cache = {
+        "ssm": jnp.concatenate(ssm_list, axis=0),
+        "conv": jnp.concatenate(conv_list, axis=0).astype(jnp.dtype(cfg.dtype)),
+        "k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32),
+    }
+    return logits, cache
+
+
+def _shared_block_decode(x, sp, cfg, ck, cv, pos):
+    att, ck, cv = L.attention_decode(L.rms_norm(x, sp["ln1"]), sp, cfg, ck, cv, pos)
+    x = x + att
+    x = x + L.mlp(L.rms_norm(x, sp["ln2"]), sp, cfg)
+    return x, ck, cv
+
+
+def decode_step(params, batch, cache, cfg):
+    tok = batch["next_token"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pos = cache["pos"]
+    sp = params["shared"]
+    g, t = group_split(cfg)
+    ae = cfg.attn_every
+
+    def mamba_body(carry, xs):
+        mp, h, conv_s = xs
+        y, h, conv_s = L.mamba2_decode(L.rms_norm(carry, mp["ln"]), mp, cfg, h, conv_s)
+        return carry + y, (h, conv_s)
+
+    main, tail = _split_groups(params["mamba"], cfg)
+    ssm_main = jax.tree.map(
+        lambda a: a[: g * ae].reshape((g, ae) + a.shape[1:]), cache["ssm"]
+    )
+    conv_main = jax.tree.map(
+        lambda a: a[: g * ae].reshape((g, ae) + a.shape[1:]), cache["conv"]
+    )
+
+    def group_body(carry, xs):
+        gp, ck, cv, ssm_g, conv_g = xs
+        x2, ck, cv = _shared_block_decode(carry, sp, cfg, ck, cv, pos)
+        x2, states = jax.lax.scan(mamba_body, x2, (gp, ssm_g, conv_g))
+        return x2, ((ck, cv), states)
+
+    x, ((ks, vs), main_states) = jax.lax.scan(
+        group_body, x, (main, cache["k"][:g], cache["v"][:g], ssm_main, conv_main)
+    )
+    ssm_out = [main_states[0].reshape((-1,) + main_states[0].shape[2:])]
+    conv_out = [main_states[1].reshape((-1,) + main_states[1].shape[2:])]
+    if tail is not None:
+        x, ck_t, cv_t = _shared_block_decode(
+            x, sp, cfg, cache["k"][g], cache["v"][g], pos
+        )
+        ks = jnp.concatenate([ks, ck_t[None]], axis=0)
+        vs = jnp.concatenate([vs, cv_t[None]], axis=0)
+        x, tail_states = jax.lax.scan(
+            mamba_body, x,
+            (tail, cache["ssm"][g * ae:], cache["conv"][g * ae:]),
+        )
+        ssm_out.append(tail_states[0])
+        conv_out.append(tail_states[1])
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x, cfg)[:, 0]
+    new_cache = {
+        "ssm": jnp.concatenate(ssm_out, axis=0),
+        "conv": jnp.concatenate(conv_out, axis=0),
+        "k": ks, "v": vs, "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,740 @@
+"""Shared layer library for all 10 assigned architectures.
+
+Everything is a pure function over explicit param pytrees (dicts of arrays),
+bf16 storage / f32 accumulation, and shardable under pjit via the logical
+constraints in :mod:`repro.models.sharding`.
+
+Attention implementations:
+  * ``ref``       — dense masked softmax (baseline; memory-roofline honest)
+  * ``blockwise`` — online-softmax lax.scan over KV blocks (pure XLA flash;
+                    the beyond-paper memory-term optimization, §Perf)
+  * ``flash``     — Pallas kernel (TPU runtime path; validated in interpret)
+
+Sequence mixers: GQA attention (qk-norm, sliding window), Mamba2/SSD
+(chunk-parallel scan + O(1) decode step), mLSTM (stabilized chunkwise form),
+sLSTM (time scan).  MoE: per-example capacity routing (sort-free, shardable).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+Params = dict[str, Any]
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def dot(x: jnp.ndarray, w: jnp.ndarray, *, native_out: bool = False) -> jnp.ndarray:
+    """Matmul with f32 accumulation, output in x.dtype.
+
+    ``native_out=True`` emits the dot with the output dtype directly (no f32
+    intermediate).  For row-parallel projections under TP this is what makes
+    the SPMD partitioner reduce partial sums in bf16 instead of f32 — the MXU
+    still accumulates the contraction in f32 internally (§Perf A4).
+    """
+    if native_out:
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=x.dtype
+        )
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                               # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + qk-norm + sliding window)
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jnp.ndarray, n: int, d: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def _qk_normalize(q, k, p, cfg):
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k = rms_norm(k, p["k_scale"])
+    return q, k
+
+
+def attention_train(
+    x: jnp.ndarray,            # (B, S, d)
+    p: Params,
+    cfg,
+    *,
+    positions: jnp.ndarray,    # (S,)
+    causal: bool = True,
+    kv_x: jnp.ndarray | None = None,   # cross-attention source (B, Sk, d)
+    return_kv: bool = False,
+):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = _split_heads(dot(x, p["wq"]), hq, hd)            # (B, S, Hq, Dh)
+    k = _split_heads(dot(src, p["wk"]), hkv, hd)
+    v = _split_heads(dot(src, p["wv"]), hkv, hd)
+    q, k = _qk_normalize(q, k, p, cfg)
+    if kv_x is None:                                     # self-attn: rotary
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions[:sk] if positions.shape[0] >= sk else positions, cfg.rope_theta)
+    # attention activation sharding: heads over tp when divisible, otherwise
+    # context-parallel (query-sequence over tp) — DESIGN §5.
+    if hq % 16 == 0:
+        q = shard(q.swapaxes(1, 2), "dp", "tp", None, None)
+    else:
+        q = shard(q.swapaxes(1, 2), "dp", None, "tp", None)
+    k = k.swapaxes(1, 2)                                 # (B, Hkv, Sk, Dh)
+    v = v.swapaxes(1, 2)
+
+    impl = getattr(cfg, "attn_impl", "ref")
+    if impl == "flash":
+        from repro.kernels.flash_attention import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal and kv_x is None, window=cfg.window)
+    elif impl == "blockwise":
+        o = _blockwise_attention(q, k, v, causal=causal and kv_x is None, window=cfg.window)
+    else:
+        o = _dense_attention(q, k, v, causal=causal and kv_x is None, window=cfg.window)
+    o = o.swapaxes(1, 2).reshape(b, s, hq * hd)
+    y = dot(o, p["wo"], native_out=getattr(cfg, "bf16_reduce", False))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _gqa_scores(q, k):
+    """(B,Hq,S,D) x (B,Hkv,Sk,D) -> f32 (B,Hq,S,Sk) without repeating KV.
+
+    bf16 x bf16 -> f32 via preferred_element_type (MXU-style accumulation);
+    no materialized f32 copies of Q/K.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    out = jnp.einsum("bkgsd,bktd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, s, k.shape[2])
+
+
+def _gqa_combine(w, v):
+    """f32 (B,Hq,S,Sk) x (B,Hkv,Sk,D) -> f32 (B,Hq,S,D).
+
+    Attention weights are cast to the value dtype for the PV matmul (the
+    standard flash-attention convention) to avoid f32 copies of V.
+    """
+    b, hq, s, sk = w.shape
+    hkv = v.shape[1]
+    g = hq // hkv
+    wg = w.reshape(b, hkv, g, s, sk).astype(v.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", wg, v, preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, s, v.shape[3])
+
+
+def _attn_mask(sq: int, sk: int, causal: bool, window: int | None) -> jnp.ndarray:
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    k_pos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def _dense_attention(q, k, v, *, causal: bool, window: int | None):
+    d = q.shape[-1]
+    s = _gqa_scores(q, k) * (d ** -0.5)                  # f32 (B,H,S,Sk)
+    mask = _attn_mask(q.shape[2], k.shape[2], causal, window)
+    s = jnp.where(mask[None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_combine(w, v).astype(q.dtype)
+
+
+def _blockwise_attention(q, k, v, *, causal: bool, window: int | None, block: int = 512):
+    """Online-softmax over KV blocks — O(S*block) memory, pure XLA."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    scale = d ** -0.5
+    nk = (sk + block - 1) // block
+    pad = nk * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, hkv, nk, block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block, d).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, ik = xs
+        s = _gqa_scores(q, kblk) * scale                 # f32 (B,H,S,block)
+        q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+        k_pos = ik * block + jnp.arange(block)[None, :]
+        mask = k_pos < sk
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask[None, None], s, _NEG)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = alpha * l_prev + p.sum(-1)
+        acc = acc * alpha[..., None] + _gqa_combine(p, vblk)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hq, sq), _NEG, jnp.float32),
+        jnp.zeros((b, hq, sq), jnp.float32),
+        jnp.zeros((b, hq, sq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nk)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def attention_decode(
+    x_t: jnp.ndarray,          # (B, 1, d)
+    p: Params,
+    cfg,
+    cache_k: jnp.ndarray,      # (B, Hkv, S, Dh)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,          # scalar int32 — number of tokens already cached
+    *,
+    cross: bool = False,       # cross-attn: read-only cache, no rope, attend [0, pos)
+):
+    b = x_t.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = _split_heads(dot(x_t, p["wq"]), hq, hd)          # (B,1,Hq,Dh)
+    g = hq // hkv
+    from .sharding import _current
+    sharded = (getattr(cfg, "decode_attn", "auto") == "sharded_lse" and not cross
+               and _current()[0] is not None)   # needs an active mesh
+    if not cross:
+        k_new = _split_heads(dot(x_t, p["wk"]), hkv, hd)
+        v_new = _split_heads(dot(x_t, p["wv"]), hkv, hd)
+        q, k_new = _qk_normalize(q, k_new, p, cfg)
+        q = rope(q, pos[None], cfg.rope_theta)
+        k_new = rope(k_new, pos[None], cfg.rope_theta)
+        k_new = k_new.swapaxes(1, 2).astype(cache_k.dtype)   # (B,Hkv,1,Dh)
+        v_new = v_new.swapaxes(1, 2).astype(cache_v.dtype)
+        if sharded:
+            qg = q[:, 0].reshape(b, hkv, g, hd)
+            o, cache_k, cache_v = _sharded_lse_decode(
+                qg, k_new, v_new, cache_k, cache_v, pos, cfg)
+            o = o.reshape(b, 1, hq * hd).astype(x_t.dtype)
+            return dot(o, p["wo"]), cache_k, cache_v
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, 0, pos, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, 0, pos, 0))
+        valid_len = pos + 1
+    else:
+        q, _ = _qk_normalize(q, q, p, cfg) if cfg.qk_norm else (q, None)
+        valid_len = pos
+
+    qg = q[:, 0].reshape(b, hkv, g, hd)
+    # bf16 reads of the cache with f32 accumulation — no f32 cache copies
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(cache_k.dtype), cache_k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    k_pos = jnp.arange(cache_k.shape[2])[None, None, None, :]
+    mask = k_pos < valid_len
+    if cfg.window is not None and not cross:
+        mask &= k_pos > valid_len - 1 - cfg.window
+    s = jnp.where(mask, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bkgs,bksd->bkgd", w, cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, hq * hd).astype(x_t.dtype)
+    y = dot(o, p["wo"])
+    return y, cache_k, cache_v
+
+
+def _sharded_lse_decode(qg, k_new, v_new, cache_k, cache_v, pos, cfg):
+    """Flash-decoding over a sequence-sharded KV cache (§Perf C).
+
+    shard_map over the mesh: each ``tp`` shard holds a contiguous seq slice of
+    the cache.  The owning shard performs a 1-token read-modify-write (never a
+    full-shard masked rewrite — the naive pjit lowering of a dynamic update on
+    a sharded dim), computes partial attention over its slice, and the shards
+    merge with a log-sum-exp correction (pmax/psum over ``tp``).
+
+    qg (B,Hkv,G,Dh) replicated over tp; caches (B,Hkv,S,Dh) P(dp,·,tp,·).
+    Falls back to the dense path when no mesh is active (CPU tests).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from .sharding import _current, resolve
+
+    mesh, _ = _current()
+    if mesh is None or "model" not in mesh.axis_names:
+        raise RuntimeError("decode_attn=sharded_lse requires an active mesh")
+    hd = qg.shape[-1]
+    scale = hd ** -0.5
+    window = cfg.window
+
+    def local(qg_l, kn_l, vn_l, ck_l, cv_l, pos_l):
+        tp_i = jax.lax.axis_index("model")
+        s_loc = ck_l.shape[2]
+        start = tp_i * s_loc
+        rel = pos_l - start
+        in_range = (rel >= 0) & (rel < s_loc)
+        relc = jnp.clip(rel, 0, s_loc - 1)
+        # 1-token read-modify-write on the local slice
+        old_k = jax.lax.dynamic_slice(ck_l, (0, 0, relc, 0), kn_l.shape)
+        old_v = jax.lax.dynamic_slice(cv_l, (0, 0, relc, 0), vn_l.shape)
+        ck_l = jax.lax.dynamic_update_slice(
+            ck_l, jnp.where(in_range, kn_l, old_k), (0, 0, relc, 0))
+        cv_l = jax.lax.dynamic_update_slice(
+            cv_l, jnp.where(in_range, vn_l, old_v), (0, 0, relc, 0))
+        # partial attention over the local slice
+        s = jnp.einsum("bkgd,bksd->bkgs", qg_l.astype(ck_l.dtype), ck_l,
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = start + jnp.arange(s_loc)[None, None, None, :]
+        mask = k_pos <= pos_l
+        if window is not None:
+            mask &= k_pos > pos_l - window
+        s = jnp.where(mask, s, _NEG)
+        m_loc = jnp.max(s, axis=-1)                          # (B,Hkv,G)
+        p_ = jnp.exp(s - m_loc[..., None])
+        p_ = jnp.where(mask, p_, 0.0)
+        l_loc = jnp.sum(p_, axis=-1)
+        o_loc = jnp.einsum("bkgs,bksd->bkgd", p_.astype(cv_l.dtype), cv_l,
+                           preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m_loc, "model")
+        corr = jnp.exp(m_loc - m_g)
+        l_g = jax.lax.psum(l_loc * corr, "model")
+        o = jax.lax.psum(o_loc * corr[..., None], "model")
+        o = o / jnp.maximum(l_g, 1e-30)[..., None]
+        return o, ck_l, cv_l
+
+    dp = resolve(("dp",))[0]
+    cache_spec = P(dp, None, "model", None)
+    rep4 = P(dp, None, None, None)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(rep4, rep4, rep4, cache_spec, cache_spec, P()),
+        out_specs=(rep4, cache_spec, cache_spec),
+        check_rep=False,
+    )
+    return fn(qg, k_new, v_new, cache_k, cache_v, pos)
+
+
+# ---------------------------------------------------------------------------
+# MLPs + MoE
+# ---------------------------------------------------------------------------
+
+def mlp(x: jnp.ndarray, p: Params, cfg) -> jnp.ndarray:
+    nat = getattr(cfg, "bf16_reduce", False)
+    if cfg.mlp_type == "swiglu":
+        return dot(silu(dot(x, p["w_gate"])) * dot(x, p["w_up"]), p["w_down"],
+                   native_out=nat)
+    if cfg.mlp_type == "squared_relu":
+        h = jax.nn.relu(dot(x, p["w_up"]))
+        return dot(h * h, p["w_down"], native_out=nat)
+    if cfg.mlp_type == "gelu":
+        return dot(jax.nn.gelu(dot(x, p["w_up"])), p["w_down"], native_out=nat)
+    raise ValueError(cfg.mlp_type)
+
+
+def moe(x: jnp.ndarray, p: Params, cfg) -> jnp.ndarray:
+    """Token-choice top-k MoE with per-example capacity (sort-free, GShard-style).
+
+    Routing/dispatch happen independently per example, so the batch axis
+    shards with zero routing communication; expert FFN weights shard over
+    ``fsdp``/``tp`` like dense MLPs.  Dropped tokens (capacity overflow) pass
+    through the residual unchanged, as in GShard/Switch.
+
+    ``cfg.moe_impl == "ep"`` (requires E % tp == 0 and an active mesh):
+    expert-parallel — each tp shard OWNS E/tp experts outright (no fsdp
+    weight gathers), routes its local experts' tokens, and the shards'
+    partial outputs psum-combine.  16x smaller dispatch buffers and zero
+    expert-weight collectives, at the cost of one (B,S,d) reduce (§Perf).
+    """
+    from .sharding import _current
+
+    mesh, _ = _current()
+    if (getattr(cfg, "moe_impl", "dense") == "ep" and mesh is not None
+            and "model" in mesh.axis_names
+            and cfg.n_experts % mesh.shape["model"] == 0):
+        return _moe_ep(x, p, cfg, mesh)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, math.ceil(s * k * cfg.capacity_factor / e))
+    logits = dot(x, p["router"]).astype(jnp.float32)       # (B,S,E)
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)   # (B,S,k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    def route_one(xb, gb, ib):
+        # xb (S,d), gb/ib (S,k)
+        flat_e = ib.reshape(-1)                            # (S*k,)
+        flat_g = gb.reshape(-1)
+        tok = jnp.repeat(jnp.arange(s), k)
+        oh = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)  # (S*k, E)
+        ranks = (jnp.cumsum(oh, axis=0) - oh)              # prior count per expert
+        rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0].astype(jnp.int32)
+        keep = rank < cap
+        buf = jnp.zeros((e, cap, d), xb.dtype)
+        buf = buf.at[flat_e, jnp.minimum(rank, cap - 1)].add(
+            jnp.where(keep[:, None], xb[tok], 0.0)
+        )
+        # expert FFN on (E, cap, d)
+        if cfg.mlp_type == "swiglu":
+            h = silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+                "ecd,edf->ecf", buf, p["w_up"]
+            )
+        else:
+            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])   # (E, cap, d)
+        gathered = out[flat_e, jnp.minimum(rank, cap - 1)] # (S*k, d)
+        contrib = gathered * (flat_g * keep)[:, None]
+        y = jnp.zeros((s, d), xb.dtype).at[tok].add(contrib)
+        return y
+
+    return jax.vmap(route_one)(x, gates, eidx)
+
+
+def _moe_ep(x: jnp.ndarray, p: Params, cfg, mesh) -> jnp.ndarray:
+    """Expert-parallel MoE over the tp axis (see :func:`moe`)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from .sharding import resolve
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ep = mesh.shape["model"]
+    e_loc = e // ep
+    cap = max(1, math.ceil(s * k * cfg.capacity_factor / e))
+
+    def local(x_l, router_l, wg_l, wu_l, wd_l):
+        shard_i = jax.lax.axis_index("model")
+        lo = shard_i * e_loc
+        logits = dot(x_l, router_l).astype(jnp.float32)         # (B,S,E)
+        gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+        gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+        def route_one(xb, gb, ib):
+            flat_e = ib.reshape(-1)
+            flat_g = gb.reshape(-1)
+            tok = jnp.repeat(jnp.arange(s), k)
+            mine = (flat_e >= lo) & (flat_e < lo + e_loc)
+            loc_e = jnp.clip(flat_e - lo, 0, e_loc - 1)
+            oh = jax.nn.one_hot(loc_e, e_loc, dtype=jnp.float32) * mine[:, None]
+            ranks = (jnp.cumsum(oh, axis=0) - oh)
+            rank = jnp.take_along_axis(ranks, loc_e[:, None], axis=1)[:, 0].astype(jnp.int32)
+            keep = mine & (rank < cap)
+            buf = jnp.zeros((e_loc, cap, d), xb.dtype)
+            buf = buf.at[loc_e, jnp.minimum(rank, cap - 1)].add(
+                jnp.where(keep[:, None], xb[tok], 0.0))
+            if cfg.mlp_type == "swiglu":
+                hdn = silu(jnp.einsum("ecd,edf->ecf", buf, wg_l)) * jnp.einsum(
+                    "ecd,edf->ecf", buf, wu_l)
+            else:
+                hdn = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, wu_l))
+            out = jnp.einsum("ecf,efd->ecd", hdn, wd_l)
+            gathered = out[loc_e, jnp.minimum(rank, cap - 1)]
+            contrib = gathered * (flat_g * keep)[:, None]
+            return jnp.zeros((s, d), xb.dtype).at[tok].add(contrib)
+
+        y = jax.vmap(route_one)(x_l, gates, eidx)
+        return jax.lax.psum(y, "model")        # combine shards' expert outputs
+
+    dp = resolve(("dp",))[0]
+    rep = P(dp, None, None)
+    espec = P("model", None, None)             # experts owned per shard
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, P(), espec, espec, espec),
+        out_specs=rep,
+        check_rep=False,
+    )
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d as K shifted FMAs.  x (B,S,C), w (K,C), b (C).
+
+    NOT lax.conv_general_dilated: XLA's autodiff of a feature-grouped conv
+    materializes a FULL (C x C) weight-gradient convolution (observed 1.7e16
+    bogus FLOPs on zamba2 train).  K is 4 — four shifted multiply-adds are
+    exact, cheap (O(K*S*C)), and differentiate cleanly.
+    """
+    k = w.shape[0]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j: j + s, :] * w[j]
+    return out + b
+
+
+def _ssd_project(x, p, cfg):
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    zxbcdt = dot(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def mamba2_scan(x: jnp.ndarray, p: Params, cfg, *, chunk: int = 128,
+                return_state: bool = False):
+    """Chunk-parallel SSD forward.  x (B,S,d) -> y (B,S,d).
+
+    Intra-chunk: masked quadratic form; inter-chunk: lax.scan over chunk
+    states (B, nh, hd, ds).  All decays <= 1, so no stabilizer is needed.
+    """
+    b, s, _ = x.shape
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    z, xbc, dt = _ssd_project(x, p, cfg)
+    xbc = silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + ds], axis=-1)   # (B,S,*)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (nh,)
+    la = dt * a                                                   # log-decay (B,S,nh) < 0
+
+    if s < chunk or s % chunk != 0:
+        chunk = s                                         # small/ragged: one chunk
+    nc = s // chunk
+    xh = xs.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, ds).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, ds).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    lac = la.reshape(b, nc, chunk, nh)
+
+    def body(h, xs_):
+        xq, bq, cq, dtq, laq = xs_                 # per-chunk (B,chunk,...)
+        cum = jnp.cumsum(laq, axis=1)              # (B,Q,nh) inclusive
+        # intra-chunk
+        cb = jnp.einsum("bqd,bsd->bqs", cq, bq)    # (B,Q,Q)
+        seg = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,S,nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        seg = jnp.where(tri[None, :, :, None], seg, 0.0)
+        w = cb[..., None] * seg * dtq[:, None, :, :]             # (B,Q,S,nh)
+        y = jnp.einsum("bqsh,bshp->bqhp", w, xq)
+        # inter-chunk contribution from carry state h (B,nh,hd,ds)
+        y += jnp.einsum("bqd,bhpd,bqh->bqhp", cq, h, jnp.exp(cum))
+        # state update
+        rev = jnp.exp(cum[:, -1:, :] - cum)                      # decay s+1..end
+        h = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bsh,bsd,bshp->bhpd", rev * dtq, bq, xq
+        )
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        body, h0,
+        (xh.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3),
+         cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+         lac.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.reshape(b, s, nh, hd)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * silu(z), p["norm"])
+    out = dot(y, p["out_proj"])
+    if return_state:
+        # conv state holds PRE-activation inputs (the raw xbc stream tail)
+        zxbcdt_raw = dot(x, p["in_proj"])
+        raw_xbc = zxbcdt_raw[..., d_in:2 * d_in + 2 * ds]
+        conv_state = raw_xbc[:, -(cfg.ssm_conv - 1):, :]
+        return out, (h_fin.astype(jnp.float32), conv_state)
+    return out
+
+
+def mamba2_decode(x_t: jnp.ndarray, p: Params, cfg, h: jnp.ndarray, conv_state: jnp.ndarray):
+    """One-token SSD step.  x_t (B,1,d); h (B,nh,hd,ds); conv_state (B,K-1,C)."""
+    b = x_t.shape[0]
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    z, xbc, dt = _ssd_project(x_t, p, cfg)                 # (B,1,*)
+    window = jnp.concatenate([conv_state, xbc], axis=1)    # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_t = silu(conv_out)[:, None, :].astype(x_t.dtype)
+    xs, bmat, cmat = jnp.split(xbc_t, [d_in, d_in + ds], axis=-1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * a)                               # (B,nh)
+    xh = xs[:, 0].reshape(b, nh, hd).astype(jnp.float32)
+    bv = bmat[:, 0].astype(jnp.float32)                    # (B,ds)
+    cv = cmat[:, 0].astype(jnp.float32)
+    h = decay[:, :, None, None] * h + jnp.einsum(
+        "bh,bd,bhp->bhpd", dtv, bv, xh
+    )
+    y = jnp.einsum("bd,bhpd->bhp", cv, h)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x_t.dtype)
+    y = rms_norm(y * silu(z), p["norm"])
+    out = dot(y, p["out_proj"])
+    new_conv_state = window[:, 1:, :]
+    return out, h, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM cells
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                  initial=None, return_state: bool = False):
+    """Stabilized chunkwise mLSTM.  q,k,v (B,S,H,D); i_pre,f_pre (B,S,H).
+
+    C_t = f_t C + i_t k v^T ; n_t = f_t n + i_t k ;
+    h_t = (q·C) / max(|q·n|, exp(-m)) with running stabilizer m.
+    """
+    b, s, h, d = q.shape
+    scale = d ** -0.5
+    nc = s // chunk
+    assert nc * chunk == s
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))   # log sigmoid
+    log_i = i_pre.astype(jnp.float32)
+
+    qc = (q.astype(jnp.float32) * scale).reshape(b, nc, chunk, h, d)
+    kc = k.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    vc = v.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    lfc = log_f.reshape(b, nc, chunk, h)
+    lic = log_i.reshape(b, nc, chunk, h)
+
+    if initial is None:
+        c0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf)
+    else:
+        c0, n0, m0 = initial
+
+    def body(carry, xs_):
+        cmat, nvec, m = carry
+        qq, kk, vv, lf, li = xs_                   # (B,Q,...)
+        cum = jnp.cumsum(lf, axis=1)               # inclusive (B,Q,H)
+        # candidate stabilizers
+        logd = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logd = jnp.where(tri[None, :, :, None], logd, -jnp.inf)
+        m_intra = jnp.max(logd, axis=2)            # (B,Q,H)
+        m_inter = cum + m[:, None, :]              # carry decayed to t
+        m_new = jnp.maximum(m_intra, m_inter)      # (B,Q,H)
+        m_new = jnp.maximum(m_new, -1e30)          # guard all -inf rows
+        w = jnp.exp(logd - m_new[:, :, None, :])   # (B,Q,S,H)
+        scores = jnp.einsum("bqhd,bshd->bqsh", qq, kk)
+        num = jnp.einsum("bqsh,bqsh,bshd->bqhd", scores, w, vv)
+        den = jnp.einsum("bqsh,bqsh->bqh", scores, w)
+        inter_scale = jnp.exp(m_inter - m_new)     # (B,Q,H)
+        num += jnp.einsum("bqhd,bhde,bqh->bqhe", qq, cmat, inter_scale)
+        den += jnp.einsum("bqhd,bhd,bqh->bqh", qq, nvec, inter_scale)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # chunk-end state
+        tot = cum[:, -1]                           # (B,H)
+        m_out = jnp.maximum(tot + m, jnp.max(cum[:, -1:, :] - cum + li, axis=1))
+        decay_in = jnp.exp(tot + m - m_out)        # (B,H)
+        wk = jnp.exp(cum[:, -1:, :] - cum + li - m_out[:, None, :])   # (B,Q,H)
+        cmat = decay_in[:, :, None, None] * cmat + jnp.einsum(
+            "bqh,bqhd,bqhe->bhde", wk, kk, vv
+        )
+        nvec = decay_in[:, :, None] * nvec + jnp.einsum("bqh,bqhd->bhd", wk, kk)
+        return (cmat, nvec, m_out), hout
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        body, (c0, n0, m0),
+        (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4), lfc.transpose(1, 0, 2, 3),
+         lic.transpose(1, 0, 2, 3)),
+    )
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    if return_state:
+        return out, (c_f, n_f, m_f)
+    return out
+
+
+def mlstm_decode(q, k, v, i_pre, f_pre, state):
+    """One-step mLSTM.  q,k,v (B,H,D); i_pre,f_pre (B,H)."""
+    c, n, m = state
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))
+    log_i = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    c = f_s[..., None, None] * c + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = f_s[..., None] * n + i_s[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    return num / den[..., None], (c, n, m_new)
+
+
+def slstm_scan(x_gates: jnp.ndarray, r: jnp.ndarray, *, initial=None,
+               return_state: bool = False):
+    """sLSTM over time.  x_gates (B,S,H,4,D) input preacts (z,i,f,o); r (H,4,D,D)
+    recurrent weights applied to h_{t-1}."""
+    b, s, h, _, d = x_gates.shape
+
+    if initial is None:
+        hid = jnp.zeros((b, h, d), jnp.float32)
+        c = jnp.zeros((b, h, d), jnp.float32)
+        n = jnp.zeros((b, h, d), jnp.float32)
+        m = jnp.zeros((b, h, d), jnp.float32)
+    else:
+        hid, c, n, m = initial
+
+    rf = r.astype(jnp.float32)
+
+    def step(carry, g_t):
+        hid, c, n, m = carry
+        rec = jnp.einsum("bhd,hgde->bhge", hid, rf)        # (B,H,4,D)
+        pre = g_t.astype(jnp.float32) + rec
+        z = jnp.tanh(pre[:, :, 0])
+        i_t = pre[:, :, 1]
+        f_t = pre[:, :, 2]
+        o = jax.nn.sigmoid(pre[:, :, 3])
+        log_f = -jax.nn.softplus(-f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c = f_s * c + i_s * z
+        n = f_s * n + i_s
+        hid = o * c / jnp.maximum(n, 1e-6)
+        return (hid, c, n, m_new), hid
+
+    (hid, c, n, m), hs = jax.lax.scan(step, (hid, c, n, m), x_gates.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1)                                # (B,S,H,D)
+    if return_state:
+        return out, (hid, c, n, m)
+    return out

@@ -1,0 +1,253 @@
+"""Decoder-only LM (dense / MoE / VLM / audio-backbone) with scan-over-layers.
+
+Covers qwen3, nemotron, yi, llama3.2, phi-3-vision (vision stub), mixtral,
+olmoe.  Whisper (enc-dec), zamba2 (hybrid) and xlstm live in their own
+modules but share this file's embedding/loss helpers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from . import layers as L
+from .sharding import shard
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_block_params(key, cfg, dtype, n_layers):
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 12)
+    L_ = n_layers
+
+    def w(k, *shape, scale=None):
+        scale = scale if scale is not None else 0.02
+        return (jax.random.normal(k, (L_, *shape), jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "ln1": jnp.ones((L_, d), dtype),
+        "ln2": jnp.ones((L_, d), dtype),
+        "wq": w(ks[0], d, hq * hd),
+        "wk": w(ks[1], d, hkv * hd),
+        "wv": w(ks[2], d, hkv * hd),
+        "wo": w(ks[3], hq * hd, d, scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((L_, hd), dtype)
+        p["k_scale"] = jnp.ones((L_, hd), dtype)
+    if cfg.n_experts:
+        e = cfg.n_experts
+        p["router"] = w(ks[4], d, e)
+        p["w_gate"] = w(ks[5], e, d, f)
+        p["w_up"] = w(ks[6], e, d, f)
+        p["w_down"] = w(ks[7], e, f, d, scale=0.02 / math.sqrt(2 * cfg.n_layers))
+    elif cfg.mlp_type == "swiglu":
+        p["w_gate"] = w(ks[5], d, f)
+        p["w_up"] = w(ks[6], d, f)
+        p["w_down"] = w(ks[7], f, d, scale=0.02 / math.sqrt(2 * cfg.n_layers))
+    else:
+        p["w_up"] = w(ks[6], d, f)
+        p["w_down"] = w(ks[7], f, d, scale=0.02 / math.sqrt(2 * cfg.n_layers))
+    return p
+
+
+def init_params(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    k_embed, k_blocks, k_head, k_front = jax.random.split(key, 4)
+    params: Params = {
+        "embed": (jax.random.normal(k_embed, (v, d), jnp.float32) * 0.02).astype(dtype),
+        "blocks": _dense_block_params(k_blocks, cfg, dtype, cfg.n_layers),
+        "ln_f": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (d, v), jnp.float32) * 0.02).astype(dtype)
+    if cfg.frontend == "vision_stub":
+        # projection for precomputed patch embeddings (stub frontend)
+        params["patch_proj"] = (
+            jax.random.normal(k_front, (d, d), jnp.float32) * 0.02
+        ).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(x, bp, cfg, positions):
+    h = L.attention_train(L.rms_norm(x, bp["ln1"]), bp, cfg, positions=positions)
+    if cfg.remat_policy == "save_rowparallel":
+        h = _checkpoint_name(h, "rowparallel_out")
+    x = x + h
+    z = L.rms_norm(x, bp["ln2"])
+    m = L.moe(z, bp, cfg) if cfg.n_experts else L.mlp(z, bp, cfg)
+    if cfg.remat_policy == "save_rowparallel":
+        m = _checkpoint_name(m, "rowparallel_out")
+    x = x + m
+    # Megatron-SP option: inter-block activations sharded over sequence on the
+    # tp axis, turning the TP output all-reduces into reduce-scatters (§Perf).
+    return shard(x, "dp", "tp" if cfg.act_seq_shard else None, None)
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "save_rowparallel":
+        # backward never replays the TP partial-sum all-reduces (§Perf A5)
+        return jax.checkpoint_policies.save_only_these_names("rowparallel_out")
+    return None
+
+
+def _run_blocks(x, params, cfg, positions):
+    body = _block
+    if cfg.remat:
+        body = jax.checkpoint(_block, static_argnums=(2,), policy=_remat_policy(cfg))
+
+    def scan_fn(carry, bp):
+        return body(carry, bp, cfg, positions), None
+
+    g = max(1, cfg.scan_groups)
+    blocks = params["blocks"]
+    if g > 1 and cfg.n_layers % g == 0:
+        # two-level remat scan: outer saves G carries, each group's backward
+        # recomputes its K=L/G layers — O(G + K) residuals instead of O(L).
+        k = cfg.n_layers // g
+        grouped = jax.tree.map(lambda a: a.reshape((g, k) + a.shape[1:]), blocks)
+
+        def group_fn(carry, gp):
+            out, _ = jax.lax.scan(scan_fn, carry, gp)
+            return out, None
+
+        if cfg.remat:
+            group_fn = jax.checkpoint(group_fn, policy=_remat_policy(cfg))
+        x, _ = jax.lax.scan(group_fn, x, grouped)
+        return x
+    x, _ = jax.lax.scan(scan_fn, x, blocks)
+    return x
+
+
+def _embed_sequence(params, batch, cfg):
+    """Tokens (+ optional stub-frontend embeddings) -> (B, S_total, d), plus
+    the number of prefix (non-text) positions."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    prefix = 0
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"].astype(x.dtype)        # (B, P, d) precomputed
+        patches = L.dot(patches, params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix = patches.shape[1]
+    return shard(x, "dp", None, None), prefix
+
+
+def _logits(params, x, cfg):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jax.lax.dot_general(
+        x, head, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    if cfg.padded_vocab != cfg.vocab_size:                # mask padded vocab
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return shard(logits, "dp", None, "tp")
+
+
+def train_loss(params, batch, cfg):
+    """Mean next-token cross-entropy over text positions."""
+    x, prefix = _embed_sequence(params, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x = _run_blocks(x, params, cfg, positions)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x, cfg)                      # (B, S_total, V) f32
+    tokens = batch["tokens"]
+    text_logits = logits[:, prefix:, :]
+    pred = text_logits[:, :-1]
+    tgt = tokens[:, 1:]
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    true = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch_size, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch_size, hkv, max_len, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg, *, max_len: int | None = None):
+    """Forward the prompt, return (last-position logits, KV cache)."""
+    x, prefix = _embed_sequence(params, batch, cfg)
+    s_total = x.shape[1]
+    max_len = max_len or s_total
+    positions = jnp.arange(s_total)
+
+    def body(carry, bp):
+        att, (k, v) = L.attention_train(
+            L.rms_norm(carry, bp["ln1"]), bp, cfg, positions=positions, return_kv=True
+        )
+        x2 = carry + att
+        z = L.rms_norm(x2, bp["ln2"])
+        x2 = x2 + (L.moe(z, bp, cfg) if cfg.n_experts else L.mlp(z, bp, cfg))
+        pad = max_len - k.shape[2]
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return shard(x2, "dp", None, None), (k.astype(carry.dtype), v.astype(carry.dtype))
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s_total, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg):
+    """One-token decode.  batch = {"next_token": (B,)}; cache from init/prefill.
+
+    The stacked KV cache rides the layer scan as a CARRY with in-place slice
+    updates (aliases the donated buffer) — the scan-ys alternative rebuilds
+    the whole cache every token (§Perf C2).
+    """
+    tok = batch["next_token"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pos = cache["pos"]
+
+    def body(carry, xs):
+        x_c, ks, vs = carry
+        bp, idx = xs
+        ck = jax.lax.dynamic_index_in_dim(ks, idx, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vs, idx, 0, keepdims=False)
+        att, ck, cv = L.attention_decode(L.rms_norm(x_c, bp["ln1"]), bp, cfg, ck, cv, pos)
+        ks = jax.lax.dynamic_update_index_in_dim(ks, ck, idx, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, cv, idx, 0)
+        x2 = x_c + att
+        z = L.rms_norm(x2, bp["ln2"])
+        x2 = x2 + (L.moe(z, bp, cfg) if cfg.n_experts else L.mlp(z, bp, cfg))
+        return (x2, ks, vs), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.n_layers)),
+    )
+    x = L.rms_norm(x, params["ln_f"])
+    logits = _logits(params, x, cfg)[:, 0]                # (B, V)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}

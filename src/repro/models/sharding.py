@@ -1,0 +1,93 @@
+"""Sharding utilities: mesh context + activation constraints + param rules.
+
+The model code calls :func:`shard` at strategic activation points with logical
+axis names; outside a mesh context (CPU smoke tests) it is a no-op, inside the
+dry-run/trainer it pins the SPMD partitioner to the intended layout.
+
+Logical names:  ``dp`` — batch axis (maps to ("pod","data") or ("data",)),
+``tp`` — tensor axis ("model"), ``fsdp`` — parameter shard axis ("data").
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> tuple[Mesh | None, dict[str, Any]]:
+    return getattr(_state, "mesh", None), getattr(_state, "axes", {})
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    """Activate a mesh for activation-sharding constraints.
+
+    Logical-axis resolution: ``dp`` -> ("pod","data") when a 'pod' axis exists
+    else "data"; ``tp`` -> "model"; ``fsdp`` -> "data".
+    """
+    prev = getattr(_state, "mesh", None), getattr(_state, "axes", {})
+    if mesh is None:
+        _state.mesh, _state.axes = None, {}
+    else:
+        names = mesh.axis_names
+        axes = {
+            "dp": ("pod", "data") if "pod" in names else "data",
+            "fsdp": "data",
+            "tp": "model",
+        }
+        _state.mesh, _state.axes = mesh, axes
+    try:
+        yield
+    finally:
+        _state.mesh, _state.axes = prev
+
+
+def resolve(spec: tuple) -> P:
+    """Map logical names in a spec tuple to mesh axis names."""
+    _, axes = _current()
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, str):
+            out.append(axes.get(s, s))
+        else:  # tuple of logical names
+            flat = []
+            for t in s:
+                r = axes.get(t, t)
+                flat.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(flat))
+    return P(*out)
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint with logical axis names; no-op without mesh."""
+    mesh, _ = _current()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, resolve(spec)))
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    with use_mesh(mesh):
+        return NamedSharding(mesh, resolve(spec))
+
+
+def divisible(dim: int, mesh: Mesh | None, axis: str) -> bool:
+    """Can `dim` shard over mesh axis `axis`?  (axis may be a logical name)."""
+    if mesh is None:
+        return False
+    with use_mesh(mesh):
+        p = resolve((axis,))[0]
+    if p is None:
+        return False
+    names = p if isinstance(p, tuple) else (p,)
+    size = int(np.prod([mesh.shape[n] for n in names]))
+    return dim % size == 0

@@ -1,0 +1,232 @@
+"""xLSTM-125m: interleaved mLSTM (matrix-memory, chunk-parallel) and sLSTM
+(scalar-memory, time-scan) blocks.  12 layers — unrolled Python loop (no scan;
+the per-block param shapes differ between the two cell types)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .lm import _logits
+from .sharding import shard
+
+Params = dict[str, Any]
+
+
+def block_types(cfg) -> list[str]:
+    return ["slstm" if i in cfg.slstm_at else "mlstm" for i in range(cfg.n_layers)]
+
+
+def _mlstm_block_params(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = 2 * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+
+    def w(k, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dtype)
+
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_up": w(ks[0], d, 2 * d_in),
+        "conv_w": (jax.random.normal(ks[1], (4, d_in), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": w(ks[2], d_in, d_in),
+        "wk": w(ks[3], d_in, d_in),
+        "wv": w(ks[4], d_in, d_in),
+        "w_if": w(ks[5], d_in, 2 * h),
+        "b_if": jnp.zeros((2 * h,), jnp.float32),
+        "gn": jnp.ones((d_in,), dtype),
+        "w_down": w(ks[6], d_in, d),
+    }
+
+
+def _slstm_block_params(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f = ((4 * d // 3) + 63) // 64 * 64
+    ks = jax.random.split(key, 6)
+
+    def w(k, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dtype)
+
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gates": w(ks[0], d, 4 * d),       # (z,i,f,o) x (H*Dh)
+        "r": (jax.random.normal(ks[1], (h, 4, dh, dh), jnp.float32) * 0.02).astype(dtype),
+        "gn": jnp.ones((d,), dtype),
+        "w_o": w(ks[2], d, d),
+        "ln2": jnp.ones((d,), dtype),
+        "w1": w(ks[3], d, 2 * f),
+        "w2": w(ks[4], f, d),
+    }
+
+
+def init_params(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = []
+    for i, kind in enumerate(block_types(cfg)):
+        mk = _slstm_block_params if kind == "slstm" else _mlstm_block_params
+        blocks.append(mk(keys[i], cfg, dtype))
+    return {
+        "embed": (jax.random.normal(keys[-3], (v, d), jnp.float32) * 0.02).astype(dtype),
+        "blocks": tuple(blocks),
+        "ln_f": jnp.ones((d,), dtype),
+        "lm_head": (jax.random.normal(keys[-2], (d, v), jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks (train/prefill form)
+# ---------------------------------------------------------------------------
+
+def _mlstm_block(x, p, cfg, *, state=None, return_state=False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    d_in = 2 * d
+    dh = d_in // h
+    z = L.rms_norm(x, p["ln"])
+    up = L.dot(z, p["w_up"])
+    x_in, gate = jnp.split(up, 2, axis=-1)
+
+    if state is None:
+        conv_in = x_in
+        conv_state_out = x_in[:, -3:, :]
+    else:
+        (cell, conv_state) = state
+        conv_in = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+        conv_state_out = conv_in[:, -3:, :]
+    x_c = L.silu(_conv_slice(conv_in, p, s))
+
+    q = L.dot(x_c, p["wq"]).reshape(b, s, h, dh)
+    k = L.dot(x_c, p["wk"]).reshape(b, s, h, dh)
+    v = L.dot(x_in, p["wv"]).reshape(b, s, h, dh)
+    if_pre = L.dot(x_in, p["w_if"]).astype(jnp.float32) + p["b_if"]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)          # (B,S,H)
+
+    chunk = min(128, s) if s % 128 != 0 else 128
+    if s % chunk != 0:
+        chunk = s  # small smoke shapes: single chunk
+    cell_in = None if state is None else state[0]
+    out = L.mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk,
+                          initial=cell_in, return_state=return_state)
+    if return_state:
+        out, cell_state = out
+    hid = out.reshape(b, s, d_in).astype(x.dtype)
+    hid = L.rms_norm(hid, p["gn"])
+    y = L.dot(hid * L.silu(gate), p["w_down"])
+    if return_state:
+        return x + y, (cell_state, conv_state_out)
+    return x + y
+
+
+def _conv_slice(conv_in, p, s):
+    """Causal depthwise conv4 returning only the last s positions."""
+    out = L._causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    return out[:, -s:, :]
+
+
+def _slstm_block(x, p, cfg, *, state=None, return_state=False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    z = L.rms_norm(x, p["ln"])
+    gates = L.dot(z, p["w_gates"]).reshape(b, s, 4, h, dh).swapaxes(2, 3)  # (B,S,H,4,D)
+    out = L.slstm_scan(gates, p["r"], initial=state, return_state=return_state)
+    if return_state:
+        out, new_state = out
+    hid = out.reshape(b, s, d).astype(x.dtype)
+    hid = L.rms_norm(hid, p["gn"])
+    y = x + L.dot(hid, p["w_o"])
+    # post GLU MLP (proj factor 4/3)
+    u = L.dot(L.rms_norm(y, p["ln2"]), p["w1"])
+    a, g = jnp.split(u, 2, axis=-1)
+    y = y + L.dot(a * L.silu(g), p["w2"])
+    if return_state:
+        return y, new_state
+    return y
+
+
+def _forward(params, tokens, cfg, caches=None, return_states=False):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "dp", None, None)
+    states = []
+    kinds = block_types(cfg)
+    for i, p in enumerate(params["blocks"]):
+        blk = _slstm_block if kinds[i] == "slstm" else _mlstm_block
+        st = None if caches is None else caches[i]
+
+        def run(x_, p_, st_, blk=blk):
+            return blk(x_, p_, cfg, state=st_, return_state=return_states)
+
+        fn = jax.checkpoint(run) if cfg.remat else run
+        if return_states:
+            x, s_out = fn(x, p, st)
+            states.append(s_out)
+        else:
+            x = fn(x, p, st)
+    x = L.rms_norm(x, params["ln_f"])
+    return (x, states) if return_states else x
+
+
+def train_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = _forward(params, tokens, cfg)
+    logits = _logits(params, x, cfg)
+    pred, tgt = logits[:, :-1], tokens[:, 1:]
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    true = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None) -> Params:
+    """xLSTM state is O(1) in sequence length (the 500k-context win)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.n_heads
+    caches = []
+    for kind in block_types(cfg):
+        if kind == "mlstm":
+            d_in = 2 * d
+            dh = d_in // h
+            cell = (
+                jnp.zeros((batch_size, h, dh, dh), jnp.float32),
+                jnp.zeros((batch_size, h, dh), jnp.float32),
+                jnp.full((batch_size, h), -jnp.inf),
+            )
+            conv = jnp.zeros((batch_size, 3, d_in), dtype)
+            caches.append((cell, conv))
+        else:
+            dh = d // h
+            caches.append(tuple(jnp.zeros((batch_size, h, dh), jnp.float32) for _ in range(4)))
+    return {"blocks": tuple(caches), "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg, *, max_len: int | None = None):
+    tokens = batch["tokens"]
+    x, states = _forward(params, tokens, cfg,
+                         caches=init_cache(cfg, tokens.shape[0], 0)["blocks"],
+                         return_states=True)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    cache = {"blocks": tuple(states), "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg):
+    tok = batch["next_token"]
+    x, states = _forward(params, tok[:, None], cfg, caches=cache["blocks"],
+                         return_states=True)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, {"blocks": tuple(states), "pos": cache["pos"] + 1}

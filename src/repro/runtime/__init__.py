@@ -1,0 +1,2 @@
+from .fault_tolerance import CodedDPConfig, CodedDataParallelExecutor  # noqa: F401
+from .compression import make_compressor  # noqa: F401

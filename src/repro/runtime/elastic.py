@@ -1,0 +1,48 @@
+"""Elastic scaling: reshard state across mesh-size changes (DESIGN §7).
+
+The checkpoint format is mesh-agnostic (full host arrays), so growing or
+shrinking the cluster = restore with the new mesh's shardings.  LEA estimator
+counts follow the worker pool: survivors keep their history, newcomers start
+from the pooled average (a better prior than the 0.5 cold start).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import lea
+
+
+def reshard_state(state, shardings):
+    """device_put every leaf onto the new mesh's shardings."""
+    flat_s, treedef = jax.tree.flatten(state)
+    flat_sh = jax.tree.leaves(shardings)
+    out = [jax.device_put(np.asarray(x), sh) for x, sh in zip(flat_s, flat_sh)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def remap_estimator(est: lea.EstimatorState, old_n: int, new_n: int,
+                    survivors: list[int] | None = None) -> lea.EstimatorState:
+    """Carry LEA counts across an elastic resize."""
+    import jax.numpy as jnp
+
+    counts = np.asarray(est.counts)
+    prev = np.asarray(est.prev_state)
+    if survivors is None:
+        survivors = list(range(min(old_n, new_n)))
+    new_counts = np.zeros((new_n, 4), np.float32)
+    new_prev = np.zeros((new_n,), np.int32)
+    pooled = counts[survivors].mean(axis=0) if survivors else np.zeros(4, np.float32)
+    for i in range(new_n):
+        if i < len(survivors):
+            new_counts[i] = counts[survivors[i]]
+            new_prev[i] = prev[survivors[i]]
+        else:
+            new_counts[i] = pooled       # newcomer: pooled prior
+            new_prev[i] = 1
+    return lea.EstimatorState(
+        counts=jnp.asarray(new_counts),
+        prev_state=jnp.asarray(new_prev),
+        seen_prev=est.seen_prev,
+    )

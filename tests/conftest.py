@@ -1,0 +1,11 @@
+"""Shared test config.  NOTE: XLA_FLAGS/device-count overrides are deliberately
+NOT set here — smoke tests and benches must see the single real CPU device.
+Multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+
+import os
+import sys
+
+# Make `src` importable when pytest is run without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

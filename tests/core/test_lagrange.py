@@ -1,0 +1,145 @@
+"""Unit + property tests for the Lagrange coding scheme (paper Sec. 3.1/4.1)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lagrange as lcc
+
+
+def test_kstar_formulas():
+    # Paper Sec. 6.1: n=15, r=10, k=50, deg f = 2 -> K* = 99 (Lagrange branch)
+    assert lcc.recovery_threshold(15, 10, 50, 2) == 99
+    # Paper Sec. 6.2 (EC2): k in {120,100,50}, deg f = 1 -> K* = 50 for k=50
+    assert lcc.recovery_threshold(15, 10, 50, 1) == 50
+    # Sec. 3.1 worked examples: n=3, r=2, k=2, deg=2 -> nr=6 >= 3, K* = 3
+    assert lcc.recovery_threshold(3, 2, 2, 2) == 3
+    # Repetition example: n=3, r=2, k=4, deg=2 -> nr=6 < 7, K* = 6 - 1 + 1 = 6
+    spec = lcc.CodeSpec(3, 2, 4, 2)
+    assert spec.mode == "repetition"
+    assert spec.recovery_threshold == 6
+
+
+def test_generator_systematic_structure_repetition():
+    spec = lcc.CodeSpec(3, 2, 4, 2)
+    g = np.asarray(lcc.generator_matrix(spec))
+    # every row is a unit vector; chunk v holds X_{v mod k}
+    assert np.allclose(g.sum(axis=1), 1.0)
+    for v in range(spec.nr):
+        assert g[v, v % spec.k] == 1.0
+
+
+def test_encode_decode_roundtrip_float_deg1():
+    spec = lcc.CodeSpec(n=5, r=2, k=4, deg_f=1)
+    assert spec.mode == "lagrange"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(spec.k, 8, 6)), jnp.float32)
+    g = lcc.generator_matrix(spec)
+    xt = lcc.encode(g, x)
+    # f = identity (deg 1): receive an arbitrary K*-subset
+    received = np.array([1, 3, 6, 9])
+    d = lcc.decode_matrix(spec, received)
+    out = lcc.decode(d, xt[jnp.asarray(received)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_deg2_quadratic_function():
+    # f(X) = X * X (elementwise square) has total degree 2
+    spec = lcc.CodeSpec(n=6, r=2, k=4, deg_f=2)
+    assert spec.recovery_threshold == 7
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(spec.k, 5)), jnp.float64)
+    g = lcc.generator_matrix(spec, jnp.float64)
+    xt = lcc.encode(g, x)
+    fx_tilde = xt * xt
+    received = np.array([0, 2, 3, 5, 7, 8, 11])
+    d = lcc.decode_matrix(spec, received, jnp.float64)
+    out = lcc.decode(d, fx_tilde[jnp.asarray(received)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x * x), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 8),
+    r=st.integers(1, 3),
+    k=st.integers(2, 6),
+    deg_f=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mds_property_exact_modp(n, r, k, deg_f, seed):
+    """ANY K*-subset decodes exactly over GF(p) — the MDS property (Defn 4.1).
+
+    Uses f(X) = X^deg elementwise, whose total degree is deg_f, over the exact
+    mod-p path, so the check is bit-exact for arbitrary parameters.
+    """
+    spec = lcc.CodeSpec(n, r, k, deg_f)
+    kstar = spec.recovery_threshold
+    if kstar > spec.nr:
+        return  # infeasible code; nothing to assert
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, lcc.FIELD_P, size=(k, 3), dtype=np.int64)
+    g = lcc.generator_matrix_modp(spec)
+    xt = lcc.matmul_modp(g, x)
+    # worker-side evaluation: elementwise x^deg mod p
+    fx = xt.copy()
+    for _ in range(deg_f - 1):
+        fx = (fx * xt) % lcc.FIELD_P
+    want = x.copy()
+    for _ in range(deg_f - 1):
+        want = (want * x) % lcc.FIELD_P
+
+    received = rng.choice(spec.nr, size=kstar, replace=False)
+    received.sort()
+    if spec.mode == "repetition":
+        d = lcc.decode_matrix_modp(spec, received)
+        got = lcc.matmul_modp(d, fx[received])
+    else:
+        d = lcc.decode_matrix_modp(spec, received)
+        got = lcc.matmul_modp(d, fx[received])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    r=st.integers(1, 4),
+    k=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_repetition_any_kstar_subset_covers_all_chunks(n, r, k, seed):
+    """K* = nr - floor(nr/k) + 1 guarantees every chunk has an on-time copy."""
+    spec = lcc.CodeSpec(n, r, k, deg_f=10_000)  # force repetition branch
+    if spec.mode != "repetition" or spec.recovery_threshold > spec.nr:
+        return
+    rng = np.random.default_rng(seed)
+    received = rng.choice(spec.nr, size=spec.recovery_threshold, replace=False)
+    src = received % k
+    assert set(src.tolist()) == set(range(k))
+    # and the decode matrix therefore exists
+    d = np.asarray(lcc.decode_matrix(spec, np.sort(received)))
+    assert d.shape == (k, spec.recovery_threshold)
+    np.testing.assert_allclose(d.sum(axis=1), 1.0)
+
+
+def test_decode_matrix_validates_input():
+    spec = lcc.CodeSpec(5, 2, 4, 1)
+    with pytest.raises(ValueError):
+        lcc.decode_matrix(spec, [0, 1])  # wrong count
+    with pytest.raises(ValueError):
+        lcc.decode_matrix(spec, [0, 0, 1, 2])  # duplicates
+
+
+def test_conditioning_paper_scale_deg1():
+    """Float decode at the paper's EC2 scale (k=50, deg 1, K*=50) stays accurate
+    for a contiguous received set in float64."""
+    spec = lcc.CodeSpec(15, 10, 50, 1)
+    assert spec.recovery_threshold == 50
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(spec.k, 4)), jnp.float64)
+    g = lcc.generator_matrix(spec, jnp.float64)
+    xt = lcc.encode(g, x)
+    received = np.arange(0, 150, 3)  # every 3rd chunk — spread subset
+    d = lcc.decode_matrix(spec, received, jnp.float64)
+    out = lcc.decode(d, xt[jnp.asarray(received)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,164 @@
+"""Tests for the EA allocator: eq. (7)/(8), Lemma 4.4/4.5, estimator."""
+
+import itertools
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lea
+from repro.core.lea import EstimatorState, LoadParams
+
+
+def _paper_sim_lp() -> LoadParams:
+    # Sec. 6.1: n=15, r=10, k=50, deg=2, d=1, mu=(10,3) -> K*=99, lg=10, lb=3
+    return LoadParams(n=15, kstar=99, ell_g=10, ell_b=3)
+
+
+def test_success_prob_dp_matches_bruteforce_paper_params():
+    lp = _paper_sim_lp()
+    rng = np.random.default_rng(0)
+    p = np.sort(rng.uniform(0.05, 0.95, size=lp.n))[::-1].copy()
+    probs = np.asarray(lea.success_prob_all_prefixes(jnp.asarray(p), lp))
+    # brute force only feasible for small prefixes; compare where 2^i <= 2^15
+    for i in range(1, lp.n + 1):
+        want = lea.success_prob_bruteforce(jnp.asarray(p), lp, i)
+        np.testing.assert_allclose(probs[i - 1], want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+    kstar_frac=st.floats(0.3, 1.0),
+)
+def test_success_prob_dp_matches_bruteforce_random(n, seed, kstar_frac):
+    rng = np.random.default_rng(seed)
+    ell_b = int(rng.integers(1, 4))
+    ell_g = ell_b + int(rng.integers(1, 8))
+    kstar = max(n * ell_b + 1, int(kstar_frac * n * ell_g))  # nontrivial region
+    if kstar > n * ell_g:
+        kstar = n * ell_g  # keep feasible at i~ = n
+    lp = LoadParams(n=n, kstar=kstar, ell_g=ell_g, ell_b=ell_b)
+    p = np.sort(rng.uniform(0.0, 1.0, size=n))[::-1].copy()
+    probs = np.asarray(lea.success_prob_all_prefixes(jnp.asarray(p), lp))
+    for i in range(1, n + 1):
+        want = lea.success_prob_bruteforce(jnp.asarray(p), lp, i)
+        np.testing.assert_allclose(probs[i - 1], want, rtol=1e-5, atol=1e-6)
+
+
+def test_allocate_matches_exhaustive_search_over_all_subsets():
+    """LEA's linear search (Lemma 4.5) equals the 2^n exhaustive optimum."""
+    rng = np.random.default_rng(42)
+    n, ell_g, ell_b = 8, 5, 2
+    for trial in range(5):
+        kstar = int(rng.integers(n * ell_b + 1, n * ell_g + 1))
+        lp = LoadParams(n=n, kstar=kstar, ell_g=ell_g, ell_b=ell_b)
+        p = rng.uniform(0.05, 0.95, size=n)
+
+        # exhaustive: every subset G_g gets ell_g, complement ell_b
+        best = 0.0
+        for size in range(0, n + 1):
+            for gg in itertools.combinations(range(n), size):
+                a = math.ceil((kstar - (n - size) * ell_b) / ell_g)
+                if a > size:
+                    continue
+                prob = 0.0
+                for good_mask in itertools.product([0, 1], repeat=size):
+                    if sum(good_mask) >= max(a, 0):
+                        q = 1.0
+                        for idx, gm in zip(gg, good_mask):
+                            q *= p[idx] if gm else 1 - p[idx]
+                        prob += q
+                best = max(best, prob)
+
+        loads, i_star = lea.allocate(jnp.asarray(p), lp)
+        probs = np.asarray(lea.success_prob_all_prefixes(
+            jnp.asarray(np.sort(p)[::-1].copy()), lp))
+        got = probs[int(i_star) - 1]
+        np.testing.assert_allclose(got, best, rtol=1e-5, atol=1e-6)
+        # allocation consistency: exactly i_star workers at ell_g, the top ones
+        loads = np.asarray(loads)
+        assert (loads == ell_g).sum() == int(i_star)
+        top = np.argsort(-p)[: int(i_star)]
+        assert set(np.nonzero(loads == ell_g)[0].tolist()) == set(top.tolist())
+
+
+def test_lemma45_greedy_prefix_beats_any_same_size_subset():
+    """For fixed |G_g|, taking the largest-p workers maximizes success prob."""
+    rng = np.random.default_rng(7)
+    n, ell_g, ell_b = 7, 4, 1
+    kstar = 17
+    lp = LoadParams(n=n, kstar=kstar, ell_g=ell_g, ell_b=ell_b)
+    p = np.sort(rng.uniform(0.1, 0.9, size=n))[::-1].copy()
+
+    def subset_prob(gg):
+        size = len(gg)
+        a = math.ceil((kstar - (n - size) * ell_b) / ell_g)
+        if a > size:
+            return 0.0
+        prob = 0.0
+        for good_mask in itertools.product([0, 1], repeat=size):
+            if sum(good_mask) >= max(a, 0):
+                q = 1.0
+                for idx, gm in zip(gg, good_mask):
+                    q *= p[idx] if gm else 1 - p[idx]
+                prob += q
+        return prob
+
+    for size in range(1, n + 1):
+        greedy = subset_prob(tuple(range(size)))
+        for gg in itertools.combinations(range(n), size):
+            assert greedy >= subset_prob(gg) - 1e-9
+
+
+def test_estimator_counts_and_first_round_semantics():
+    est = lea.init_estimator(3)
+    s1 = jnp.asarray([1, 0, 1])
+    est = lea.update_estimator(est, s1)
+    assert np.all(np.asarray(est.counts) == 0)  # first obs: no transition
+    s2 = jnp.asarray([1, 1, 0])
+    est = lea.update_estimator(est, s2)
+    c = np.asarray(est.counts)
+    np.testing.assert_array_equal(c[0], [1, 0, 0, 0])  # g->g
+    np.testing.assert_array_equal(c[1], [0, 0, 1, 0])  # b->g
+    np.testing.assert_array_equal(c[2], [0, 1, 0, 0])  # g->b
+
+
+def test_estimator_converges_to_true_transitions():
+    """SLLN check underpinning Lemma 5.2: counts -> true transition probs."""
+    from repro.core import markov
+
+    p_gg = jnp.asarray([0.8, 0.9, 0.6])
+    p_bb = jnp.asarray([0.7, 0.6, 0.533])
+    traj = markov.sample_trajectory(jax.random.PRNGKey(0), p_gg, p_bb, 20000)
+
+    def body(est, s):
+        return lea.update_estimator(est, s), None
+
+    est, _ = jax.lax.scan(body, lea.init_estimator(3), traj)
+    e_gg, e_bb = lea.estimated_transitions(est)
+    np.testing.assert_allclose(np.asarray(e_gg), np.asarray(p_gg), atol=0.03)
+    np.testing.assert_allclose(np.asarray(e_bb), np.asarray(p_bb), atol=0.03)
+
+
+def test_round_success_thresholds():
+    lp = LoadParams(n=3, kstar=10, ell_g=5, ell_b=2)
+    mu_g, mu_b, d = 5.0, 2.0, 1.0
+    # all good, loads (5,5,2): received 12 >= 10
+    ok = lea.round_success(jnp.asarray([5, 5, 2]), jnp.asarray([1, 1, 1]), lp, mu_g, mu_b, d)
+    assert bool(ok)
+    # one good worker at ell_g late (bad state): 5/2 > 1 -> only 5+2 received
+    ok = lea.round_success(jnp.asarray([5, 5, 2]), jnp.asarray([1, 0, 1]), lp, mu_g, mu_b, d)
+    assert not bool(ok)
+    # bad-state workers always deliver ell_b on time
+    ok = lea.round_success(jnp.asarray([2, 2, 2]), jnp.asarray([0, 0, 0]), lp, mu_g, mu_b, 1.0)
+    assert not bool(ok)  # 6 < 10, on time but insufficient
+
+
+def test_loadparams_validation():
+    with pytest.raises(ValueError):
+        LoadParams(n=4, kstar=10, ell_g=2, ell_b=2)

@@ -1,0 +1,60 @@
+"""Subprocess body: checkpoint written from an 8-device mesh restores onto a
+4-device mesh (elastic shrink) with identical values."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.checkpoint import restore, save
+from repro.configs.base import get_smoke_config
+from repro.models import api
+from repro.models.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.elastic import remap_estimator
+from repro.core import lea
+
+
+def main():
+    cfg = get_smoke_config("qwen3_0_6b")
+    state = api.init_state(cfg, jax.random.PRNGKey(0))
+
+    mesh8 = make_host_mesh((2, 4), ("data", "model"))
+    with mesh8, use_mesh(mesh8):
+        sh8 = api.state_shardings(cfg, mesh8, state)
+        state8 = jax.device_put(state, sh8)
+    d = tempfile.mkdtemp()
+    save(d, 3, state8)
+
+    # "shrink" to a 4-device submesh (1 data x 4 model)
+    import numpy as _np
+    devs = _np.asarray(jax.devices()[:4]).reshape(1, 4)
+    from jax.sharding import Mesh
+    mesh4 = Mesh(devs, ("data", "model"))
+    with mesh4, use_mesh(mesh4):
+        sh4 = api.state_shardings(cfg, mesh4, state)
+        restored, _ = restore(d, 3, state, shardings=sh4)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    # LEA estimator remap across worker-pool resize
+    est = lea.init_estimator(8)
+    import jax.numpy as jnp
+    est = lea.update_estimator(est, jnp.ones((8,), jnp.int32))
+    est = lea.update_estimator(est, jnp.zeros((8,), jnp.int32))
+    shrunk = remap_estimator(est, 8, 4, survivors=[0, 2, 4, 6])
+    assert shrunk.counts.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(shrunk.counts[1]), np.asarray(est.counts[2]))
+    grown = remap_estimator(est, 8, 10)
+    assert grown.counts.shape == (10, 4)
+    print("ELASTIC_OK")
+
+
+if __name__ == "__main__":
+    main()

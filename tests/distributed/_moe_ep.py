@@ -1,0 +1,49 @@
+"""Subprocess body: expert-parallel MoE equals the dense-dispatch MoE on a
+4-way model mesh (E=8 experts, 2 per shard)."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import use_mesh
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    cfg = ArchConfig(
+        name="t", family="moe", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        head_dim=16, d_ff=16, vocab_size=128, n_experts=8, top_k=2,
+        capacity_factor=100.0, dtype="float32", remat=False,
+    )
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e)) * 0.5,
+        "w_gate": jax.random.normal(ks[1], (e, d, f)) * 0.2,
+        "w_up": jax.random.normal(ks[2], (e, d, f)) * 0.2,
+        "w_down": jax.random.normal(ks[3], (e, f, d)) * 0.2,
+    }
+    x = jax.random.normal(ks[4], (2, 6, d))
+    want = L.moe(x, p, cfg)                          # dense dispatch, no mesh
+
+    mesh = make_host_mesh((1, 4), ("data", "model"))
+    cfg_ep = dataclasses.replace(cfg, moe_impl="ep")
+    with mesh, use_mesh(mesh):
+        got = jax.jit(lambda xx, pp: L.moe(xx, pp, cfg_ep))(x, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    print("MOE_EP_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Subprocess body: GPipe pipeline over a 4-stage axis matches the sequential
+oracle."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.pipeline_parallel import pipeline_forward, reference_forward
+
+
+def main():
+    mesh = make_host_mesh((4,), ("pod",))
+    s_count, m_count, mb, d = 4, 6, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = {
+        "w": jax.random.normal(ks[0], (s_count, d, d)) * 0.3,
+        "b": jax.random.normal(ks[1], (s_count, d)) * 0.1,
+    }
+    x = jax.random.normal(ks[2], (m_count, mb, d))
+
+    def stage_fn(p, h):
+        return jnp.tanh(h @ p["w"] + p["b"])
+
+    got = pipeline_forward(stage_fn, params, x, mesh, axis="pod")
+    want = reference_forward(stage_fn, params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    print("PP_OK")
+
+
+if __name__ == "__main__":
+    main()

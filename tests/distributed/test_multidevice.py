@@ -1,0 +1,52 @@
+"""Multi-device tests, each in its own subprocess so XLA_FLAGS device-count
+overrides never leak into the main test process (see conftest note)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _run(script: str, marker: str, timeout: int = 600):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)   # script sets its own
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_HERE, script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, f"{script} failed:\n{proc.stdout}\n{proc.stderr}"
+    assert marker in proc.stdout, proc.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    _run("_sharded_train.py", "SHARDED_TRAIN_OK")
+
+
+def test_pipeline_parallel_matches_reference():
+    _run("_pp_forward.py", "PP_OK")
+
+
+def test_elastic_reshard_roundtrip():
+    _run("_elastic_reshard.py", "ELASTIC_OK")
+
+
+def test_dryrun_cli_single_cell():
+    """The dry-run entrypoint itself (512 fake devices) on the cheapest cell."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(_HERE, "..", "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper_tiny", "--shape", "decode_32k",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "all cells ok" in proc.stdout
+
+
+def test_moe_expert_parallel_matches_dense():
+    _run("_moe_ep.py", "MOE_EP_OK")

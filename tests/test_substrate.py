@@ -1,0 +1,218 @@
+"""Substrate tests: data pipeline, checkpointing, compression, coded-DP FT."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DataPipeline
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.runtime.compression import make_compressor
+from repro.runtime.fault_tolerance import CodedDPConfig, CodedDataParallelExecutor
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_restorable():
+    p1 = DataPipeline(1000, 8, 16, seed=3)
+    b1 = [p1.next() for _ in range(3)]
+    p2 = DataPipeline(1000, 8, 16, seed=3)
+    p2.restore({"step": 2, "seed": 3})
+    b2 = p2.next()
+    np.testing.assert_array_equal(b1[2]["tokens"], b2["tokens"])
+
+
+def test_pipeline_host_sharding_partitions_global_batch():
+    full = DataPipeline(1000, 8, 16, seed=1)
+    ga = full.next()["tokens"]
+    parts = []
+    for h in range(4):
+        p = DataPipeline(1000, 8, 16, seed=1, host_id=h, host_count=4)
+        parts.append(p.next()["tokens"])
+    np.testing.assert_array_equal(ga, np.concatenate(parts, axis=0))
+
+
+def test_pipeline_tokens_in_vocab():
+    p = DataPipeline(50, 4, 32, seed=0)
+    t = p.next()["tokens"]
+    assert t.min() >= 0 and t.max() < 50
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save(d, 7, tree, extra_meta={"cursor": {"step": 7, "seed": 0}})
+    assert latest_step(d) == 7
+    out, meta = restore(d, 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    assert meta["cursor"]["step"] == 7
+
+
+def test_checkpoint_atomicity_ignores_tmp(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save(d, 1, tree)
+    # simulate crash mid-write: tmp dir exists without rename
+    os.makedirs(os.path.join(d, "step_2.tmp"))
+    assert latest_step(d) == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree)
+    mgr.wait()
+    mgr._gc()
+    assert latest_step(d) == 4
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_"))
+    assert len(steps) <= 2
+    s, out, _ = mgr.restore_latest(tree)
+    assert s == 4
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save(d, 1, _tree())
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore(d, 1, {"a": jnp.zeros((2, 3)), "zz": jnp.zeros((4,))})
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compression_error_feedback_contract(kind):
+    """EF invariant: compressed + residual == accumulated true gradient."""
+    init, apply = make_compressor(kind, k_frac=0.25)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)), jnp.float32)}
+    state = init(g)
+    out, new_state = apply(g, state)
+    recon = jax.tree.map(lambda a, b: a + b, out, new_state)
+    np.testing.assert_allclose(np.asarray(recon["w"]), np.asarray(g["w"]), rtol=2e-2, atol=2e-2)
+
+
+def test_int8_compression_bounded_error():
+    init, apply = make_compressor("int8")
+    g = {"w": jnp.linspace(-1, 1, 1000, dtype=jnp.float32)}
+    out, _ = apply(g, init(g))
+    err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
+    assert err <= (1.0 / 127.0) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k_frac=st.floats(0.05, 0.9))
+def test_topk_keeps_largest(seed, k_frac):
+    init, apply = make_compressor("topk", k_frac=k_frac)
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(128,)), jnp.float32)}
+    out, _ = apply(g, init(g))
+    kept = np.asarray(out["w"]) != 0
+    dropped_max = np.abs(np.asarray(g["w"]))[~kept].max() if (~kept).any() else 0.0
+    kept_min = np.abs(np.asarray(g["w"]))[kept].min()
+    assert kept_min >= dropped_max - 1e-6
+
+
+def test_ef_accumulates_dropped_signal():
+    """A direction always dropped by top-k must eventually pass via EF."""
+    init, apply = make_compressor("topk", k_frac=0.5)
+    g = {"w": jnp.asarray([1.0, 0.1], jnp.float32)}   # second always loses
+    state = init(g)
+    passed_small = False
+    for _ in range(10):
+        out, state = apply(g, state)
+        if np.asarray(out["w"])[1] != 0:
+            passed_small = True
+            break
+    assert passed_small
+
+
+# ---------------------------------------------------------------------------
+# coded-DP fault tolerance (the paper inside the trainer)
+# ---------------------------------------------------------------------------
+
+def _quadratic_grad(params, batch):
+    # toy model: params w; loss = mean((x @ w - y)^2)
+    def loss(w):
+        pred = batch["x"] @ w
+        return jnp.mean((pred - batch["y"]) ** 2)
+    return {"w": jax.grad(lambda w: loss(w["w"]))(params)["w"]}
+
+
+def _toy_batch(k=16, rows=2):
+    rng = np.random.default_rng(0)
+    return {
+        "x": jnp.asarray(rng.normal(size=(k * rows, 4)), jnp.float32),
+        "y": jnp.asarray(rng.normal(size=(k * rows,)), jnp.float32),
+    }
+
+
+def test_coded_dp_round_gradient_matches_uncoded_mean():
+    cfg = CodedDPConfig(n_workers=8, r=4, k=16, deadline=1.0, mu_g=10, mu_b=3,
+                        p_gg=0.95, p_bb=0.05)  # mostly good: rounds succeed
+    ex = CodedDataParallelExecutor(cfg, _quadratic_grad, seed=1)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    batch = _toy_batch()
+    got = None
+    for _ in range(20):
+        g, info = ex.round(params, batch)
+        if g is not None:
+            got = g
+            break
+    assert got is not None
+    want = _quadratic_grad(params, batch)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_coded_dp_learns_and_succeeds_often():
+    cfg = CodedDPConfig(n_workers=8, r=4, k=16, deadline=1.0, mu_g=10, mu_b=3,
+                        p_gg=0.9, p_bb=0.4)
+    ex = CodedDataParallelExecutor(cfg, _quadratic_grad, seed=0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    batch = _toy_batch()
+    for _ in range(60):
+        ex.round(params, batch)
+    assert ex.timely_throughput > 0.5, ex.timely_throughput
+
+
+def test_coded_dp_dead_worker_feasibility():
+    cfg = CodedDPConfig(n_workers=5, r=4, k=16)
+    ex = CodedDataParallelExecutor(cfg, _quadratic_grad)
+    assert ex.decode_feasible          # 5*4 = 20 >= 16
+    ex.mark_dead(0)
+    assert ex.decode_feasible          # 4*4 = 16 >= 16: exactly feasible
+    ex.mark_dead(1)
+    assert not ex.decode_feasible      # 12 < 16: restart-from-checkpoint
+
+
+def test_coded_dp_estimator_state_roundtrip():
+    cfg = CodedDPConfig(n_workers=6, r=4, k=12)
+    ex = CodedDataParallelExecutor(cfg, _quadratic_grad, seed=2)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    batch = {"x": jnp.zeros((12 * 2, 4)), "y": jnp.zeros((12 * 2,))}
+    for _ in range(5):
+        ex.round(params, batch)
+    sd = ex.state_dict()
+    ex2 = CodedDataParallelExecutor(cfg, _quadratic_grad, seed=99)
+    ex2.load_state_dict(sd)
+    np.testing.assert_array_equal(np.asarray(ex.est.counts), np.asarray(ex2.est.counts))
+    assert ex2.rounds == ex.rounds
