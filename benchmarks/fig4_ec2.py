@@ -4,10 +4,18 @@ workload f(X_j) = X_j^T B with K*=50, shift-exponential arrivals T_c + Exp(lam).
 Hardware substitution (DESIGN §9): the t2.micro credit dynamics are replayed
 by the same two-state Markov speed model measured in the paper's Fig. 1
 (burst ~= 10x baseline).  Arrival gaps matter because the worker chain keeps
-mixing between requests: we apply round(gap/d) extra Markov transitions
-between consecutive rounds, so larger lambda degrades LEA's one-step
-predictions exactly as slower request rates did on EC2.  The static
-benchmark is the paper's EC2 one: ell_g/ell_b with probability 1/2 each.
+mixing between requests: the seed applied round(gap/d) extra Markov
+transitions between consecutive rounds; the batched engine instead folds the
+gap into the chain itself — ``markov.t_step_transitions`` gives the exact
+t-step transition probabilities, so one engine round IS one request and the
+whole scenario runs as a single compiled computation
+(``core.throughput.compare``).  LEA's estimator observes exactly the t-step
+chain either way, so larger lambda degrades its one-step predictions exactly
+as slower request rates did on EC2.  The static benchmark is the paper's EC2
+one: a single ell_g/ell_b draw with probability 1/2 each (engine strategy
+``static_single``).  Speeds are normalized so a good worker clears its full
+store within the deadline and a bad one r/10 of it, i.e. mu = (ell_g, ell_b)
+with d = 1.
 """
 
 from __future__ import annotations
@@ -16,54 +24,20 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper_lea import EC2
 from repro.core.lagrange import CodeSpec
-from repro.core import lea as lea_mod
-from repro.core import markov
+from repro.core import markov, throughput
 from repro.core.lea import LoadParams
 
 # credit-based chain estimated from Fig. 1-style traces
 P_GG, P_BB = 0.85, 0.6
 
 
-def _simulate(strategy: str, lp: LoadParams, gap_transitions: int,
-              rounds: int, seed: int) -> float:
-    """Round-driven sim with `gap_transitions` chain steps between requests."""
-    n = lp.n
-    p_gg = jnp.full((n,), P_GG)
-    p_bb = jnp.full((n,), P_BB)
-    key = jax.random.PRNGKey(seed)
-    key, k0 = jax.random.split(key)
-    states = markov.initial_states(k0, p_gg, p_bb)
-    est = lea_mod.init_estimator(n)
-    pi = markov.stationary_good_prob(p_gg, p_bb)
-    succ = 0
-    for m in range(rounds):
-        for _ in range(gap_transitions):
-            key, k = jax.random.split(key)
-            states = markov.step_states(k, states, p_gg, p_bb)
-        if strategy == "lea":
-            p_good = jnp.where(est.seen_prev, lea_mod.predicted_good_prob(est),
-                               jnp.full((n,), 0.5))
-            loads, _ = lea_mod.allocate(p_good, lp)
-        else:  # static_equal (paper's EC2 benchmark)
-            key, k = jax.random.split(key)
-            draw = jax.random.uniform(k, (n,)) < 0.5
-            loads = jnp.where(draw, lp.ell_g, lp.ell_b).astype(jnp.int32)
-        # speeds normalized so ell_g/ell_b encode the deadline directly:
-        # a good worker clears <= ell_g evaluations in time d, a bad one ell_b.
-        capacity = jnp.where(states == 1, lp.ell_g, lp.ell_b)
-        received = jnp.sum(jnp.where(loads <= capacity, loads, 0))
-        succ += int(received >= lp.kstar)
-        est = lea_mod.update_estimator(est, states)
-    return succ / rounds
-
-
 def run(rounds: int | None = None) -> list[dict]:
     rows = []
     rounds = rounds or 400
+    strategies = ("lea", "static_single")
     for i, (xrows, k, lam, d) in enumerate(EC2.scenarios, 1):
         spec = CodeSpec(EC2.n, EC2.r, k, EC2.deg_f)
         # normalize speeds so a good worker clears its full store in time d
@@ -73,9 +47,15 @@ def run(rounds: int | None = None) -> list[dict]:
         lp = LoadParams(n=EC2.n, kstar=spec.recovery_threshold,
                         ell_g=ell_g, ell_b=ell_b)
         gap = max(1, int(round((30.0 + lam) / (10 * d))))
+        p_gg_t, p_bb_t = markov.t_step_transitions(P_GG, P_BB, gap)
         t0 = time.time()
-        r_lea = _simulate("lea", lp, gap, rounds, seed=i)
-        r_static = _simulate("static_equal", lp, gap, rounds, seed=i)
+        res = throughput.compare(
+            jax.random.PRNGKey(i), lp,
+            jnp.full((EC2.n,), p_gg_t), jnp.full((EC2.n,), p_bb_t),
+            float(ell_g), float(ell_b), 1.0, rounds,
+            strategies=strategies,
+        )
+        r_lea, r_static = res["lea"], res["static_single"]
         if r_static > 0:
             ratio = f"{r_lea / r_static:.2f}x"
         else:

@@ -1,13 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
 
+Exit code 0 is the CI smoke gate: every suite must produce its rows without
+raising.  ``fig3_sim`` additionally refreshes the ``BENCH_fig3.json`` perf
+baseline (rounds/sec, allocator us/call) at the repo root.
+
 Tables:
-  fig3_sim       paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)
-  fig4_ec2       paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)
-  table_kstar    recovery-threshold table (eqs. 15/16)
-  bench_kernels  Pallas-kernel + XLA-path microbenchmarks
-  coded_dp       beyond-paper: LEA-coded microbatch DP in the trainer
-  roofline       33-cell dry-run roofline terms (from experiments/dryrun)
+  fig3_sim         paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)
+  fig4_ec2         paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)
+  table_kstar      recovery-threshold table (eqs. 15/16)
+  bench_kernels    Pallas-kernel + XLA-path microbenchmarks
+  bench_allocator  old (sequential seed) vs new (batched) engine + allocator
+  coded_dp         beyond-paper: LEA-coded microbatch DP in the trainer
+  roofline         33-cell dry-run roofline terms (from experiments/dryrun)
 """
 
 import sys
@@ -15,14 +20,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, coded_dp_bench, fig3_sim, fig4_ec2,
-                            roofline, table_kstar)
+    from benchmarks import (bench_allocator, bench_kernels, coded_dp_bench,
+                            fig3_sim, fig4_ec2, roofline, table_kstar)
 
     suites = [
         ("fig3_sim", fig3_sim.run),
         ("fig4_ec2", fig4_ec2.run),
         ("table_kstar", table_kstar.run),
         ("bench_kernels", bench_kernels.run),
+        ("bench_allocator", bench_allocator.run),
         ("coded_dp", coded_dp_bench.run),
         ("roofline", roofline.run),
     ]

@@ -7,6 +7,7 @@ from .lagrange import (  # noqa: F401
     beta_points,
     decode,
     decode_matrix,
+    decode_matrix_jax,
     decode_matrix_modp,
     encode,
     generator_matrix,
@@ -21,6 +22,7 @@ from .lea import (  # noqa: F401
     estimated_transitions,
     init_estimator,
     predicted_good_prob,
+    prefix_thresholds,
     round_success,
     success_prob_all_prefixes,
     update_estimator,
@@ -31,13 +33,25 @@ from .markov import (  # noqa: F401
     speeds_from_states,
     stationary_good_prob,
     step_states,
+    t_step_transitions,
 )
-from .throughput import STRATEGIES, compare, simulate, timely_throughput  # noqa: F401
+from .throughput import (  # noqa: F401
+    STRATEGIES,
+    compare,
+    simulate,
+    simulate_strategies,
+    sweep,
+    timely_throughput,
+)
 from .coded_ops import (  # noqa: F401
     CodedDataset,
+    DecodeCache,
     chunk_gradient,
     coded_linear_gradient,
+    coded_linear_gradient_device,
     coded_matmul,
+    coded_matmul_device,
     encode_dataset,
+    received_indices,
     uncoded_linear_gradient,
 )

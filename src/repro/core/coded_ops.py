@@ -14,17 +14,39 @@ simulator), keeping shapes static for XLA.
 The Pallas kernels in ``repro.kernels`` accelerate the two hot spots
 (`lagrange_encode` GEMM and the fused degree-2 gradient); these jnp versions
 are the oracles they are tested against.
+
+Device-resident decode path
+---------------------------
+The seed rebuilt the decode matrix on the host every round
+(``np.nonzero(on_time)`` -> ``decode_matrix``), forcing a host round-trip in
+the middle of each training/serving step.  Two replacements:
+
+  * :class:`DecodeCache` — a host-side memo keyed on the received chunk set.
+    Worker states are discrete, so on-time patterns recur heavily across
+    rounds; after warm-up a round's decode matrix is a dict hit instead of an
+    O(K*^2 k) rebuild.  Used by the eager :func:`coded_matmul` /
+    :func:`coded_linear_gradient` via their ``cache=`` argument.
+  * :func:`coded_matmul_device` / :func:`coded_linear_gradient_device` — fully
+    jittable: the received set is a static-shape masked gather
+    (:func:`received_indices`) and the decode matrix is built on device by
+    ``lagrange.decode_matrix_jax``, so round-over-round iteration compiles
+    into one XLA computation with no host sync.  They return ``(out, ok)``
+    instead of raising ``TimeoutError`` (jit cannot raise data-dependently);
+    ``ok`` is False when fewer than K* results were on time and ``out`` is
+    then meaningless.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .lagrange import CodeSpec, decode_matrix, encode, generator_matrix
+from .lagrange import (CodeSpec, decode_matrix, decode_matrix_jax, encode,
+                       generator_matrix)
 
 
 @dataclasses.dataclass
@@ -59,23 +81,67 @@ def encode_dataset(
     return CodedDataset(spec=spec, x_tilde=x_t, y_tilde=y_t)
 
 
-def _first_kstar_mask(on_time: jnp.ndarray, kstar: int) -> jnp.ndarray:
+def received_indices(on_time: jnp.ndarray, kstar: int) -> jnp.ndarray:
     """Indices of the K* lexicographically-first on-time chunks (static shape).
 
     The master only needs *any* K* on-time results (Defn. 4.1); we take the
     first K* in chunk order.  Caller must guarantee >= K* are on time.
+    Jittable (argsort-based masked gather, no data-dependent shapes).
     """
     order = jnp.argsort(~on_time, stable=True)  # on-time chunks first
     return order[:kstar]
 
 
+# seed-era private name, kept for external callers
+_first_kstar_mask = received_indices
+
+
+class DecodeCache:
+    """Host-side memo of decode matrices keyed on the received chunk set.
+
+    On-time patterns recur across rounds (worker states are discrete), so the
+    O(K*^2 k) decode-matrix build is paid once per distinct received set.
+    Not thread-safe; one cache per CodedDataset/spec.
+    """
+
+    def __init__(self, spec: CodeSpec):
+        self.spec = spec
+        self._mats: dict[tuple, jnp.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._mats)
+
+    def matrix(self, received: np.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+        # dtype is part of the key: a hit must not hand back a matrix built
+        # at a different precision than the caller's results
+        key = (jnp.dtype(dtype).name, *(int(v) for v in received))
+        mat = self._mats.get(key)
+        if mat is None:
+            self.misses += 1
+            mat = decode_matrix(self.spec, received, dtype)
+            self._mats[key] = mat
+        else:
+            self.hits += 1
+        return mat
+
+    def from_on_time(self, on_time: np.ndarray, dtype=jnp.float32):
+        """(received indices, decode matrix) for the first-K* on-time chunks."""
+        received = np.nonzero(np.asarray(on_time))[0][: self.spec.recovery_threshold]
+        return received, self.matrix(received, dtype)
+
+
 def coded_matmul(
-    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray
+    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray,
+    cache: DecodeCache | None = None,
 ) -> jnp.ndarray:
     """Decode f(X_j) = X_j @ w from on-time encoded evaluations.
 
     ``on_time`` is a concrete (nr,) bool array from the scheduler (which chunk
     evaluations arrived before the deadline).  Returns (k, rows[, ...]).
+    Pass a :class:`DecodeCache` to memoise the decode matrix across rounds;
+    use :func:`coded_matmul_device` for the fully-jittable path.
     """
     spec = coded.spec
     on_time = np.asarray(on_time)
@@ -84,9 +150,36 @@ def coded_matmul(
             f"round failed: {int(on_time.sum())} < K*={spec.recovery_threshold} on-time results"
         )
     results = jnp.einsum("vrc,c...->vr...", coded.x_tilde, w)
-    received = np.nonzero(on_time)[0][: spec.recovery_threshold]
-    d = decode_matrix(spec, received, results.dtype)
+    if cache is not None:
+        received, d = cache.from_on_time(on_time, results.dtype)
+    else:
+        received = np.nonzero(on_time)[0][: spec.recovery_threshold]
+        d = decode_matrix(spec, received, results.dtype)
     return jnp.tensordot(d, results[jnp.asarray(received)], axes=1)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _decode_on_time(
+    spec: CodeSpec, results: jnp.ndarray, on_time: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Device decode: (nr, *dims) results + (nr,) bool -> ((k, *dims), ok)."""
+    kstar = spec.recovery_threshold
+    received = received_indices(on_time, kstar)
+    d = decode_matrix_jax(spec, received)
+    gathered = jnp.take(results, received, axis=0)            # (K*, *dims)
+    ok = jnp.sum(on_time) >= kstar
+    return jnp.tensordot(d.astype(results.dtype), gathered, axes=1), ok
+
+
+def coded_matmul_device(
+    coded: CodedDataset, w: jnp.ndarray, on_time: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fully-jittable :func:`coded_matmul`: traced ``on_time``, no host sync.
+
+    Returns ``(decoded, ok)``; ``decoded`` is meaningful only where ``ok``.
+    """
+    results = jnp.einsum("vrc,c...->vr...", coded.x_tilde, w)
+    return _decode_on_time(coded.spec, results, jnp.asarray(on_time))
 
 
 def chunk_gradient(x_tilde_v: jnp.ndarray, y_tilde_v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -96,12 +189,15 @@ def chunk_gradient(x_tilde_v: jnp.ndarray, y_tilde_v: jnp.ndarray, w: jnp.ndarra
 
 
 def coded_linear_gradient(
-    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray, gradient_fn=None
+    coded: CodedDataset, w: jnp.ndarray, on_time: np.ndarray, gradient_fn=None,
+    cache: DecodeCache | None = None,
 ) -> jnp.ndarray:
     """Full least-squares gradient sum_j X_jᵀ(X_j w − y_j) via LCC (deg f = 2).
 
     ``gradient_fn(x_tilde, y_tilde, w) -> (nr, cols)`` defaults to a vmapped
-    :func:`chunk_gradient`; the Pallas fused kernel slots in here.
+    :func:`chunk_gradient`; the Pallas fused kernel slots in here.  Pass a
+    :class:`DecodeCache` to memoise decode matrices across rounds; use
+    :func:`coded_linear_gradient_device` for the fully-jittable path.
     """
     spec = coded.spec
     if coded.y_tilde is None:
@@ -116,10 +212,32 @@ def coded_linear_gradient(
     if gradient_fn is None:
         gradient_fn = jax.vmap(chunk_gradient, in_axes=(0, 0, None))
     results = gradient_fn(coded.x_tilde, coded.y_tilde, w)       # (nr, cols)
-    received = np.nonzero(on_time)[0][: spec.recovery_threshold]
-    d = decode_matrix(spec, received, results.dtype)
+    if cache is not None:
+        received, d = cache.from_on_time(on_time, results.dtype)
+    else:
+        received = np.nonzero(on_time)[0][: spec.recovery_threshold]
+        d = decode_matrix(spec, received, results.dtype)
     per_chunk = jnp.tensordot(d, results[jnp.asarray(received)], axes=1)  # (k, cols)
     return jnp.sum(per_chunk, axis=0)
+
+
+def coded_linear_gradient_device(
+    coded: CodedDataset, w: jnp.ndarray, on_time: jnp.ndarray, gradient_fn=None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fully-jittable :func:`coded_linear_gradient`: traced ``on_time``.
+
+    Returns ``(gradient, ok)``; ``gradient`` is meaningful only where ``ok``.
+    """
+    spec = coded.spec
+    if coded.y_tilde is None:
+        raise ValueError("dataset was encoded without targets")
+    if spec.deg_f != 2:
+        raise ValueError("linear-model gradient is a degree-2 polynomial; spec.deg_f must be 2")
+    if gradient_fn is None:
+        gradient_fn = jax.vmap(chunk_gradient, in_axes=(0, 0, None))
+    results = gradient_fn(coded.x_tilde, coded.y_tilde, w)       # (nr, cols)
+    per_chunk, ok = _decode_on_time(spec, results, jnp.asarray(on_time))
+    return jnp.sum(per_chunk, axis=0), ok
 
 
 def uncoded_linear_gradient(x_chunks: jnp.ndarray, y_chunks: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -195,6 +195,58 @@ def decode(decode_mat: jnp.ndarray, results: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Device-resident decode path (traced received set — no host round-trip)
+# ---------------------------------------------------------------------------
+
+def _lagrange_basis_jax(eval_pts: jnp.ndarray, nodes: jnp.ndarray) -> jnp.ndarray:
+    """Traced counterpart of :func:`_lagrange_basis`: M[e, j] =
+    prod_{l != j} (eval_e - nodes_l) / (nodes_j - nodes_l).
+
+    ``nodes`` may be a traced gather of alpha points (the received set), so
+    this runs fully on device in float32 (the host path uses float64; the
+    Chebyshev grids keep the products conditioned — DESIGN §9).
+    """
+    eval_pts = jnp.asarray(eval_pts, jnp.float32)
+    nodes = jnp.asarray(nodes, jnp.float32)
+    j = nodes.shape[0]
+    e = eval_pts[:, None, None]                    # (E,1,1)
+    nj = nodes[None, :, None]                      # (1,J,1)
+    nl = nodes[None, None, :]                      # (1,1,J)
+    eye = jnp.eye(j, dtype=bool)[None]
+    num = jnp.where(eye, 1.0, e - nl)              # (E,J,J)
+    den = jnp.where(eye, 1.0, nj - nl)
+    return jnp.prod(num / den, axis=-1)            # (E, J)
+
+
+def decode_matrix_jax(spec: CodeSpec, received: jnp.ndarray) -> jnp.ndarray:
+    """(k, K*) decode matrix from a TRACED (K*,) received-index vector.
+
+    Fully jittable (``spec`` is static): a static-shape gather picks the
+    received alpha points and the Lagrange basis is evaluated on device —
+    no ``np.nonzero`` / host construction per round.  Validity (distinct
+    indices, repetition coverage) is the caller's contract, exactly the K*
+    guarantee of Defn. 4.1; rows that would be unrecoverable come back as
+    zeros rather than raising (jit cannot raise data-dependently).
+    """
+    received = jnp.asarray(received, jnp.int32)
+    kstar = spec.recovery_threshold
+    assert received.shape == (kstar,), (received.shape, kstar)
+    if spec.mode == "lagrange":
+        alpha_grid = jnp.asarray(
+            alpha_points_np(spec.nr)[chunk_alpha_indices(spec)], jnp.float32
+        )
+        alphas = jnp.take(alpha_grid, received)    # (K*,) traced gather
+        betas = jnp.asarray(beta_points_np(spec.k), jnp.float32)
+        return _lagrange_basis_jax(betas, alphas)
+    # repetition: select the first received copy of each chunk j (j = v mod k)
+    src = received % spec.k                        # (K*,)
+    pos = jnp.arange(kstar)
+    hit = src[None, :] == jnp.arange(spec.k)[:, None]          # (k, K*)
+    first = jnp.min(jnp.where(hit, pos[None, :], kstar), axis=1)  # (k,)
+    return (pos[None, :] == first[:, None]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # Exact GF(p) path (mirrors the paper's finite field F; used by property tests)
 # ---------------------------------------------------------------------------
 

@@ -10,9 +10,17 @@ The paper's 4 phases map to:
 Efficiency note (beyond the paper's pseudocode): the estimated success
 probability (8) is a Poisson-binomial tail.  Instead of the exponential
 sum over subsets G ⊆ [i~], we evaluate all n prefixes with one O(n^2)
-dynamic program (`lax.scan` convolving one Bernoulli at a time), so one
-allocation costs O(n^2) total rather than O(2^n) — the linear search of the
-paper then reads the tails off the DP table.
+dynamic program (convolving one Bernoulli at a time), so one allocation
+costs O(n^2) total rather than O(2^n) — the linear search of the paper
+then reads the tails off the DP table.
+
+Batched-engine API: :func:`success_prob_all_prefixes` and :func:`allocate`
+accept any leading batch axes — ``p_good`` of shape (..., n) yields loads of
+shape (..., n) and ``i_star`` of shape (...,).  One batched call costs one
+DP pass over the whole batch (the ``repro.kernels.poisson_binomial``
+dispatcher picks the Pallas kernel on TPU and the batched ``lax.scan`` DP
+elsewhere), which is what lets the throughput engine allocate for every
+(scenario x seed x strategy) row of a Monte-Carlo sweep simultaneously.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class EstimatorState(NamedTuple):
@@ -45,13 +54,14 @@ def init_estimator(n: int) -> EstimatorState:
     )
 
 
-def update_estimator(state: EstimatorState, observed: jnp.ndarray) -> EstimatorState:
-    """Phase (4): fold one round's observed states (n,) into the counts.
+def transition_onehot(prev: jnp.ndarray, cur: jnp.ndarray) -> jnp.ndarray:
+    """One-hot (g->g, g->b, b->g, b->b) transition indicators, (..., 4) f32.
 
-    The first observation only sets ``prev_state`` (no transition yet).
+    Shared by the sequential estimator update and the engine's vectorised
+    cumsum replay (`throughput._lea_p_good_trajectory`) — they must stay the
+    same expression for the replay to be bit-identical.
     """
-    prev, cur = state.prev_state, observed.astype(jnp.int32)
-    inc = jnp.stack(
+    return jnp.stack(
         [
             (prev == 1) & (cur == 1),
             (prev == 1) & (cur == 0),
@@ -60,17 +70,31 @@ def update_estimator(state: EstimatorState, observed: jnp.ndarray) -> EstimatorS
         ],
         axis=-1,
     ).astype(jnp.float32)
+
+
+def smoothed_transitions(counts: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(p̂_gg, p̂_bb) from (..., 4) transition counts with add-one smoothing
+    (paper leaves t=0 behaviour open; Laplace smoothing avoids 0/0 and washes
+    out as counts grow).  Shared with the engine's vectorised replay."""
+    p_gg = (counts[..., 0] + 1.0) / (counts[..., 0] + counts[..., 1] + 2.0)
+    p_bb = (counts[..., 3] + 1.0) / (counts[..., 2] + counts[..., 3] + 2.0)
+    return p_gg, p_bb
+
+
+def update_estimator(state: EstimatorState, observed: jnp.ndarray) -> EstimatorState:
+    """Phase (4): fold one round's observed states (n,) into the counts.
+
+    The first observation only sets ``prev_state`` (no transition yet).
+    """
+    prev, cur = state.prev_state, observed.astype(jnp.int32)
+    inc = transition_onehot(prev, cur)
     counts = jnp.where(state.seen_prev, state.counts + inc, state.counts)
     return EstimatorState(counts=counts, prev_state=cur, seen_prev=jnp.asarray(True))
 
 
 def estimated_transitions(state: EstimatorState) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(p̂_gg, p̂_bb) with add-one smoothing (paper leaves t=0 behaviour open;
-    Laplace smoothing avoids 0/0 and washes out as counts grow)."""
-    c = state.counts
-    p_gg = (c[:, 0] + 1.0) / (c[:, 0] + c[:, 1] + 2.0)
-    p_bb = (c[:, 3] + 1.0) / (c[:, 2] + c[:, 3] + 2.0)
-    return p_gg, p_bb
+    """(p̂_gg, p̂_bb) of this estimator state (see :func:`smoothed_transitions`)."""
+    return smoothed_transitions(state.counts)
 
 
 def predicted_good_prob(state: EstimatorState) -> jnp.ndarray:
@@ -97,49 +121,86 @@ class LoadParams:
             raise ValueError("ell_g must exceed ell_b (otherwise allocation is trivial)")
 
 
-def success_prob_all_prefixes(p_good_sorted: jnp.ndarray, lp: LoadParams) -> jnp.ndarray:
-    """P̂(i~) for every i~ in 1..n, given p_good sorted descending.  (n,) float.
+def prefix_thresholds(lp: LoadParams) -> np.ndarray:
+    """w(i~) = ceil((K* - (n - i~) * ell_b) / ell_g) for i~ = 1..n  (eq. 7/8).
 
-    P̂(i~) = P[ Binom-mixture(top i~) >= w(i~) ],
-    w(i~)  = ceil((K* - (n - i~) * ell_b) / ell_g)   (eq. 7/8).
-
-    One O(n^2) DP: scan over workers, carry the Poisson-binomial pmf of the
-    good-worker count among the first i~ workers; read the tail per prefix.
+    Values <= 0 mean "always enough", > i~ mean "impossible".  Concrete
+    (numpy) because ``lp`` is static — the Pallas kernel bakes these in as
+    trace-time constants.
     """
-    n = lp.n
-    i_tilde = jnp.arange(1, n + 1)
-    # w(i~); values <= 0 mean "always enough", > i~ mean "impossible".
-    w = jnp.ceil((lp.kstar - (n - i_tilde) * lp.ell_b) / lp.ell_g).astype(jnp.int32)
-
-    def body(pmf, p):
-        # pmf over counts 0..n (length n+1); convolve one Bernoulli(p).
-        shifted = jnp.concatenate([jnp.zeros((1,), pmf.dtype), pmf[:-1]])
-        new = pmf * (1.0 - p) + shifted * p
-        return new, new
-
-    pmf0 = jnp.zeros((n + 1,), jnp.float32).at[0].set(1.0)
-    _, pmfs = jax.lax.scan(body, pmf0, p_good_sorted.astype(jnp.float32))  # (n, n+1)
-
-    counts = jnp.arange(n + 1)[None, :]
-    tail_mask = counts >= jnp.maximum(w, 0)[:, None]
-    tails = jnp.sum(pmfs * tail_mask, axis=-1)
-    # w > i~  -> infeasible -> probability 0 (eq. 7).
-    return jnp.where(w > i_tilde, 0.0, tails)
+    i_tilde = np.arange(1, lp.n + 1)
+    return np.ceil((lp.kstar - (lp.n - i_tilde) * lp.ell_b) / lp.ell_g).astype(np.int32)
 
 
-def allocate(p_good: jnp.ndarray, lp: LoadParams) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Phase (1): the LEA load assignment.
+def success_prob_all_prefixes(
+    p_good_sorted: jnp.ndarray, lp: LoadParams, *, impl: str | None = None
+) -> jnp.ndarray:
+    """P̂(i~) for every i~ in 1..n, given p_good sorted descending along the
+    last axis.  (..., n) in -> (..., n) out (any leading batch axes).
 
-    Returns ``(loads, i_star)`` where ``loads`` is the (n,) int32 allocation in
-    the *original worker order* (the i* workers with the largest p_good get
-    ell_g, the rest ell_b — Lemma 4.5), and ``i_star`` the argmax of P̂.
+    P̂(i~) = P[ Binom-mixture(top i~) >= w(i~) ]  with w from
+    :func:`prefix_thresholds`.  One O(n^2) DP over the whole batch, routed
+    through ``repro.kernels.poisson_binomial`` (``impl``: "pallas" / "ref" /
+    None = auto — Pallas on TPU, batched ``lax.scan`` DP elsewhere).
     """
-    order = jnp.argsort(-p_good)                      # descending
-    p_sorted = p_good[order]
-    probs = success_prob_all_prefixes(p_sorted, lp)   # (n,)
-    i_star = jnp.argmax(probs) + 1                    # in 1..n
-    ranks = jnp.argsort(order)                        # rank of each worker
-    loads = jnp.where(ranks < i_star, lp.ell_g, lp.ell_b).astype(jnp.int32)
+    from repro.kernels.poisson_binomial import success_tails
+
+    return success_tails(p_good_sorted, prefix_thresholds(lp), impl=impl)
+
+
+# Above this worker count, unrolling the O(n^2) pairwise rank loop bloats the
+# program; fall back to XLA sorts (the batch sizes that matter are small-n).
+_PAIRWISE_RANK_MAX_N = 64
+
+
+def _ranks_descending(p: jnp.ndarray) -> jnp.ndarray:
+    """Stable descending ranks: identical to argsort(argsort(-p)) per row.
+
+    rank_i = #{j : p_j > p_i} + #{j < i : p_j == p_i} — n unrolled passes of
+    element-wise compares over the batch, which XLA CPU runs ~20x faster than
+    two variadic sorts at the (rounds x batch) sizes the engine produces.
+    """
+    n = p.shape[-1]
+    idx = jnp.arange(n)
+    acc = jnp.zeros(p.shape, jnp.int32)
+    for j in range(n):
+        pj = p[..., j : j + 1]
+        acc = acc + (pj > p) + ((pj == p) & (idx > j))
+    return acc
+
+
+def _take_by_rank(p: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
+    """Values in rank order: out[..., r] = p at the row position with rank r.
+
+    Exact one-hot gather (the sum has a single non-zero term per slot), so it
+    equals take_along_axis with the descending argsort bit-for-bit.
+    """
+    n = p.shape[-1]
+    return jnp.stack(
+        [jnp.sum(jnp.where(ranks == r, p, 0.0), axis=-1) for r in range(n)], axis=-1
+    )
+
+
+def allocate(
+    p_good: jnp.ndarray, lp: LoadParams, *, impl: str | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Phase (1): the LEA load assignment, batched over leading axes.
+
+    ``p_good`` has shape (..., n).  Returns ``(loads, i_star)`` where
+    ``loads`` is the (..., n) int32 allocation in the *original worker order*
+    (per row, the i* workers with the largest p_good get ell_g, the rest
+    ell_b — Lemma 4.5), and ``i_star`` (...,) the argmax of P̂ per row.
+    """
+    if lp.n <= _PAIRWISE_RANK_MAX_N:
+        ranks = _ranks_descending(p_good)
+        p_sorted = _take_by_rank(p_good, ranks)
+    else:
+        order = jnp.argsort(-p_good, axis=-1)                   # descending
+        p_sorted = jnp.take_along_axis(p_good, order, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)                     # rank per worker
+    probs = success_prob_all_prefixes(p_sorted, lp, impl=impl)  # (..., n)
+    i_star = jnp.argmax(probs, axis=-1) + 1                     # in 1..n
+    loads = jnp.where(ranks < i_star[..., None], lp.ell_g, lp.ell_b).astype(jnp.int32)
     return loads, i_star
 
 

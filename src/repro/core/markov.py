@@ -55,3 +55,20 @@ def sample_trajectory(
 def speeds_from_states(states: jnp.ndarray, mu_g: float, mu_b: float) -> jnp.ndarray:
     """Map 0/1 states to evaluations-per-second speeds."""
     return jnp.where(states == 1, mu_g, mu_b)
+
+
+def t_step_transitions(p_gg, p_bb, t: int):
+    """Effective (p_gg, p_bb) of the t-step chain: P^t in closed form.
+
+    For a 2-state chain with eigenvalue lam = p_gg + p_bb - 1,
+    ``P^t[g,g] = pi_g + (1 - pi_g) lam^t`` (and symmetrically for b).  Used by
+    the Fig. 4 EC2 replay: applying ``t`` Markov transitions between requests
+    is equivalent to one transition of the t-step chain, which lets the
+    arrival-gap simulation run on the batched one-transition-per-round engine.
+    """
+    p_gg = jnp.asarray(p_gg, jnp.float32)
+    p_bb = jnp.asarray(p_bb, jnp.float32)
+    lam = p_gg + p_bb - 1.0
+    pi_g = stationary_good_prob(p_gg, p_bb)
+    lam_t = lam ** t
+    return pi_g + (1.0 - pi_g) * lam_t, (1.0 - pi_g) + pi_g * lam_t

@@ -1,62 +1,212 @@
-"""Timely-computation-throughput simulator (Defn. 2.1, Sec. 6.1).
+"""Timely-computation-throughput simulator (Defn. 2.1, Sec. 6.1) — batched engine.
 
 Simulates M rounds of deadline-constrained coded computation over n two-state
 Markov workers and measures R(d, eta) = (1/M) * sum_m N_m(d) for a strategy:
 
-  * ``lea``          — the paper's LEA (estimator + optimal allocator)
-  * ``static``       — paper's simulation benchmark: iid allocation from the
-                       *true stationary distribution*, resampled until the
-                       total load >= K* (Sec. 6.1)
-  * ``static_equal`` — paper's EC2 benchmark: ell_g/ell_b with prob 1/2 each
-  * ``oracle``       — genie-aided optimum of Thm. 4.6 (knows the Markov model
-                       and the previous state) — the upper bound R*(d)
+  * ``lea``           — the paper's LEA (estimator + optimal allocator)
+  * ``static``        — paper's simulation benchmark: iid allocation from the
+                        *true stationary distribution*, resampled until the
+                        total load >= K* (Sec. 6.1)
+  * ``static_equal``  — like ``static`` but with prob 1/2 each (resampled)
+  * ``static_single`` — paper's EC2 benchmark: ONE ell_g/ell_b draw with prob
+                        1/2 each, no resampling (used by the Fig. 4 replay)
+  * ``oracle``        — genie-aided optimum of Thm. 4.6 (knows the Markov model
+                        and the previous state) — the upper bound R*(d)
 
-The whole M-round loop is a single ``lax.scan`` (fast enough for M=1e5 on CPU).
+Batched-engine design
+---------------------
+The seed ran one ``lax.scan`` per (strategy, scenario, seed) whose body did a
+fresh O(n^2) allocator DP per round — M sequential DPs per simulation.  The
+engine instead vectorises over *rounds*: nothing in a round's allocation
+depends on the previous round's allocation, only on the worker-state
+trajectory, so
+
+  * the LEA estimator state is a running count of Markov transitions — an
+    exact ``cumsum`` over the trajectory (integer counts in float32, so
+    bit-identical to the sequential updates), giving every round's predicted
+    p_good at once;
+  * the genie's p_good is a one-round lag of the trajectory;
+  * ALL rounds x allocator-strategies then go through ONE batched
+    :func:`repro.core.lea.allocate` call — a single (A*M, n) Poisson-binomial
+    DP (the ``repro.kernels.poisson_binomial`` dispatcher: Pallas kernel on
+    TPU, batched ``lax.scan`` DP elsewhere);
+  * static strategies draw every round in a vectorised rejection-resampling
+    ``while_loop`` over the (M, n) batch, preserving each round's per-key
+    draw chain bit-for-bit;
+  * round scoring is one vectorised comparison over (S, M, n).
+
+The only remaining sequential computation is the Markov trajectory itself
+(a 3-op scan body).  :func:`sweep` vmaps the whole engine over leading axes
+of (key, p_gg, p_bb, mu_g, mu_b, deadline), so a scenarios x seeds Monte-
+Carlo grid compiles to one XLA computation.
+
+Failed static draws: the resampling cap (128 tries) can exhaust with total
+load < K*; such rounds are *explicitly* failed via the ``feasible`` flag
+returned by :func:`_static_loads_batch` (they could never succeed — total
+load < K* — but the accounting no longer relies on that implicit property).
+
+:func:`simulate` (single strategy) and :func:`compare` keep the seed call
+signatures; both wrap :func:`simulate_strategies` with identical key
+splitting, so results match the sequential seed path on the same key.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import lea as lea_mod
 from . import markov
-from .lea import EstimatorState, LoadParams
+from .lea import LoadParams
 
-STRATEGIES = ("lea", "static", "static_equal", "oracle")
-
-
-class _OraclePrev(NamedTuple):
-    """Scan carry for the genie strategy: last round's true states."""
-
-    state: jnp.ndarray
-    seen: jnp.ndarray
+STRATEGIES = ("lea", "static", "static_equal", "static_single", "oracle")
+_ALLOCATOR_STRATEGIES = ("lea", "oracle")
 
 
-def _static_loads(key: jax.Array, pi_g: jnp.ndarray, lp: LoadParams) -> jnp.ndarray:
-    """iid two-level loads from worker-wise good-probability ``pi_g``,
-    rejection-resampled (bounded) until total >= K* (paper Sec. 6.1)."""
+def _lea_p_good_trajectory(states: jnp.ndarray) -> jnp.ndarray:
+    """Every round's LEA-predicted p_good, (M, n) from the (M, n) trajectory.
+
+    Replays ``lea.update_estimator`` in closed form: the counts entering round
+    m are the transition tallies among ``states[0..m-1]`` — a shifted cumsum
+    of one-hot transition indicators (exact in float32: integer counts stay
+    below 2^24).  Round 0 has no observation and uses the seed's 0.5 fill.
+    """
+    rounds_total, n = states.shape
+    if rounds_total >= 2:
+        inc = lea_mod.transition_onehot(states[:-1], states[1:])  # (M-1, n, 4)
+        csum = jnp.cumsum(inc, axis=0)
+        zeros = jnp.zeros((1, n, 4), jnp.float32)
+        # counts before round m: m<2 -> 0, else transitions t=1..m-1 = csum[m-2]
+        counts = jnp.concatenate([zeros, zeros, csum[:-1]], axis=0)  # (M, n, 4)
+    else:
+        counts = jnp.zeros((rounds_total, n, 4), jnp.float32)
+    p_gg_hat, p_bb_hat = lea_mod.smoothed_transitions(counts)
+    prev_state = jnp.concatenate([states[:1], states[:-1]], axis=0)
+    p_good = jnp.where(prev_state == 1, p_gg_hat, 1.0 - p_bb_hat)
+    first = (jnp.arange(rounds_total) == 0)[:, None]
+    return jnp.where(first, 0.5, p_good)
+
+
+def _oracle_p_good_trajectory(
+    states: jnp.ndarray, p_gg: jnp.ndarray, p_bb: jnp.ndarray, pi_g: jnp.ndarray
+) -> jnp.ndarray:
+    """Genie p_good per round: exact conditional given last round's true state
+    (stationary distribution for round 0)."""
+    prev_state = jnp.concatenate([states[:1], states[:-1]], axis=0)
+    p_good = jnp.where(prev_state == 1, p_gg[None, :], 1.0 - p_bb[None, :])
+    rounds = states.shape[0]
+    first = (jnp.arange(rounds) == 0)[:, None]
+    return jnp.where(first, pi_g[None, :], p_good)
+
+
+def _static_loads_batch(
+    keys: jnp.ndarray, pi_g: jnp.ndarray, lp: LoadParams
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorised rejection resampling: one iid two-level draw chain per round.
+
+    ``keys`` is (M, ...) round keys; every round redraws from its own key
+    chain until its total load reaches K* (at most 128 tries), exactly the
+    per-round semantics of the seed's scalar while_loop — rounds that finish
+    early simply ignore later (masked) draws, so per-round results are
+    bit-identical.  Returns ``(loads (M, n), feasible (M,))``; ``feasible`` is
+    False iff a round exhausted the cap with total load < K* and must be
+    scored as an explicit failure.
+    """
+
+    def draw_one(k):
+        k2, sub = jax.random.split(k)
+        return k2, jax.random.uniform(sub, pi_g.shape)
+
+    def unfinished(loads):
+        return jnp.sum(loads, axis=-1) < lp.kstar
 
     def cond(carry):
         i, _, loads = carry
-        return (jnp.sum(loads) < lp.kstar) & (i < 128)
+        return jnp.any(unfinished(loads)) & (i < 128)
 
     def body(carry):
-        i, k, _ = carry
-        k, sub = jax.random.split(k)
-        draw = jax.random.uniform(sub, pi_g.shape) < pi_g
-        loads = jnp.where(draw, lp.ell_g, lp.ell_b).astype(jnp.int32)
-        return (i + 1, k, loads)
+        i, ks, loads = carry
+        ks2, us = jax.vmap(draw_one)(ks)
+        new = jnp.where(us < pi_g, lp.ell_g, lp.ell_b).astype(jnp.int32)
+        redo = unfinished(loads)[:, None]
+        return (i + 1, ks2, jnp.where(redo, new, loads))
 
-    init = (jnp.int32(0), key, jnp.zeros(pi_g.shape, jnp.int32))
+    rounds = keys.shape[0]
+    init = (jnp.int32(0), keys, jnp.zeros((rounds,) + pi_g.shape, jnp.int32))
     _, _, loads = jax.lax.while_loop(cond, body, init)
-    return loads
+    return loads, jnp.sum(loads, axis=-1) >= lp.kstar
 
 
-@partial(jax.jit, static_argnames=("strategy", "lp", "rounds"))
+@partial(jax.jit, static_argnames=("strategies", "lp", "rounds"))
+def simulate_strategies(
+    key: jax.Array,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+) -> jnp.ndarray:
+    """Run M rounds of ALL ``strategies`` over one shared worker trajectory.
+
+    Returns (rounds, len(strategies)) bool success indicators, one column per
+    strategy in the given order.  ``mu_g``/``mu_b``/``deadline`` may be traced
+    scalars (they are vmapped over by :func:`sweep`).
+    """
+    if not strategies:
+        raise ValueError("strategies must be non-empty")
+    for s in strategies:
+        if s not in STRATEGIES:
+            raise ValueError(f"unknown strategy {s!r}")
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
+    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    round_keys = jax.random.split(k_rounds, rounds)
+
+    # -- one batched allocator DP for every (allocator strategy, round) --
+    alloc_names = [s for s in _ALLOCATOR_STRATEGIES if s in strategies]
+    loads_by: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
+    if alloc_names:
+        p_rows = []
+        for s in alloc_names:
+            if s == "lea":
+                p_rows.append(_lea_p_good_trajectory(states))
+            else:
+                p_rows.append(_oracle_p_good_trajectory(states, p_gg, p_bb, pi_g))
+        stacked = jnp.stack(p_rows)                        # (A, M, n)
+        loads_all, _ = lea_mod.allocate(stacked, lp)       # one (A*M, n) DP
+        always = jnp.ones((rounds,), bool)
+        for j, s in enumerate(alloc_names):
+            loads_by[s] = (loads_all[j], always)
+
+    # -- static draws (same round key per strategy, as in the seed) --
+    if "static" in strategies:
+        loads_by["static"] = _static_loads_batch(round_keys, pi_g, lp)
+    if "static_equal" in strategies:
+        loads_by["static_equal"] = _static_loads_batch(
+            round_keys, jnp.full_like(pi_g, 0.5), lp
+        )
+    if "static_single" in strategies:
+        draw = jax.vmap(lambda k: jax.random.uniform(k, pi_g.shape))(round_keys)
+        loads_by["static_single"] = (
+            jnp.where(draw < 0.5, lp.ell_g, lp.ell_b).astype(jnp.int32),
+            jnp.ones((rounds,), bool),
+        )
+
+    # -- vectorised round scoring across strategies --
+    loads_mat = jnp.stack([loads_by[s][0] for s in strategies])    # (S, M, n)
+    feasible = jnp.stack([loads_by[s][1] for s in strategies])     # (S, M)
+    speeds = jnp.where(states == 1, mu_g, mu_b)                    # (M, n)
+    on_time = loads_mat.astype(jnp.float32) / speeds <= deadline + 1e-9
+    received = jnp.sum(jnp.where(on_time, loads_mat, 0), axis=-1)  # (S, M)
+    succ = (received >= lp.kstar) & feasible
+    return jnp.moveaxis(succ, 0, 1)                                # (M, S)
+
+
 def simulate(
     key: jax.Array,
     strategy: str,
@@ -68,53 +218,50 @@ def simulate(
     deadline: float,
     rounds: int,
 ) -> jnp.ndarray:
-    """Run M rounds; returns (rounds,) bool success indicators N_m(d)."""
+    """Run M rounds of one strategy; returns (rounds,) bool indicators N_m(d).
+
+    Thin wrapper over :func:`simulate_strategies`; kept for the sequential
+    seed API (and as the old-path baseline in benchmarks/bench_allocator.py).
+    """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}")
-    k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
-    pi_g = markov.stationary_good_prob(p_gg, p_bb)
-    round_keys = jax.random.split(k_rounds, rounds)
+    succ = simulate_strategies(
+        key, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies=(strategy,)
+    )
+    return succ[:, 0]
 
-    def lea_round(est: EstimatorState, xs):
-        _, s_m = xs
-        p_good = jnp.where(
-            est.seen_prev, lea_mod.predicted_good_prob(est), jnp.full_like(pi_g, 0.5)
-        )
-        loads, _ = lea_mod.allocate(p_good, lp)
-        ok = lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
-        est = lea_mod.update_estimator(est, s_m)
-        return est, ok
 
-    def static_round(carry, xs):
-        k, s_m = xs
-        loads = _static_loads(k, pi_g, lp)
-        return carry, lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+def sweep(
+    keys: jax.Array,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+) -> jnp.ndarray:
+    """Batched Monte-Carlo sweep: vmap the whole engine over leading axes.
 
-    def static_equal_round(carry, xs):
-        k, s_m = xs
-        loads = _static_loads(k, jnp.full_like(pi_g, 0.5), lp)
-        return carry, lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
+    Args:
+      keys: (B,) PRNG keys (one independent trajectory per row).
+      p_gg/p_bb: (B, n) per-row transition probabilities.
+      mu_g/mu_b/deadline: scalars or (B,) per-row values.
+      lp/rounds/strategies: static, shared across the batch (group sweep calls
+        by LoadParams when K* differs across scenarios).
 
-    def oracle_round(prev, xs):
-        _, s_m = xs
-        # genie: exact conditional good-probability given last round's state
-        p_good = jnp.where(prev.seen, jnp.where(prev.state == 1, p_gg, 1.0 - p_bb), pi_g)
-        loads, _ = lea_mod.allocate(p_good, lp)
-        ok = lea_mod.round_success(loads, s_m, lp, mu_g, mu_b, deadline)
-        return _OraclePrev(state=s_m, seen=jnp.asarray(True)), ok
-
-    xs = (round_keys, states)
-    if strategy == "lea":
-        _, succ = jax.lax.scan(lea_round, lea_mod.init_estimator(lp.n), xs)
-    elif strategy == "static":
-        _, succ = jax.lax.scan(static_round, jnp.int32(0), xs)
-    elif strategy == "static_equal":
-        _, succ = jax.lax.scan(static_equal_round, jnp.int32(0), xs)
-    else:
-        init = _OraclePrev(state=jnp.zeros_like(p_gg, dtype=jnp.int32), seen=jnp.asarray(False))
-        _, succ = jax.lax.scan(oracle_round, init, xs)
-    return succ
+    Returns (B, rounds, len(strategies)) bool success indicators.
+    """
+    strategies = tuple(strategies)   # lists would fail jit's static-arg hashing
+    b = p_gg.shape[0]
+    mu_g = jnp.broadcast_to(jnp.asarray(mu_g, jnp.float32), (b,))
+    mu_b = jnp.broadcast_to(jnp.asarray(mu_b, jnp.float32), (b,))
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (b,))
+    fn = partial(simulate_strategies, lp=lp, rounds=rounds, strategies=strategies)
+    return jax.vmap(
+        lambda k, pg, pb, mg, mb, d: fn(k, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d)
+    )(keys, p_gg, p_bb, mu_g, mu_b, deadline)
 
 
 def timely_throughput(successes: jnp.ndarray) -> float:
@@ -133,9 +280,12 @@ def compare(
     rounds: int,
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
 ) -> dict[str, float]:
-    """Throughput for several strategies on a *shared* worker trajectory."""
-    out = {}
-    for s in strategies:
-        succ = simulate(key, s, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds)
-        out[s] = timely_throughput(succ)
-    return out
+    """Throughput for several strategies on a *shared* worker trajectory.
+
+    All strategies now run in ONE compiled computation (the seed looped a
+    separate per-round ``lax.scan`` per strategy over the same trajectory).
+    """
+    succ = simulate_strategies(
+        key, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies=tuple(strategies)
+    )
+    return {s: timely_throughput(succ[:, j]) for j, s in enumerate(strategies)}

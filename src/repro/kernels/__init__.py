@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the compute hot spots.
 
-  * ``lagrange_encode`` — LCC encode/decode GEMM (generator resident in VMEM)
-  * ``coded_gradient``  — fused worker-side degree-2 evaluation X~^T(X~W - Y)
-  * ``flash_attention`` — causal/SWA GQA online-softmax attention
+  * ``lagrange_encode``   — LCC encode/decode GEMM (generator resident in VMEM)
+  * ``coded_gradient``    — fused worker-side degree-2 evaluation X~^T(X~W - Y)
+  * ``flash_attention``   — causal/SWA GQA online-softmax attention
+  * ``poisson_binomial``  — batched EA-allocator prefix-tail DP (B, n)->(B, n)
 
 Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd wrapper with CPU-interpret fallback) and ``ref.py`` (pure-jnp oracle).

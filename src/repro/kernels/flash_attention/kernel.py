@@ -29,6 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 _LANES = 128
 
+# jax 0.4.x names this TPUCompilerParams; newer releases rename it to
+# CompilerParams — accept either so the kernel tracks both.
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or getattr(
+    pltpu, "CompilerParams"
+)
+
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref,
@@ -149,7 +155,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, _LANES), jnp.float32),
             pltpu.VMEM((bq, _LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

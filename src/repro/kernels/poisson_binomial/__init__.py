@@ -1,0 +1,1 @@
+from .ops import success_tails, success_tails_pallas, success_tails_ref  # noqa: F401

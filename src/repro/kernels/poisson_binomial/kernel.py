@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: batched Poisson-binomial prefix tails in one VMEM pass.
+
+The EA allocator (eq. 7/8) needs, for every prefix i~ of a descending-sorted
+probability vector, the tail P[count >= w(i~)] of the Poisson-binomial pmf of
+the first i~ Bernoullis.  The seed computed this with an O(n^2) ``lax.scan``
+per vector; here the whole DP runs for a *batch* of vectors at once:
+
+  * grid over batch tiles only — each kernel instance owns a (bb, n_pad)
+    probability tile and keeps the full (bb, c_pad) pmf resident in VMEM
+    registers for all n convolution steps (n <= a few hundred in every
+    deployed config, so the working set is a few hundred KB);
+  * the worker loop is unrolled at trace time (n is static), so each step is
+    a pure VPU shift-multiply-add over the batch tile — no scalar control
+    flow on the device;
+  * the thresholds w(i~) depend only on static ``LoadParams`` and are baked
+    in as Python constants (no SMEM traffic, feasibility ``w > i~`` and the
+    ``max(w, 0)`` clamp are resolved at trace time);
+  * lanes are padded to 128 (pmf counts axis and prefix axis), MXU is never
+    touched — this is a pure VPU kernel.
+
+``ref.success_tails_ref`` (the seed ``lax.scan`` DP) is the interpret-mode
+oracle; on CPU the ops dispatcher routes to the ref path and the Pallas
+kernel is exercised with ``interpret=True`` in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+
+
+def _pb_kernel(probs_ref, out_ref, *, n: int, w: tuple[int, ...]):
+    probs = probs_ref[...].astype(jnp.float32)          # (bb, n_pad)
+    bb, n_pad = probs.shape
+    c_pad = _round_up(n + 1, _LANES)
+
+    counts = jax.lax.broadcasted_iota(jnp.int32, (bb, c_pad), 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bb, n_pad), 1)
+    pmf = (counts == 0).astype(jnp.float32)             # point mass at count 0
+    out = jnp.zeros((bb, n_pad), jnp.float32)
+
+    for i in range(n):
+        p_i = probs[:, i : i + 1]                       # (bb, 1), static slice
+        shifted = jnp.concatenate(
+            [jnp.zeros((bb, 1), jnp.float32), pmf[:, :-1]], axis=1
+        )
+        pmf = pmf * (1.0 - p_i) + shifted * p_i
+        if w[i] > i + 1:                                # infeasible prefix
+            continue                                    # (out stays 0)
+        # static slice to counts 0..n: summing the padded lanes too would pick
+        # a different XLA reduction tree and break bit-equality with the ref DP
+        tail = jnp.sum(
+            jnp.where(counts[:, : n + 1] >= max(w[i], 0), pmf[:, : n + 1], 0.0),
+            axis=1, keepdims=True,
+        )                                               # (bb, 1)
+        out = jnp.where(cols == i, tail, out)
+
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("w", "block_b", "interpret"))
+def success_tails_pallas(
+    probs: jnp.ndarray,
+    w: tuple[int, ...],
+    *,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(B, n) descending-sorted probabilities -> (B, n) prefix tails.
+
+    ``w`` must be a static tuple of n ints (from ``lea.prefix_thresholds``).
+    """
+    b, n = probs.shape
+    assert len(w) == n, (len(w), n)
+    bb = min(block_b, _round_up(b, 8))
+    b_pad = _round_up(b, bb)
+    n_pad = _round_up(n, _LANES)
+    probs_p = jnp.pad(probs.astype(jnp.float32), ((0, b_pad - b), (0, n_pad - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_pb_kernel, n=n, w=tuple(int(v) for v in w)),
+        grid=(b_pad // bb,),
+        in_specs=[pl.BlockSpec((bb, n_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(probs_p)
+    return out[:b, :n]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m

@@ -1,0 +1,55 @@
+"""Dispatcher for the batched Poisson-binomial prefix-tail computation.
+
+``success_tails`` is the single entry point the allocator uses:
+
+  * ``impl="pallas"`` — the VMEM-tiled batch kernel (TPU; ``interpret=True``
+    on CPU for testing).  Requires concrete thresholds (they are baked into
+    the kernel as static constants).
+  * ``impl="ref"``    — the seed ``lax.scan`` DP, batched over leading axes.
+    This is the XLA path used on CPU/GPU and the oracle the kernel is tested
+    against.
+  * ``impl=None``     — pallas on TPU, ref elsewhere.
+
+Any leading batch shape is accepted; rows are flattened to (B, n) for the
+kernel and reshaped back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import success_tails_pallas
+from .ref import success_tails_ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def success_tails(
+    probs: jnp.ndarray,
+    w,
+    *,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(..., n) descending-sorted probabilities -> (..., n) prefix tails."""
+    if impl is None:
+        impl = _default_impl()
+    if impl == "ref":
+        return success_tails_ref(probs, jnp.asarray(w, jnp.int32))
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    w_static = tuple(int(v) for v in np.asarray(w).reshape(-1))
+    batch_shape = probs.shape[:-1]
+    n = probs.shape[-1]
+    flat = probs.reshape((-1, n)) if batch_shape else probs.reshape((1, n))
+    out = success_tails_pallas(flat, w_static, interpret=interpret)
+    return out.reshape(batch_shape + (n,))
+
+
+__all__ = ["success_tails", "success_tails_pallas", "success_tails_ref"]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the batched Poisson-binomial prefix-tail DP.
+
+This is the seed implementation of ``core.lea.success_prob_all_prefixes``
+generalised to arbitrary leading batch axes: a single ``lax.scan`` over the
+worker axis convolves one Bernoulli at a time into the carried pmf, and the
+tail P[count >= w(i~)] is read off after every prefix.  The element-wise float
+operations are identical to the original unbatched scan, so per-row results
+are bit-for-bit equal to the seed allocator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def success_tails_ref(probs: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Batched prefix success probabilities.
+
+    Args:
+      probs: (..., n) success probabilities, each row sorted descending.
+      w: (n,) int32 thresholds w(i~) for prefixes i~ = 1..n; entries with
+         ``w > i~`` are infeasible and score 0, entries ``<= 0`` always succeed.
+
+    Returns:
+      (..., n) float32 — P[Poisson-binomial(top i~ of row) >= w(i~)].
+    """
+    probs = jnp.asarray(probs, jnp.float32)
+    w = jnp.asarray(w, jnp.int32)
+    n = probs.shape[-1]
+    batch_shape = probs.shape[:-1]
+    counts = jnp.arange(n + 1)
+
+    def body(pmf, xs):
+        # pmf over counts 0..n (..., n+1); convolve one Bernoulli(p) per row,
+        # then stream out this prefix's tail (materialising all n pmfs would
+        # cost O(n^2 * batch) memory — the engine batches over every round of
+        # a Monte-Carlo sweep, so batch can be millions of rows).
+        p, w_i = xs
+        shifted = jnp.concatenate([jnp.zeros_like(pmf[..., :1]), pmf[..., :-1]], axis=-1)
+        new = pmf * (1.0 - p)[..., None] + shifted * p[..., None]
+        tail_mask = counts >= jnp.maximum(w_i, 0)
+        tail = jnp.sum(new * tail_mask, axis=-1)
+        return new, tail
+
+    pmf0 = jnp.zeros(batch_shape + (n + 1,), jnp.float32).at[..., 0].set(1.0)
+    _, tails = jax.lax.scan(body, pmf0, (jnp.moveaxis(probs, -1, 0), w))  # (n, ...)
+
+    tails = jnp.moveaxis(tails, 0, -1)                              # (..., n)
+    i_tilde = jnp.arange(1, n + 1)
+    return jnp.where(w > i_tilde, 0.0, tails)

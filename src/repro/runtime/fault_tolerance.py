@@ -23,6 +23,7 @@ observation hook is per-host wall-clock completion times.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable
 
 import jax
@@ -32,6 +33,21 @@ import numpy as np
 from repro.core import lea
 from repro.core.lagrange import CodeSpec
 from repro.core.markov import step_states, initial_states
+
+
+@partial(jax.jit, static_argnames=("lp",))
+def _plan_round(est: lea.EstimatorState, live: jnp.ndarray, lp: lea.LoadParams):
+    """Phase (1) as one compiled computation: predicted p_good (dead workers
+    forced bad) -> batched allocate -> dead workers get zero load."""
+    p_good = jnp.where(
+        est.seen_prev, lea.predicted_good_prob(est), jnp.full((lp.n,), 0.5)
+    )
+    p_good = jnp.where(live, p_good, 0.0)
+    loads, i_star = lea.allocate(p_good, lp)
+    return jnp.where(live, loads, 0), i_star
+
+
+_update_estimator = jax.jit(lea.update_estimator)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,14 +142,10 @@ class CodedDataParallelExecutor:
         self.rounds += 1
         self._advance_network()
 
-        # (1) Load assignment from estimated state (dead workers forced bad)
-        p_good = np.asarray(
-            jnp.where(self.est.seen_prev, lea.predicted_good_prob(self.est), 0.5)
-        )
-        p_good = np.where(self.live, p_good, 0.0)
-        loads, _ = lea.allocate(jnp.asarray(p_good), lp)
-        loads = np.array(loads)          # writable host copy
-        loads[~self.live] = 0
+        # (1) Load assignment from estimated state (dead workers forced bad);
+        # one jitted call — predicted p_good + batched allocate fused.
+        loads_dev, _ = _plan_round(self.est, jnp.asarray(self.live), lp)
+        loads = np.array(loads_dev)      # writable host copy
 
         # (2) Local computation + (3) observation: deterministic speeds
         states = np.asarray(self._true_states)
@@ -151,7 +163,7 @@ class CodedDataParallelExecutor:
         success = bool(shard_covered.all())
 
         # (4) estimator update — completion times reveal the round's states
-        self.est = lea.update_estimator(self.est, jnp.asarray(states))
+        self.est = _update_estimator(self.est, jnp.asarray(states))
 
         info = {
             "success": success,
