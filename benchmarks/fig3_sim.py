@@ -3,38 +3,27 @@
 Setting (Sec. 6.1): n=15 workers, k=50 chunks, r=10, deg f=2 -> K*=99;
 mu=(10,3), d=1s.  Paper reports LEA/static improvements of 1.38x–17.5x.
 
-Runs on the batched engine: all three strategies share one trajectory in a
-single compiled computation per scenario (``core.throughput.compare``), with
-the same PRNG keys as the seed so throughput values are unchanged.  Also
-emits ``BENCH_fig3.json`` at the repo root — a perf baseline (rounds/sec,
-allocator us/call) for future PRs to compare against.
+A thin ``repro.sweeps`` registry invocation: the ``fig3`` scenario family
+expands the grid and the sweep executor runs all 4 scenarios as ONE compiled
+computation (the scenarios share one LoadParams group), on the same per-
+scenario PRNG keys as the PR-1 ``throughput.compare`` path — the emitted
+throughput values are bit-identical.  Also emits ``BENCH_fig3.json`` at the
+repo root — a perf baseline (rounds/sec, allocator us/call) for future PRs
+to compare against.
 """
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
-import jax
-import jax.numpy as jnp
-
+from repro import sweeps
 from repro.configs.paper_lea import SIM
-from repro.core.lagrange import CodeSpec
-from repro.core.lea import LoadParams
-from repro.core import throughput
 
 _BASELINE_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                               "BENCH_fig3.json")
 
-
-def _scenario_args(lp: LoadParams, rounds: int):
-    for i, (p_gg, p_bb) in enumerate(SIM.scenarios, 1):
-        yield i, (
-            jax.random.PRNGKey(i), lp,
-            jnp.full((SIM.n,), p_gg), jnp.full((SIM.n,), p_bb),
-            SIM.mu_g, SIM.mu_b, SIM.deadline, rounds,
-        )
+STRATEGIES = ("lea", "static", "oracle")
 
 
 def run(rounds: int | None = None, write_baseline: bool | None = None) -> list[dict]:
@@ -42,36 +31,34 @@ def run(rounds: int | None = None, write_baseline: bool | None = None) -> list[d
     # baseline — a smoke run with tiny `rounds` must not clobber it
     if write_baseline is None:
         write_baseline = rounds is None
-    spec = CodeSpec(SIM.n, SIM.r, SIM.k, SIM.deg_f)
-    lp = LoadParams(
-        n=SIM.n, kstar=spec.recovery_threshold,
-        ell_g=int(min(SIM.mu_g * SIM.deadline, SIM.r)),
-        ell_b=int(SIM.mu_b * SIM.deadline),
-    )
-    assert lp.kstar == 99
     rounds = rounds or SIM.rounds
-    strategies = ("lea", "static", "oracle")
+    scenarios = sweeps.expand("fig3", rounds=rounds)
+    lp = scenarios[0].lp
+    assert lp.kstar == 99
+
+    t0 = time.time()
+    res = sweeps.run(scenarios)
+    us_per_call = (time.time() - t0) * 1e6 / (len(scenarios) * rounds)
+
     rows, results = [], []
-    for i, args in _scenario_args(lp, rounds):
-        t0 = time.time()
-        res = throughput.compare(*args, strategies=strategies)
-        ratio = res["lea"] / max(res["static"], 1e-9)
+    for i, r in enumerate(res, 1):
+        tp = r.throughput
+        ratio = tp["lea"] / max(tp["static"], 1e-9)
         rows.append({
-            "name": f"fig3_scenario{i}",
-            "us_per_call": (time.time() - t0) * 1e6 / rounds,
+            "name": r.name,
+            "us_per_call": us_per_call,
             "derived": (
-                f"R_lea={res['lea']:.4f};R_static={res['static']:.4f};"
-                f"R_oracle={res['oracle']:.4f};ratio={ratio:.2f}x"
+                f"R_lea={tp['lea']:.4f};R_static={tp['static']:.4f};"
+                f"R_oracle={tp['oracle']:.4f};ratio={ratio:.2f}x"
             ),
         })
-        results.append({"scenario": i, **{f"R_{s}": res[s] for s in strategies},
+        results.append({"scenario": i, **{f"R_{s}": tp[s] for s in STRATEGIES},
                         "ratio_lea_static": ratio})
 
     if write_baseline:
         # warm steady-state pass (first pass above paid compilation)
         t0 = time.perf_counter()
-        for _, args in _scenario_args(lp, rounds):
-            throughput.compare(*args, strategies=strategies)
+        sweeps.run(scenarios)
         warm_s = time.perf_counter() - t0
         try:
             from benchmarks.bench_allocator import allocator_microbench
@@ -82,16 +69,14 @@ def run(rounds: int | None = None, write_baseline: bool | None = None) -> list[d
         baseline = {
             "bench": "fig3_sim",
             "rounds": rounds,
-            "scenarios": len(SIM.scenarios),
-            "strategies": list(strategies),
-            "rounds_per_sec": len(SIM.scenarios) * rounds / warm_s,
+            "scenarios": len(scenarios),
+            "strategies": list(STRATEGIES),
+            "rounds_per_sec": len(scenarios) * rounds / warm_s,
             "allocator_us_per_call_seed": us_old,
             "allocator_us_per_call_batched_row": us_new_row,
             "results": results,
         }
-        with open(_BASELINE_PATH, "w") as f:
-            json.dump(baseline, f, indent=2)
-            f.write("\n")
+        sweeps.write_manifest(_BASELINE_PATH, baseline)
     return rows
 
 

@@ -1,61 +1,36 @@
 """Paper Fig. 4 — EC2 experiments, simulated: 6 scenarios of the linear
-workload f(X_j) = X_j^T B with K*=50, shift-exponential arrivals T_c + Exp(lam).
+workload f(X_j) = X_j^T B with K* in {120, 100, 50}, shift-exponential
+arrivals T_c + Exp(lam).
 
-Hardware substitution (DESIGN §9): the t2.micro credit dynamics are replayed
-by the same two-state Markov speed model measured in the paper's Fig. 1
-(burst ~= 10x baseline).  Arrival gaps matter because the worker chain keeps
-mixing between requests: the seed applied round(gap/d) extra Markov
-transitions between consecutive rounds; the batched engine instead folds the
-gap into the chain itself — ``markov.t_step_transitions`` gives the exact
-t-step transition probabilities, so one engine round IS one request and the
-whole scenario runs as a single compiled computation
-(``core.throughput.compare``).  LEA's estimator observes exactly the t-step
-chain either way, so larger lambda degrades its one-step predictions exactly
-as slower request rates did on EC2.  The static benchmark is the paper's EC2
-one: a single ell_g/ell_b draw with probability 1/2 each (engine strategy
-``static_single``).  Speeds are normalized so a good worker clears its full
-store within the deadline and a bad one r/10 of it, i.e. mu = (ell_g, ell_b)
-with d = 1.
+A thin ``repro.sweeps`` registry invocation of the ``fig4`` family (see its
+docstring for the hardware substitution: t2.micro credit dynamics replayed by
+the measured two-state Markov chain, arrival gaps folded into the chain via
+``markov.t_step_transitions``, the paper's EC2 static benchmark as engine
+strategy ``static_single``).  The family's scenarios span three LoadParams
+groups (one per K*), so the sweep executor compiles three computations for
+the six scenarios — and uses the same per-scenario PRNG keys as the PR-1
+``throughput.compare`` path, so the emitted values are bit-identical.
 """
 
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.paper_lea import EC2
-from repro.core.lagrange import CodeSpec
-from repro.core import markov, throughput
-from repro.core.lea import LoadParams
-
-# credit-based chain estimated from Fig. 1-style traces
-P_GG, P_BB = 0.85, 0.6
+from repro import sweeps
 
 
 def run(rounds: int | None = None) -> list[dict]:
-    rows = []
     rounds = rounds or 400
-    strategies = ("lea", "static_single")
-    for i, (xrows, k, lam, d) in enumerate(EC2.scenarios, 1):
-        spec = CodeSpec(EC2.n, EC2.r, k, EC2.deg_f)
-        # normalize speeds so a good worker clears its full store in time d
-        # and a bad worker manages r/10 of it (Fig. 1's 10x gap).
-        ell_g = EC2.r
-        ell_b = max(1, EC2.r // 10)
-        lp = LoadParams(n=EC2.n, kstar=spec.recovery_threshold,
-                        ell_g=ell_g, ell_b=ell_b)
-        gap = max(1, int(round((30.0 + lam) / (10 * d))))
-        p_gg_t, p_bb_t = markov.t_step_transitions(P_GG, P_BB, gap)
-        t0 = time.time()
-        res = throughput.compare(
-            jax.random.PRNGKey(i), lp,
-            jnp.full((EC2.n,), p_gg_t), jnp.full((EC2.n,), p_bb_t),
-            float(ell_g), float(ell_b), 1.0, rounds,
-            strategies=strategies,
-        )
-        r_lea, r_static = res["lea"], res["static_single"]
+    scenarios = sweeps.expand("fig4", rounds=rounds)
+
+    t0 = time.time()
+    res = sweeps.run(scenarios)
+    us_per_call = (time.time() - t0) * 1e6 / (len(scenarios) * 2 * rounds)
+
+    rows = []
+    for r in res:
+        m = r.scenario.meta_dict()
+        r_lea, r_static = r.throughput["lea"], r.throughput["static_single"]
         if r_static > 0:
             ratio = f"{r_lea / r_static:.2f}x"
         else:
@@ -64,10 +39,11 @@ def run(rounds: int | None = None) -> list[dict]:
             # so its static floor is higher) — report the floor explicitly.
             ratio = "inf(static~0)"
         rows.append({
-            "name": f"fig4_scenario{i}",
-            "us_per_call": (time.time() - t0) * 1e6 / (2 * rounds),
+            "name": r.name,
+            "us_per_call": us_per_call,
             "derived": (
-                f"rows={xrows};k={k};lam={lam};d={d};Kstar={lp.kstar};"
+                f"rows={m['rows']};k={m['k']};lam={m['lam']};d={m['d']};"
+                f"Kstar={r.scenario.lp.kstar};"
                 f"R_lea={r_lea:.4f};R_static={r_static:.4f};ratio={ratio}"
             ),
         })

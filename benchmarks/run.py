@@ -9,6 +9,9 @@ Tables:
   fig3_sim         paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)
   fig4_ec2         paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)
   table_kstar      recovery-threshold table (eqs. 15/16)
+  sweep_smoke      repro.sweeps gate: tiny hetero-K* registry grid, sharded
+                   over 8 forced host devices + round-chunked, checked
+                   bit-exact vs the plain engine; refreshes BENCH_sweep.json
   bench_kernels    Pallas-kernel + XLA-path microbenchmarks
   bench_allocator  old (sequential seed) vs new (batched) engine + allocator
   coded_dp         beyond-paper: LEA-coded microbatch DP in the trainer
@@ -21,12 +24,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_allocator, bench_kernels, coded_dp_bench,
-                            fig3_sim, fig4_ec2, roofline, table_kstar)
+                            fig3_sim, fig4_ec2, roofline, sweep_smoke,
+                            table_kstar)
 
     suites = [
         ("fig3_sim", fig3_sim.run),
         ("fig4_ec2", fig4_ec2.run),
         ("table_kstar", table_kstar.run),
+        ("sweep_smoke", sweep_smoke.run),
         ("bench_kernels", bench_kernels.run),
         ("bench_allocator", bench_allocator.run),
         ("coded_dp", coded_dp_bench.run),

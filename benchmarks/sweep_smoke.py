@@ -1,0 +1,151 @@
+"""CI smoke gate for the ``repro.sweeps`` subsystem + BENCH_sweep.json.
+
+Runs a tiny heterogeneous-K* registry grid through the full production path
+— 8 forced host devices, a 1-D ``jax.sharding`` batch mesh, ``round_chunk``
+blocking, multi-seed rows — in a subprocess (XLA device-count flags must be
+set before jax initialises, and the parent harness has already imported
+jax), asserts the sharded/chunked output matches an unsharded/unchunked
+reference run bit-for-bit, and emits ``BENCH_sweep.json`` at the repo root
+with rows/sec and per-row allocator time so the perf trajectory covers the
+sweep subsystem alongside ``BENCH_fig3.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+_BASELINE_PATH = os.path.join(_ROOT, "BENCH_sweep.json")
+
+DEVICES = 8
+ROUNDS = 192
+ROUND_CHUNK = 48
+SEEDS = 2
+KS = (50, 80, 99)
+LAMS = (0.2, 0.7)
+
+_MARKER = "SWEEP_SMOKE_ROWS "
+
+
+def run() -> list[dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEVICES}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT] + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=_ROOT,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"sweep_smoke child failed:\n{proc.stdout}\n{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARKER):
+            return json.loads(line[len(_MARKER):])
+    raise RuntimeError(f"sweep_smoke child produced no rows:\n{proc.stdout}")
+
+
+def _child_main() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import sweeps
+    from repro.core import lea as lea_mod
+    from repro.core import throughput
+    from repro.launch.mesh import make_sweep_mesh
+
+    assert len(jax.devices()) == DEVICES, jax.devices()
+    mesh = make_sweep_mesh()
+
+    scenarios = sweeps.expand("hetero_kstar", ks=KS, lams=LAMS, rounds=ROUNDS)
+    groups = sweeps.build_groups(scenarios, seeds=SEEDS)
+
+    c0 = sweeps.compile_cache_size()
+    t0 = time.perf_counter()
+    succs = sweeps.run_groups(groups, mesh=mesh, round_chunk=ROUND_CHUNK)
+    cold_s = time.perf_counter() - t0
+    compiles = sweeps.compile_cache_size() - c0
+    assert compiles == len(groups) == len(KS), (compiles, len(groups))
+
+    # the smoke *gate*: production path == plain engine sweep, bit-for-bit
+    for g, s in zip(groups, succs):
+        ref = throughput.sweep(
+            g.batch.keys, g.lp, g.batch.p_gg, g.batch.p_bb,
+            g.batch.mu_g, g.batch.mu_b, g.batch.deadline,
+            g.rounds, strategies=g.strategies,
+        )
+        np.testing.assert_array_equal(s, np.asarray(ref))
+
+    # warm steady-state rows/sec (simulated rounds per wall second)
+    t0 = time.perf_counter()
+    sweeps.run_groups(groups, mesh=mesh, round_chunk=ROUND_CHUNK)
+    warm_s = time.perf_counter() - t0
+    total_rows = sum(g.batch.rows for g in groups)
+    rows_per_sec = total_rows * ROUNDS / warm_s
+
+    # per-row allocator time inside one batched allocate (the sweep hot path)
+    lp = groups[0].lp
+    p = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (4096, lp.n)), jnp.float32)
+    alloc = jax.jit(lambda q: lea_mod.allocate(q, lp)[0])
+    alloc(p).block_until_ready()
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        alloc(p).block_until_ready()
+    allocator_us_per_row = (time.perf_counter() - t0) / reps / p.shape[0] * 1e6
+
+    results = sweeps.summarize(groups, succs, scenario_order=scenarios)
+    doc = sweeps.manifest(
+        results,
+        bench="sweep_smoke",
+        extra={
+            "devices": DEVICES,
+            "mesh_axes": list(mesh.axis_names),
+            "seeds": SEEDS,
+            "rounds": ROUNDS,
+            "round_chunk": ROUND_CHUNK,
+            "groups": len(groups),
+            "group_compiles": compiles,
+            "batch_rows": total_rows,
+            "rows_per_sec": rows_per_sec,
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "allocator_us_per_row": allocator_us_per_row,
+        },
+    )
+    sweeps.write_manifest(_BASELINE_PATH, doc)
+
+    rows = [{
+        "name": "sweep_smoke",
+        "us_per_call": warm_s * 1e6 / (total_rows * ROUNDS),
+        "derived": (
+            f"devices={DEVICES};groups={len(groups)};rows={total_rows};"
+            f"rounds={ROUNDS};chunk={ROUND_CHUNK};"
+            f"rows_per_sec={rows_per_sec:.0f};compiles={compiles};bitexact=1"
+        ),
+    }]
+    for r in results:
+        rows.append({
+            "name": f"sweep_{r.name}",
+            "us_per_call": warm_s * 1e6 / (total_rows * ROUNDS),
+            "derived": (
+                f"Kstar={r.scenario.lp.kstar};"
+                + ";".join(f"R_{s}={v:.4f}" for s, v in r.throughput.items())
+                + f";ratio={r.baseline_ratio:.2f}x"
+            ),
+        })
+    print(_MARKER + json.dumps(rows))
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for row in run():
+            print(row)

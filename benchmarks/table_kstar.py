@@ -1,34 +1,36 @@
-"""Recovery-threshold table (paper eqs. 15/16 + Sec. 3.1 worked examples)."""
+"""Recovery-threshold table (paper eqs. 15/16 + Sec. 3.1 worked examples).
+
+A thin registry invocation: the worked examples live in the ``kstar_table``
+scenario family (catalogue-only, never simulated); each row re-derives K*
+through ``CodeSpec`` and checks it against the paper's expected value stored
+in the scenario metadata.
+"""
 
 from __future__ import annotations
 
 import time
 
+from repro import sweeps
 from repro.core.lagrange import CodeSpec
 
 
-CASES = [
-    # (n, r, k, deg_f, expected K*, where in the paper)
-    (15, 10, 50, 2, 99, "Sec6.1 sim"),
-    (15, 10, 50, 1, 50, "Sec6.2 EC2 k=50"),
-    (15, 10, 100, 1, 100, "Sec6.2 EC2 k=100"),
-    (15, 10, 120, 1, 120, "Sec6.2 EC2 k=120"),
-    (3, 2, 2, 2, 3, "Sec3.1 example 1"),
-    (3, 2, 4, 2, 6, "Sec3.1 example 2 (repetition)"),
-]
-
-
 def run() -> list[dict]:
+    scenarios = sweeps.expand("kstar_table")
     rows = []
     t0 = time.time()
-    for n, r, k, deg, want, where in CASES:
-        spec = CodeSpec(n, r, k, deg)
+    for sc in scenarios:
+        m = sc.meta_dict()
+        spec = CodeSpec(m["n"], m["r"], m["k"], m["deg_f"])
         got = spec.recovery_threshold
-        assert got == want, (where, got, want)
+        assert got == m["expect_kstar"] == sc.lp.kstar, (m["where"], got, m)
+        assert spec.mode == m["mode"], (m["where"], spec.mode, m["mode"])
         rows.append({
-            "name": f"kstar_{where.replace(' ', '_')}",
-            "us_per_call": (time.time() - t0) * 1e6 / len(CASES),
-            "derived": f"n={n};r={r};k={k};deg={deg};Kstar={got};mode={spec.mode}",
+            "name": sc.name,
+            "us_per_call": (time.time() - t0) * 1e6 / len(scenarios),
+            "derived": (
+                f"n={m['n']};r={m['r']};k={m['k']};deg={m['deg_f']};"
+                f"Kstar={got};mode={spec.mode}"
+            ),
         })
     return rows
 

@@ -8,17 +8,27 @@ Each round evaluates the gradient f(X_j, y_j) = X_j^T (X_j w - y_j) on
 Lagrange-encoded data; rounds that miss the deadline are lost (no update).
 LEA learns the workers' Markov dynamics and sustains a much higher timely
 throughput, so it converges while the static allocation starves.
+
+The whole simulation side runs on the PR-1 batched engine: ONE
+``throughput.rollout`` call samples the trajectory and allocates every
+round for both strategies (a single batched allocator DP), and round
+success is one vectorised comparison — the seed-era per-round
+estimator/update/allocate Python loop is gone.  Only the gradient-descent
+recursion itself (w_{m+1} depends on w_m) runs round-by-round, decoding
+through a memoised ``DecodeCache``.
+
+Smoke knob: REPRO_EXAMPLE_ROUNDS overrides the round count (CI gate).
 """
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CodeSpec, LoadParams, allocate, coded_linear_gradient,
-                        encode_dataset, init_estimator, predicted_good_prob,
-                        round_success, update_estimator)
-from repro.core.markov import initial_states, step_states
-from repro.kernels.coded_gradient import coded_gradient
+from repro.core import (CodeSpec, DecodeCache, LoadParams,
+                        coded_linear_gradient, encode_dataset)
+from repro.core import throughput
 
 # NOTE on k: the decode interpolates a degree-(k-1)*2 polynomial; over the
 # reals in float32 that is well-conditioned up to k ~ 10 (the paper works in
@@ -27,8 +37,9 @@ from repro.kernels.coded_gradient import coded_gradient
 N, R, K = 10, 6, 8
 MU_G, MU_B, D = 6.0, 1.0, 1.0
 P_GG, P_BB = 0.85, 0.7
-ROUNDS = 120
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "120"))
 ROWS, COLS = 20, 12
+STRATEGIES = ("lea", "static_equal")   # paper's iid prob-1/2 static benchmark
 
 spec = CodeSpec(N, R, K, deg_f=2)
 lp = LoadParams(n=N, kstar=spec.recovery_threshold,
@@ -42,39 +53,35 @@ y_chunks = x_chunks @ w_true + 0.01 * rng.normal(size=(K, ROWS))
 coded = encode_dataset(spec, jnp.asarray(x_chunks, jnp.float32),
                        jnp.asarray(y_chunks, jnp.float32))
 
+# -- one engine rollout: trajectory + every round's loads for BOTH strategies
+states, loads, feasible = throughput.rollout(
+    jax.random.PRNGKey(0), lp, jnp.full((N,), P_GG), jnp.full((N,), P_BB),
+    ROUNDS, strategies=STRATEGIES,
+)
+success = throughput.score_rollout(states, loads, feasible, lp,
+                                   MU_G, MU_B, D)                  # (M, S)
+states_h, loads_h, success_h = (np.asarray(states), np.asarray(loads),
+                                np.asarray(success))
 
-def run(strategy: str, seed: int = 0):
-    key = jax.random.PRNGKey(seed)
-    key, k0 = jax.random.split(key)
-    states = initial_states(k0, jnp.full((N,), P_GG), jnp.full((N,), P_BB))
-    est = init_estimator(N)
+
+def descend(strategy: str):
+    """Gradient descent over the successful rounds of one strategy."""
+    j = STRATEGIES.index(strategy)
+    cache = DecodeCache(spec)
     w = jnp.zeros((COLS,), jnp.float32)
     lr = 2e-2 / (K * ROWS)
     hits, losses = 0, []
     for m in range(ROUNDS):
-        key, k1, k2 = jax.random.split(key, 3)
-        states = step_states(k1, states, jnp.full((N,), P_GG), jnp.full((N,), P_BB))
-        if strategy == "lea":
-            p_good = jnp.where(est.seen_prev, predicted_good_prob(est),
-                               jnp.full((N,), 0.5))
-            loads, _ = allocate(p_good, lp)
-        else:
-            draw = jax.random.uniform(k2, (N,)) < 0.5
-            loads = jnp.where(draw, lp.ell_g, lp.ell_b).astype(jnp.int32)
-        ok = bool(round_success(loads, states, lp, MU_G, MU_B, D))
-        if ok:
+        if success_h[m, j]:
             hits += 1
             # which encoded evaluations arrived (first loads[i] per worker)
             on_time = np.zeros(spec.nr, bool)
-            ln = np.asarray(loads)
-            st = np.asarray(states)
             for i in range(N):
-                done = ln[i] if (st[i] == 1 or ln[i] <= lp.ell_b) else 0
+                done = (loads_h[j, m, i]
+                        if (states_h[m, i] == 1 or loads_h[j, m, i] <= lp.ell_b)
+                        else 0)
                 on_time[i * R: i * R + done] = True
-            grad = coded_linear_gradient(
-                coded, w, on_time,
-                gradient_fn=lambda xt, yt, ww: coded_gradient(xt, yt, ww, interpret=True),
-            )
+            grad = coded_linear_gradient(coded, w, on_time, cache=cache)
             # float-decode sanity guard: an ill-conditioned received set (rare
             # under the strided alphas, possible under static's all-or-nothing
             # patterns) is treated as a failed round, like a checksum miss.
@@ -83,14 +90,13 @@ def run(strategy: str, seed: int = 0):
                 hits -= 1
             else:
                 w = w - lr * grad
-        est = update_estimator(est, states)
         losses.append(float(jnp.mean((jnp.asarray(x_chunks) @ w
                                       - jnp.asarray(y_chunks)) ** 2)))
     return hits / ROUNDS, w, losses
 
 
-tput_lea, w_lea, loss_lea = run("lea")
-tput_static, w_static, loss_static = run("static")
+tput_lea, w_lea, loss_lea = descend("lea")
+tput_static, w_static, loss_static = descend("static_equal")
 err_lea = float(np.linalg.norm(np.asarray(w_lea) - w_true) / np.linalg.norm(w_true))
 err_static = float(np.linalg.norm(np.asarray(w_static) - w_true) / np.linalg.norm(w_true))
 print(f"LEA    : timely throughput {tput_lea:.3f}, final loss {loss_lea[-1]:.4f}, "

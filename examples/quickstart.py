@@ -1,13 +1,21 @@
-"""Quickstart: one round of Lagrange-coded computation with LEA allocation.
+"""Quickstart: one round of Lagrange-coded computation with LEA allocation,
+then a whole paper-scale scenario grid in one line.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Encodes a dataset across 5 simulated workers, lets LEA pick the per-worker
-loads from its state estimates, drops the stragglers, and decodes the matmul
-from the K* fastest results.
+loads from its state estimates — using the batched allocate API: the
+estimator's predictions after round 1 AND after round 2 are stacked on a
+leading axis and solved by ONE allocator DP — drops the stragglers, and
+decodes the matmul from the K* fastest results.
+Finishes with the `repro.sweeps` one-liner that replays a slice of the
+paper's Fig. 3 Monte-Carlo grid.
+
+Smoke knob: REPRO_QUICKSTART_ROUNDS overrides the sweep length (CI gate).
 """
 
-import jax
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,14 +34,21 @@ w = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
 coded = encode_dataset(spec, x_chunks)       # "stored at the workers"
 
 # -- LEA: estimate worker states, allocate two-level loads -------------------
+# The PR-1 allocate API is batched over leading axes (the LoadParams are
+# static): the predictions after round 1 and after round 2 go through ONE
+# (2, n) allocator DP, showing how the engine allocates every round of a
+# Monte-Carlo sweep in a single batched call.
 lp = LoadParams(n=spec.n, kstar=spec.recovery_threshold, ell_g=2, ell_b=1)
 est = init_estimator(spec.n)
 est = update_estimator(est, jnp.asarray([1, 1, 0, 1, 0]))   # observed round 1
+p_good_r1 = predicted_good_prob(est)
 est = update_estimator(est, jnp.asarray([1, 0, 0, 1, 1]))   # observed round 2
 p_good = predicted_good_prob(est)
-loads, i_star = allocate(p_good, lp)
-print("estimated P[good]:", np.round(np.asarray(p_good), 3))
-print("LEA allocation   :", np.asarray(loads), f"(i*={int(i_star)})")
+loads_b, i_star_b = allocate(jnp.stack([p_good_r1, p_good]), lp)  # one DP
+for rnd, (p, ld, i) in enumerate(zip((p_good_r1, p_good), loads_b, i_star_b), 1):
+    print(f"after round {rnd}: P[good]~{np.round(np.asarray(p), 3)}"
+          f" -> loads {np.asarray(ld)} (i*={int(i)})")
+loads = loads_b[-1]                          # act on the freshest estimate
 
 # -- the network decides who is on time; master decodes from any K* ----------
 true_states = np.array([1, 0, 0, 1, 1])      # worker 1,2 slow this round
@@ -48,4 +63,13 @@ expected = jnp.einsum("krc,c->kr", x_chunks, w)
 err = float(jnp.max(jnp.abs(result - expected)))
 print(f"decoded f(X_j) = X_j @ w for all {spec.k} chunks, max err {err:.2e}")
 assert err < 1e-3
+
+# -- the paper's Fig. 3 grid, through the sweep subsystem, in one line -------
+from repro import sweeps
+
+rounds = int(os.environ.get("REPRO_QUICKSTART_ROUNDS", "500"))
+for r in sweeps.run("fig3", rounds=rounds):
+    print(f"{r.name}: " + " ".join(f"R_{s}={v:.3f}" for s, v in r.throughput.items())
+          + f"  lea/static={r.ratio['lea']:.2f}x")
+    assert r.throughput["lea"] >= r.throughput["static"]
 print("OK")

@@ -36,10 +36,14 @@ def step_states(
 
 
 @partial(jax.jit, static_argnames=("rounds",))
-def sample_trajectory(
+def sample_trajectory_scan(
     key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int
 ) -> jnp.ndarray:
-    """(rounds, n) int32 state trajectory, initial state from stationary dist."""
+    """Sequential reference: (rounds, n) trajectory via ``lax.scan``.
+
+    Kept as the oracle for :func:`sample_trajectory` (the associative-scan
+    path), which must reproduce it bit-for-bit.
+    """
     k0, k1 = jax.random.split(key)
     s0 = initial_states(k0, p_gg, p_bb)
 
@@ -49,6 +53,49 @@ def sample_trajectory(
 
     keys = jax.random.split(k1, rounds - 1)
     _, tail = jax.lax.scan(body, s0, keys)
+    return jnp.concatenate([s0[None], tail], axis=0)
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def sample_trajectory(
+    key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int
+) -> jnp.ndarray:
+    """(rounds, n) int32 state trajectory, initial state from stationary dist.
+
+    Parallel-prefix formulation: round t's transition is a map {0,1} -> {0,1}
+    fully determined by its uniform draw ``u_t`` —
+
+        f_t(s) = [u_t < p_gg]  if s == 1  else  [u_t < 1 - p_bb]
+
+    i.e. the pair ``(to1_if_bad, to1_if_good) = ([u_t < 1-p_bb], [u_t < p_gg])``
+    (exactly :func:`step_states` on both possible inputs).  Function
+    composition of such maps is associative, so the prefix compositions
+    ``f_t ∘ ... ∘ f_1`` come from one ``lax.associative_scan`` (O(log M)
+    depth instead of the M-step scan — the last sequential computation in the
+    batched Monte-Carlo engine).  Applying prefix t to the stationary draw s0
+    gives state t.  Every round consumes the same per-key uniform draw and the
+    composition is pure boolean selection, so trajectories are bit-identical
+    to :func:`sample_trajectory_scan` on the same key.
+    """
+    k0, k1 = jax.random.split(key)
+    s0 = initial_states(k0, p_gg, p_bb)
+    if rounds == 1:
+        return s0[None]
+
+    keys = jax.random.split(k1, rounds - 1)
+    u = jax.vmap(lambda k: jax.random.uniform(k, p_gg.shape))(keys)  # (M-1, n)
+    # f_t as a value table: out1[t] = f_t(good), out0[t] = f_t(bad)
+    out1 = (u < p_gg).astype(jnp.int32)
+    out0 = (u < (1.0 - p_bb)).astype(jnp.int32)
+
+    def compose(f, g):
+        """(g ∘ f): apply the earlier map f first, then the later map g."""
+        f0, f1 = f
+        g0, g1 = g
+        return (jnp.where(f0 == 1, g1, g0), jnp.where(f1 == 1, g1, g0))
+
+    pref0, pref1 = jax.lax.associative_scan(compose, (out0, out1), axis=0)
+    tail = jnp.where(s0[None] == 1, pref1, pref0)
     return jnp.concatenate([s0[None], tail], axis=0)
 
 

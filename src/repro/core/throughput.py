@@ -35,10 +35,14 @@ trajectory, so
     draw chain bit-for-bit;
   * round scoring is one vectorised comparison over (S, M, n).
 
-The only remaining sequential computation is the Markov trajectory itself
-(a 3-op scan body).  :func:`sweep` vmaps the whole engine over leading axes
-of (key, p_gg, p_bb, mu_g, mu_b, deadline), so a scenarios x seeds Monte-
-Carlo grid compiles to one XLA computation.
+Nothing sequential remains: the Markov trajectory itself is a parallel
+prefix over composed transition draws (``markov.sample_trajectory``,
+``lax.associative_scan``).  :func:`sweep` vmaps the whole engine over
+leading axes of (key, p_gg, p_bb, mu_g, mu_b, deadline), so a scenarios x
+seeds Monte-Carlo grid compiles to one XLA computation; ``round_chunk``
+bounds peak memory at paper-scale M by blocking the per-round work
+(``lax.map``), bit-identically.  The ``repro.sweeps`` subsystem layers
+scenario registries, heterogeneous-K* grouping and mesh sharding on top.
 
 Failed static draws: the resampling cap (128 tries) can exhaust with total
 load < K*; such rounds are *explicitly* failed via the ``feasible`` flag
@@ -139,47 +143,43 @@ def _static_loads_batch(
     return loads, jnp.sum(loads, axis=-1) >= lp.kstar
 
 
-@partial(jax.jit, static_argnames=("strategies", "lp", "rounds"))
-def simulate_strategies(
-    key: jax.Array,
-    lp: LoadParams,
+def _p_good_rows(
+    states: jnp.ndarray,
     p_gg: jnp.ndarray,
     p_bb: jnp.ndarray,
-    mu_g,
-    mu_b,
-    deadline,
-    rounds: int,
-    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+    alloc_names: tuple[str, ...],
 ) -> jnp.ndarray:
-    """Run M rounds of ALL ``strategies`` over one shared worker trajectory.
-
-    Returns (rounds, len(strategies)) bool success indicators, one column per
-    strategy in the given order.  ``mu_g``/``mu_b``/``deadline`` may be traced
-    scalars (they are vmapped over by :func:`sweep`).
-    """
-    if not strategies:
-        raise ValueError("strategies must be non-empty")
-    for s in strategies:
-        if s not in STRATEGIES:
-            raise ValueError(f"unknown strategy {s!r}")
-    k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
+    """(A, M, n) predicted p_good per allocator strategy (cheap: O(A*M*n))."""
     pi_g = markov.stationary_good_prob(p_gg, p_bb)
-    round_keys = jax.random.split(k_rounds, rounds)
+    p_rows = []
+    for s in alloc_names:
+        if s == "lea":
+            p_rows.append(_lea_p_good_trajectory(states))
+        else:
+            p_rows.append(_oracle_p_good_trajectory(states, p_gg, p_bb, pi_g))
+    return jnp.stack(p_rows)
 
-    # -- one batched allocator DP for every (allocator strategy, round) --
+
+def _rollout_block(
+    states: jnp.ndarray,       # (m, n) — a block of rounds
+    round_keys: jnp.ndarray,   # (m, 2)
+    p_alloc: jnp.ndarray,      # (A, m, n) predicted p_good per allocator strat
+    pi_g: jnp.ndarray,         # (n,)
+    lp: LoadParams,
+    strategies: tuple[str, ...],
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Loads + feasibility for one block of rounds: (S, m, n), (S, m).
+
+    Per-round work only (allocator DP rows, static draw chains, scoring are
+    all row-independent), so any partition of the M rounds into blocks yields
+    bit-identical results — this is what makes the ``round_chunk`` path exact.
+    """
+    m = states.shape[0]
     alloc_names = [s for s in _ALLOCATOR_STRATEGIES if s in strategies]
     loads_by: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
     if alloc_names:
-        p_rows = []
-        for s in alloc_names:
-            if s == "lea":
-                p_rows.append(_lea_p_good_trajectory(states))
-            else:
-                p_rows.append(_oracle_p_good_trajectory(states, p_gg, p_bb, pi_g))
-        stacked = jnp.stack(p_rows)                        # (A, M, n)
-        loads_all, _ = lea_mod.allocate(stacked, lp)       # one (A*M, n) DP
-        always = jnp.ones((rounds,), bool)
+        loads_all, _ = lea_mod.allocate(p_alloc, lp)       # one (A*m, n) DP
+        always = jnp.ones((m,), bool)
         for j, s in enumerate(alloc_names):
             loads_by[s] = (loads_all[j], always)
 
@@ -194,17 +194,160 @@ def simulate_strategies(
         draw = jax.vmap(lambda k: jax.random.uniform(k, pi_g.shape))(round_keys)
         loads_by["static_single"] = (
             jnp.where(draw < 0.5, lp.ell_g, lp.ell_b).astype(jnp.int32),
-            jnp.ones((rounds,), bool),
+            jnp.ones((m,), bool),
         )
 
-    # -- vectorised round scoring across strategies --
-    loads_mat = jnp.stack([loads_by[s][0] for s in strategies])    # (S, M, n)
-    feasible = jnp.stack([loads_by[s][1] for s in strategies])     # (S, M)
-    speeds = jnp.where(states == 1, mu_g, mu_b)                    # (M, n)
+    loads_mat = jnp.stack([loads_by[s][0] for s in strategies])    # (S, m, n)
+    feasible = jnp.stack([loads_by[s][1] for s in strategies])     # (S, m)
+    return loads_mat, feasible
+
+
+def _score_block(
+    loads_mat: jnp.ndarray, feasible: jnp.ndarray, states: jnp.ndarray,
+    mu_g, mu_b, deadline, kstar: int,
+) -> jnp.ndarray:
+    """(m, S) success indicators from one block's loads + trajectory."""
+    speeds = jnp.where(states == 1, mu_g, mu_b)                    # (m, n)
     on_time = loads_mat.astype(jnp.float32) / speeds <= deadline + 1e-9
-    received = jnp.sum(jnp.where(on_time, loads_mat, 0), axis=-1)  # (S, M)
-    succ = (received >= lp.kstar) & feasible
-    return jnp.moveaxis(succ, 0, 1)                                # (M, S)
+    received = jnp.sum(jnp.where(on_time, loads_mat, 0), axis=-1)  # (S, m)
+    succ = (received >= kstar) & feasible
+    return jnp.moveaxis(succ, 0, 1)                                # (m, S)
+
+
+def _check_strategies(strategies: tuple[str, ...]) -> None:
+    if not strategies:
+        raise ValueError("strategies must be non-empty")
+    for s in strategies:
+        if s not in STRATEGIES:
+            raise ValueError(f"unknown strategy {s!r}")
+
+
+@partial(jax.jit, static_argnames=("strategies", "lp", "rounds", "round_chunk"))
+def simulate_strategies(
+    key: jax.Array,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+    round_chunk: int | None = None,
+) -> jnp.ndarray:
+    """Run M rounds of ALL ``strategies`` over one shared worker trajectory.
+
+    Returns (rounds, len(strategies)) bool success indicators, one column per
+    strategy in the given order.  ``mu_g``/``mu_b``/``deadline`` may be traced
+    scalars (they are vmapped over by :func:`sweep`).
+
+    ``round_chunk``: with the default ``None`` the whole (S, M, n) round block
+    is materialised at once; a positive value instead runs a ``lax.map`` over
+    ceil(M / round_chunk) blocks of rounds so peak memory is bounded by the
+    O(A * round_chunk * n^2)-ish allocator intermediates of ONE block — the
+    knob that fits paper-scale M = 1e5 sweeps (with large scenario batches on
+    top) in memory.  Only the cheap O(M*n) trajectory/estimator arrays span
+    all rounds.  Every quantity in a block depends on its own rounds only, so
+    chunked results are bit-identical to the unchunked path.
+    """
+    _check_strategies(strategies)
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
+    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    round_keys = jax.random.split(k_rounds, rounds)
+    alloc_names = tuple(s for s in _ALLOCATOR_STRATEGIES if s in strategies)
+    if alloc_names:
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names)    # (A, M, n)
+    else:  # keep the block signature uniform; zero-size axis costs nothing
+        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
+
+    def block(states_b, keys_b, p_alloc_b):
+        loads_mat, feasible = _rollout_block(
+            states_b, keys_b, p_alloc_b, pi_g, lp, strategies
+        )
+        return _score_block(
+            loads_mat, feasible, states_b, mu_g, mu_b, deadline, lp.kstar
+        )
+
+    if round_chunk is None or round_chunk >= rounds:
+        return block(states, round_keys, p_alloc)
+
+    if round_chunk <= 0:
+        raise ValueError("round_chunk must be positive")
+    pad = (-rounds) % round_chunk
+    n_blocks = (rounds + pad) // round_chunk
+    # pad with edge rounds: real rows are untouched (blocks are independent)
+    # and the pad rows behave like ordinary rounds, so no masked-lane hazards.
+    states_p = jnp.concatenate([states, states[-pad:]]) if pad else states
+    keys_p = jnp.concatenate([round_keys, round_keys[-pad:]]) if pad else round_keys
+    p_alloc_p = (
+        jnp.concatenate([p_alloc, p_alloc[:, -pad:]], axis=1) if pad else p_alloc
+    )
+    succ = jax.lax.map(
+        lambda xs: block(*xs),
+        (
+            states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
+            keys_p.reshape((n_blocks, round_chunk) + round_keys.shape[1:]),
+            jnp.moveaxis(
+                p_alloc_p.reshape(
+                    (p_alloc.shape[0], n_blocks, round_chunk, states.shape[1])
+                ),
+                0, 1,
+            ),
+        ),
+    )  # (n_blocks, round_chunk, S)
+    return succ.reshape((n_blocks * round_chunk,) + succ.shape[2:])[:rounds]
+
+
+@partial(jax.jit, static_argnames=("strategies", "lp", "rounds"))
+def rollout(
+    key: jax.Array,
+    lp: LoadParams,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static"),
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Trajectory + per-round loads without scoring — the engine's rollout.
+
+    Returns ``(states (M, n), loads (S, M, n), feasible (S, M))`` on exactly
+    the code path :func:`simulate_strategies` scores, so driving an
+    application round-by-round (examples/coded_regression.py) replays the
+    batched engine's allocations bit-for-bit instead of re-implementing the
+    seed-era per-round estimator/allocate loop.
+    """
+    _check_strategies(strategies)
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)
+    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    round_keys = jax.random.split(k_rounds, rounds)
+    alloc_names = tuple(s for s in _ALLOCATOR_STRATEGIES if s in strategies)
+    if alloc_names:
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names)
+    else:
+        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
+    loads_mat, feasible = _rollout_block(
+        states, round_keys, p_alloc, pi_g, lp, strategies
+    )
+    return states, loads_mat, feasible
+
+
+def score_rollout(
+    states: jnp.ndarray,
+    loads: jnp.ndarray,
+    feasible: jnp.ndarray,
+    lp: LoadParams,
+    mu_g,
+    mu_b,
+    deadline,
+) -> jnp.ndarray:
+    """Score a :func:`rollout`: (M, S) success indicators.
+
+    ``score_rollout(*rollout(...))`` equals :func:`simulate_strategies` on
+    the same key — it IS the engine's scoring stage, exposed for drivers that
+    need the per-round loads too (examples/coded_regression.py).
+    """
+    return _score_block(loads, feasible, states, mu_g, mu_b, deadline, lp.kstar)
 
 
 def simulate(
@@ -241,6 +384,7 @@ def sweep(
     deadline,
     rounds: int,
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+    round_chunk: int | None = None,
 ) -> jnp.ndarray:
     """Batched Monte-Carlo sweep: vmap the whole engine over leading axes.
 
@@ -249,7 +393,10 @@ def sweep(
       p_gg/p_bb: (B, n) per-row transition probabilities.
       mu_g/mu_b/deadline: scalars or (B,) per-row values.
       lp/rounds/strategies: static, shared across the batch (group sweep calls
-        by LoadParams when K* differs across scenarios).
+        by LoadParams when K* differs across scenarios — or use
+        ``repro.sweeps``, which does the grouping, sharding and chunking).
+      round_chunk: see :func:`simulate_strategies` — bounds peak memory by
+        processing rounds in blocks, bit-identically.
 
     Returns (B, rounds, len(strategies)) bool success indicators.
     """
@@ -258,7 +405,8 @@ def sweep(
     mu_g = jnp.broadcast_to(jnp.asarray(mu_g, jnp.float32), (b,))
     mu_b = jnp.broadcast_to(jnp.asarray(mu_b, jnp.float32), (b,))
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (b,))
-    fn = partial(simulate_strategies, lp=lp, rounds=rounds, strategies=strategies)
+    fn = partial(simulate_strategies, lp=lp, rounds=rounds, strategies=strategies,
+                 round_chunk=round_chunk)
     return jax.vmap(
         lambda k, pg, pb, mg, mb, d: fn(k, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d)
     )(keys, p_gg, p_bb, mu_g, mu_b, deadline)

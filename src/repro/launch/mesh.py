@@ -28,6 +28,22 @@ def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_sweep_mesh(num_devices: int | None = None):
+    """1-D ``("batch",)`` mesh for Monte-Carlo sweep sharding (repro.sweeps).
+
+    Sweep rows are embarrassingly parallel, so the executor lays the flat
+    (scenarios x seeds) batch over a single mesh axis spanning however many
+    devices exist (or the first ``num_devices``).  Works the same on a real
+    TPU slice and on forced host devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    avail = jax.devices()
+    n = len(avail) if num_devices is None else num_devices
+    if n < 1 or n > len(avail):
+        raise RuntimeError(f"sweep mesh needs 1..{len(avail)} devices, asked for {n}")
+    return jax.sharding.Mesh(np.asarray(avail[:n]), ("batch",))
+
+
 # Hardware constants for the roofline model (TPU v5e).
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

@@ -1,0 +1,39 @@
+"""repro.sweeps — sharded, chunked, registry-driven Monte-Carlo sweeps.
+
+The production sweep runner over the batched engine
+(:mod:`repro.core.throughput`):
+
+  * :mod:`~repro.sweeps.registry`  — named scenario families -> flat
+    :class:`ScenarioBatch` pytrees, grouped by static compile signature;
+  * :mod:`~repro.sweeps.scenarios` — the paper's Fig. 3 / Fig. 4 grids plus
+    deadline, bursty-chain, heterogeneous-K*, elastic-pool and
+    straggler-slack families;
+  * :mod:`~repro.sweeps.executor`  — one compiled computation per group,
+    sharded over a 1-D ``jax.sharding`` mesh, ``round_chunk``-bounded memory;
+  * :mod:`~repro.sweeps.results`   — throughputs, baseline ratios, CIs,
+    ``BENCH_*.json``-style manifests.
+
+The one-liner::
+
+    from repro import sweeps
+    from repro.launch.mesh import make_sweep_mesh
+
+    results = sweeps.run("hetero_kstar", seeds=4,
+                         mesh=make_sweep_mesh(), round_chunk=4096)
+    for r in results:
+        print(r.name, r.throughput, f"{r.baseline_ratio:.2f}x")
+"""
+
+from .executor import (compile_cache_size, run, run_group, run_groups,
+                       suggest_round_chunk)
+from .registry import (Scenario, ScenarioBatch, SweepGroup, build_groups,
+                       catalogue, describe, expand, family_names, register)
+from .results import (ScenarioResult, manifest, summarize, summarize_group,
+                      write_manifest)
+
+__all__ = [
+    "Scenario", "ScenarioBatch", "ScenarioResult", "SweepGroup",
+    "build_groups", "catalogue", "compile_cache_size", "describe", "expand",
+    "family_names", "manifest", "register", "run", "run_group", "run_groups",
+    "suggest_round_chunk", "summarize", "summarize_group", "write_manifest",
+]

@@ -1,0 +1,185 @@
+"""Sharded, grouped, chunked execution of scenario batches.
+
+One :class:`~repro.sweeps.registry.SweepGroup` = one compiled computation:
+:func:`_run_group` is the single jitted entry point, with ``(LoadParams,
+rounds, strategies, round_chunk)`` static — so a heterogeneous-K* grid costs
+one compile per K* group regardless of how many scenarios and seeds share it
+(:func:`compile_cache_size` exposes the cache counter the tests assert on).
+
+Sharding: sweep rows are embarrassingly parallel, so the executor lays the
+flat (scenarios x seeds) batch over the ``"batch"`` axis of a 1-D
+``jax.sharding`` mesh (:func:`repro.launch.mesh.make_sweep_mesh`) by
+device_put-ing every batch leaf with ``NamedSharding(mesh, P("batch"))`` —
+the jitted computation then partitions itself over the data.  Batches are
+padded (by repeating the last row) to a multiple of the mesh size; padded
+rows are sliced off the result, so sharded output is bit-identical to the
+unsharded :func:`repro.core.throughput.sweep` on the same keys.
+
+Memory: ``round_chunk`` is forwarded to the engine's ``lax.map``-over-round-
+blocks path so paper-scale M = 1e5 grids hold peak memory at one block.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core import throughput
+from repro.core.lea import LoadParams
+
+from .registry import ScenarioBatch, SweepGroup
+
+
+@partial(jax.jit, static_argnames=("lp", "rounds", "strategies", "round_chunk"))
+def _run_group(
+    keys: jnp.ndarray,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g: jnp.ndarray,
+    mu_b: jnp.ndarray,
+    deadline: jnp.ndarray,
+    *,
+    lp: LoadParams,
+    rounds: int,
+    strategies: tuple[str, ...],
+    round_chunk: int | None,
+) -> jnp.ndarray:
+    """(B,) rows -> (B, rounds, S) success indicators, one XLA computation."""
+    fn = partial(
+        throughput.simulate_strategies,
+        lp=lp, rounds=rounds, strategies=strategies, round_chunk=round_chunk,
+    )
+    return jax.vmap(
+        lambda k, pg, pb, mg, mb, d: fn(
+            k, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
+        )
+    )(keys, p_gg, p_bb, mu_g, mu_b, deadline)
+
+
+def compile_cache_size() -> int:
+    """Number of distinct group computations compiled so far (test hook)."""
+    return _run_group._cache_size()
+
+
+def _pad_batch(batch: ScenarioBatch, multiple: int) -> tuple[ScenarioBatch, int]:
+    """Pad rows to a multiple of the mesh size by repeating the last row.
+
+    Rows are vmapped independently, so pad rows cannot perturb real rows;
+    they are sliced off the result.
+    """
+    b = batch.rows
+    pad = (-b) % multiple
+    if pad == 0:
+        return batch, b
+    rep = jax.tree.map(
+        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]), batch
+    )
+    return rep, b
+
+
+def _shard_batch(batch: ScenarioBatch, mesh: Mesh) -> ScenarioBatch:
+    sh = NamedSharding(mesh, PartitionSpec("batch"))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), batch)
+
+
+def run_group(
+    group: SweepGroup,
+    *,
+    mesh: Mesh | None = None,
+    round_chunk: int | None = None,
+) -> np.ndarray:
+    """Execute one group; returns host (B, rounds, S) bool success array."""
+    if group.rounds < 1:
+        names = ", ".join(sc.name for sc in group.scenarios[:3])
+        raise ValueError(
+            f"group [{names}, ...] has rounds={group.rounds}; catalogue-only "
+            "scenario families (e.g. kstar_table) cannot be simulated"
+        )
+    batch, b = (group.batch, group.batch.rows)
+    if mesh is not None:
+        if tuple(mesh.axis_names) != ("batch",):
+            raise ValueError(f'sweep mesh must have axes ("batch",), got {mesh.axis_names}')
+        batch, b = _pad_batch(batch, mesh.devices.size)
+        batch = _shard_batch(batch, mesh)
+    succ = _run_group(
+        batch.keys, batch.p_gg, batch.p_bb, batch.mu_g, batch.mu_b,
+        batch.deadline,
+        lp=group.lp, rounds=group.rounds, strategies=group.strategies,
+        round_chunk=round_chunk,
+    )
+    return np.asarray(succ[:b])
+
+
+def run_groups(
+    groups: Sequence[SweepGroup],
+    *,
+    mesh: Mesh | None = None,
+    round_chunk: int | None = None,
+) -> list[np.ndarray]:
+    """Execute every group (one compile each); list aligned with ``groups``."""
+    return [run_group(g, mesh=mesh, round_chunk=round_chunk) for g in groups]
+
+
+def suggest_round_chunk(
+    group: SweepGroup,
+    *,
+    mesh: Mesh | None = None,
+    budget_bytes: int = 1 << 30,
+) -> int | None:
+    """A round_chunk that keeps one group's per-device block under ``budget``.
+
+    Per-block intermediates per (strategy, round) row: the O(n) DP/score
+    arrays (~(S + A) * chunk * n floats with ~8x temporary headroom) PLUS the
+    allocator's pairwise-rank elimination, whose unrolled compares
+    materialise O(A * chunk * n^2) floats for n <= ``_PAIRWISE_RANK_MAX_N``
+    — the term that dominates as n grows, exactly the memory-constrained
+    case this knob exists for.  Returns None when the whole run already fits.
+    """
+    from repro.core.lea import _PAIRWISE_RANK_MAX_N
+
+    b = group.batch.rows
+    if mesh is not None:
+        b = math.ceil(b / mesh.devices.size)
+    n = group.lp.n
+    s = len(group.strategies)
+    a = sum(1 for st in group.strategies if st in throughput._ALLOCATOR_STRATEGIES)
+    per_round = 4 * b * (8 * (s + 2) * n)
+    if n <= _PAIRWISE_RANK_MAX_N:
+        per_round += 4 * b * (a * n * n)
+    chunk = max(1, budget_bytes // max(per_round, 1))
+    return None if chunk >= group.rounds else int(chunk)
+
+
+def run(
+    family_or_scenarios,
+    *,
+    seeds: int = 1,
+    mesh: Mesh | None = None,
+    round_chunk: int | None = None,
+    **params,
+):
+    """The one-liner: expand -> group -> execute -> summarize.
+
+    ``family_or_scenarios`` is a registered family name (with ``**params``
+    forwarded to its expansion) or an iterable of
+    :class:`~repro.sweeps.registry.Scenario`.  Returns a list of
+    :class:`~repro.sweeps.results.ScenarioResult` in scenario order.
+    """
+    from . import results as results_mod
+    from .registry import build_groups, expand
+
+    if isinstance(family_or_scenarios, str):
+        scenarios = expand(family_or_scenarios, **params)
+    else:
+        if params:
+            raise TypeError("family params only apply to a named family")
+        scenarios = tuple(family_or_scenarios)
+    groups = build_groups(scenarios, seeds=seeds)
+    succs = run_groups(groups, mesh=mesh, round_chunk=round_chunk)
+    return results_mod.summarize(groups, succs, scenario_order=scenarios)

@@ -1,0 +1,234 @@
+"""Scenario registry — named, composable Monte-Carlo scenario families.
+
+A *scenario* is one fully-specified simulation cell: a two-state Markov
+worker model (per-worker ``p_gg``/``p_bb``), speeds, a deadline, a static
+:class:`~repro.core.lea.LoadParams`, the strategies to run and the baseline
+strategy that ratios are reported against.  A *family* is a registered
+function expanding keyword parameters into a tuple of scenarios — the
+paper's Fig. 3 / Fig. 4 grids are families, and so are the beyond-paper
+grids in :mod:`repro.sweeps.scenarios` (deadline sweeps, bursty chains,
+heterogeneous-K*, elastic worker-pool ramps, straggler-slack grids).
+
+:func:`build_groups` flattens (scenarios x seeds) into :class:`SweepGroup`s:
+one flat :class:`ScenarioBatch` pytree per static ``(LoadParams, rounds,
+strategies)`` signature, so the executor compiles ONE computation per group
+no matter how many scenarios share it (heterogeneous-K* grids compile once
+per K*, not once per scenario).
+
+PRNG discipline: a scenario with an explicit ``seed`` uses ``PRNGKey(seed)``
+for its first Monte-Carlo repeat — exactly the key the paper benchmarks
+always used — and ``fold_in(PRNGKey(seed), s)`` for extra repeats, so
+``seeds=1`` replications are bit-identical to the pre-registry paths while
+``seeds>1`` adds independent streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lea import LoadParams
+from repro.core.throughput import STRATEGIES
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named simulation cell (hashable: probabilities are tuples)."""
+
+    name: str
+    family: str
+    lp: LoadParams
+    p_gg: tuple[float, ...]          # per-worker, length lp.n
+    p_bb: tuple[float, ...]
+    mu_g: float
+    mu_b: float
+    deadline: float
+    rounds: int
+    strategies: tuple[str, ...] = ("lea", "static", "oracle")
+    baseline: str = "static"
+    seed: int | None = None          # explicit PRNGKey seed (paper replication)
+    meta: tuple[tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if len(self.p_gg) != self.lp.n or len(self.p_bb) != self.lp.n:
+            raise ValueError(f"{self.name}: p_gg/p_bb must have length n={self.lp.n}")
+        for s in self.strategies:
+            if s not in STRATEGIES:
+                raise ValueError(f"{self.name}: unknown strategy {s!r}")
+        if self.baseline not in self.strategies:
+            raise ValueError(f"{self.name}: baseline {self.baseline!r} not in strategies")
+
+    @property
+    def group_signature(self) -> tuple:
+        """The static-arg signature the executor compiles per."""
+        return (self.lp, self.rounds, self.strategies)
+
+    def meta_dict(self) -> dict[str, Any]:
+        return dict(self.meta)
+
+
+class ScenarioBatch(NamedTuple):
+    """Flat (B, ...) pytree of simulation inputs — one row per (scenario, seed)."""
+
+    keys: jnp.ndarray       # (B, 2) uint32 PRNG keys
+    p_gg: jnp.ndarray       # (B, n) float32
+    p_bb: jnp.ndarray       # (B, n) float32
+    mu_g: jnp.ndarray       # (B,)   float32
+    mu_b: jnp.ndarray       # (B,)   float32
+    deadline: jnp.ndarray   # (B,)   float32
+
+    @property
+    def rows(self) -> int:
+        return self.p_gg.shape[0]
+
+
+class RowMeta(NamedTuple):
+    """Provenance of one batch row: which scenario, which Monte-Carlo repeat."""
+
+    scenario_index: int     # into SweepGroup.scenarios
+    seed_index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGroup:
+    """All rows sharing one static (LoadParams, rounds, strategies) signature."""
+
+    lp: LoadParams
+    rounds: int
+    strategies: tuple[str, ...]
+    batch: ScenarioBatch
+    scenarios: tuple[Scenario, ...]
+    rows: tuple[RowMeta, ...]        # aligned with batch rows
+
+
+# ---------------------------------------------------------------------------
+# family registration
+# ---------------------------------------------------------------------------
+
+_FAMILIES: dict[str, Callable[..., tuple[Scenario, ...]]] = {}
+
+
+def register(name: str):
+    """Decorator: register ``fn(**params) -> tuple[Scenario, ...]`` as a family."""
+
+    def deco(fn):
+        if name in _FAMILIES:
+            raise ValueError(f"scenario family {name!r} already registered")
+        _FAMILIES[name] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    # built-in families live in scenarios.py; importing it registers them
+    from . import scenarios  # noqa: F401
+
+
+def family_names() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_FAMILIES))
+
+
+def describe(name: str) -> str:
+    _ensure_builtins()
+    doc = _FAMILIES[name].__doc__ or ""
+    return doc.strip().splitlines()[0] if doc.strip() else ""
+
+
+def catalogue() -> str:
+    """Human-readable one-line-per-family catalogue (ROADMAP / --help text)."""
+    _ensure_builtins()
+    width = max((len(n) for n in _FAMILIES), default=0)
+    return "\n".join(f"{n:<{width}}  {describe(n)}" for n in sorted(_FAMILIES))
+
+
+def expand(family: str, **params) -> tuple[Scenario, ...]:
+    """Expand a named family into its scenarios."""
+    _ensure_builtins()
+    if family not in _FAMILIES:
+        raise KeyError(
+            f"unknown scenario family {family!r}; available: {', '.join(sorted(_FAMILIES))}"
+        )
+    scenarios = tuple(_FAMILIES[family](**params))
+    names = [sc.name for sc in scenarios]
+    if len(set(names)) != len(names):
+        raise ValueError(f"family {family!r} produced duplicate scenario names")
+    return scenarios
+
+
+# ---------------------------------------------------------------------------
+# batch building
+# ---------------------------------------------------------------------------
+
+def scenario_base_key(
+    sc: Scenario, fallback_seed_base: int, position: int
+) -> jax.Array:
+    """The scenario's PRNG stream root.
+
+    Explicit seeds map to ``PRNGKey(seed)`` (paper replication).  Seedless
+    scenarios get ``fold_in(PRNGKey(fallback_seed_base), position)`` — a
+    stream disjoint from every raw ``PRNGKey(i)``, so mixing seedless
+    families with explicit-seed families (fig3's PRNGKey(1..4)) can never
+    silently share draws.
+    """
+    if sc.seed is not None:
+        return jax.random.PRNGKey(sc.seed)
+    return jax.random.fold_in(jax.random.PRNGKey(fallback_seed_base), position)
+
+
+def row_key(base: jax.Array, seed_index: int) -> jax.Array:
+    """Repeat 0 keeps the scenario's own key (paper bit-identity); later
+    repeats fold the repeat index in for independent streams."""
+    return base if seed_index == 0 else jax.random.fold_in(base, seed_index)
+
+
+def build_groups(
+    scenarios: Sequence[Scenario] | Iterable[Scenario],
+    *,
+    seeds: int = 1,
+    fallback_seed_base: int = 0,
+) -> tuple[SweepGroup, ...]:
+    """Flatten (scenarios x seeds) into one SweepGroup per static signature.
+
+    Groups preserve first-seen scenario order; within a group rows are laid
+    out scenario-major ((sc0, seed0), (sc0, seed1), ..., (sc1, seed0), ...).
+    """
+    if seeds < 1:
+        raise ValueError("seeds must be >= 1")
+    scenarios = tuple(scenarios)
+    by_sig: dict[tuple, list[tuple[int, Scenario]]] = {}
+    for pos, sc in enumerate(scenarios):
+        by_sig.setdefault(sc.group_signature, []).append((pos, sc))
+
+    groups = []
+    for (lp, rounds, strategies), entries in by_sig.items():
+        scs = [sc for _, sc in entries]
+        keys, p_gg, p_bb, mu_g, mu_b, deadline, rows = [], [], [], [], [], [], []
+        for si, (pos, sc) in enumerate(entries):
+            base = scenario_base_key(sc, fallback_seed_base, pos)
+            for s in range(seeds):
+                keys.append(row_key(base, s))
+                p_gg.append(np.asarray(sc.p_gg, np.float32))
+                p_bb.append(np.asarray(sc.p_bb, np.float32))
+                mu_g.append(sc.mu_g)
+                mu_b.append(sc.mu_b)
+                deadline.append(sc.deadline)
+                rows.append(RowMeta(scenario_index=si, seed_index=s))
+        batch = ScenarioBatch(
+            keys=jnp.stack(keys),
+            p_gg=jnp.asarray(np.stack(p_gg)),
+            p_bb=jnp.asarray(np.stack(p_bb)),
+            mu_g=jnp.asarray(mu_g, jnp.float32),
+            mu_b=jnp.asarray(mu_b, jnp.float32),
+            deadline=jnp.asarray(deadline, jnp.float32),
+        )
+        groups.append(
+            SweepGroup(lp=lp, rounds=rounds, strategies=strategies, batch=batch,
+                       scenarios=tuple(scs), rows=tuple(rows))
+        )
+    return tuple(groups)

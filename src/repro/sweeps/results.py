@@ -1,0 +1,168 @@
+"""Results layer: per-scenario throughputs, baseline ratios, CIs, manifests.
+
+Takes the raw (B, rounds, S) success arrays the executor produces per group
+and folds them back onto scenarios: mean timely throughput per strategy
+(averaged over Monte-Carlo repeats), the ratio against the scenario's
+baseline strategy (the paper's headline LEA/static numbers), and a 95%
+confidence interval — across repeats when ``seeds > 1``, else the per-round
+Bernoulli normal approximation (rounds are not independent under a mixing
+chain, so the single-seed CI is a lower bound on the true width; repeats
+give the honest one).
+
+:func:`manifest` renders results as a JSON document in the ``BENCH_*.json``
+trajectory shape (a ``bench`` name, run metadata, a flat ``results`` list),
+and :func:`write_manifest` drops it at the repo root next to
+``BENCH_fig3.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import Scenario, SweepGroup
+
+_Z95 = 1.959963984540054  # two-sided 95% normal quantile
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioResult:
+    """Aggregated Monte-Carlo outcome for one scenario."""
+
+    scenario: Scenario
+    seeds: int
+    throughput: dict[str, float]             # strategy -> mean R(d, eta)
+    per_seed: dict[str, tuple[float, ...]]   # strategy -> per-repeat R
+    ci95: dict[str, tuple[float, float]]     # strategy -> (lo, hi)
+    ratio: dict[str, float]                  # strategy -> R_s / R_baseline
+
+    @property
+    def name(self) -> str:
+        return self.scenario.name
+
+    @property
+    def baseline_ratio(self) -> float:
+        """The headline number: best non-baseline strategy vs the baseline."""
+        others = [r for s, r in self.ratio.items() if s != self.scenario.baseline]
+        return max(others) if others else 1.0
+
+    def row(self) -> dict[str, Any]:
+        """Flat JSON-able record for manifests.
+
+        Non-finite ratios (a baseline that never succeeds) become ``None`` —
+        ``json.dump`` would otherwise emit the literal ``Infinity``, which is
+        not valid JSON (RFC 8259) and breaks non-Python consumers.
+        """
+        return {
+            "scenario": self.scenario.name,
+            "family": self.scenario.family,
+            "rounds": self.scenario.rounds,
+            "seeds": self.seeds,
+            "kstar": self.scenario.lp.kstar,
+            "n": self.scenario.lp.n,
+            "baseline": self.scenario.baseline,
+            "meta": self.scenario.meta_dict(),
+            **{f"R_{s}": v for s, v in self.throughput.items()},
+            **{f"ci95_{s}": list(v) for s, v in self.ci95.items()},
+            **{
+                f"ratio_{s}": (v if math.isfinite(v) else None)
+                for s, v in self.ratio.items()
+                if s != self.scenario.baseline
+            },
+        }
+
+
+def _ci95(per_seed: np.ndarray, rounds: int) -> tuple[float, float]:
+    """95% CI of the mean throughput (see module docstring)."""
+    m = float(per_seed.mean())
+    if per_seed.size > 1:
+        half = _Z95 * float(per_seed.std(ddof=1)) / math.sqrt(per_seed.size)
+    else:
+        half = _Z95 * math.sqrt(max(m * (1.0 - m), 0.0) / max(rounds, 1))
+    return (max(m - half, 0.0), min(m + half, 1.0))
+
+
+def summarize_group(group: SweepGroup, succ: np.ndarray) -> list[ScenarioResult]:
+    """Fold one group's (B, rounds, S) successes onto its scenarios."""
+    b = len(group.rows)
+    if succ.shape[0] != b:
+        raise ValueError(f"expected {b} result rows, got {succ.shape[0]}")
+    # per-row throughput by the engine's own reduction semantics
+    # (core.throughput.timely_throughput: float32 mean).  One batched device
+    # call, not B*S scalar reductions; a float32 sum of 0/1 indicators is
+    # exact for rounds < 2^24, so the value is bit-identical to
+    # throughput.compare() regardless of reduction order (seeds=1 registry
+    # runs replicate the paper numbers exactly — the tests assert it).
+    per_round = np.asarray(
+        jnp.mean(jnp.asarray(succ).astype(jnp.float32), axis=1), np.float64
+    )                                                        # (B, S)  exact cast
+    results = []
+    for si, sc in enumerate(group.scenarios):
+        rows = [ri for ri, rm in enumerate(group.rows) if rm.scenario_index == si]
+        seed_tp = per_round[rows]                            # (seeds, S)
+        throughput, per_seed, ci95 = {}, {}, {}
+        for j, strat in enumerate(group.strategies):
+            vals = seed_tp[:, j]
+            throughput[strat] = float(vals.mean())
+            per_seed[strat] = tuple(float(v) for v in vals)
+            ci95[strat] = _ci95(vals, group.rounds)
+        base = throughput[sc.baseline]
+        ratio = {
+            s: (throughput[s] / base if base > 0 else float("inf"))
+            for s in group.strategies
+        }
+        results.append(ScenarioResult(
+            scenario=sc, seeds=seed_tp.shape[0], throughput=throughput,
+            per_seed=per_seed, ci95=ci95, ratio=ratio,
+        ))
+    return results
+
+
+def summarize(
+    groups: Sequence[SweepGroup],
+    succs: Sequence[np.ndarray],
+    *,
+    scenario_order: Sequence[Scenario] | None = None,
+) -> list[ScenarioResult]:
+    """Fold every group; optionally reorder to the original expansion order."""
+    results: list[ScenarioResult] = []
+    for group, succ in zip(groups, succs):
+        results.extend(summarize_group(group, succ))
+    if scenario_order is not None:
+        # key on the scenario VALUE, not its name: distinct scenarios may
+        # share a name across concatenated expansions (e.g. the same family
+        # expanded twice with different rounds), and names must not alias
+        by_scenario = {r.scenario: r for r in results}
+        results = [by_scenario[sc] for sc in scenario_order]
+    return results
+
+
+def manifest(
+    results: Sequence[ScenarioResult],
+    *,
+    bench: str,
+    extra: dict[str, Any] | None = None,
+) -> dict[str, Any]:
+    """BENCH_*.json-shaped document: bench name, metadata, flat result rows."""
+    doc: dict[str, Any] = {
+        "bench": bench,
+        "scenarios": len(results),
+        "families": sorted({r.scenario.family for r in results}),
+        "results": [r.row() for r in results],
+    }
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def write_manifest(path: str | os.PathLike, doc: dict[str, Any]) -> None:
+    with open(path, "w") as f:
+        # allow_nan=False: fail loudly rather than emit non-RFC JSON
+        json.dump(doc, f, indent=2, allow_nan=False)
+        f.write("\n")

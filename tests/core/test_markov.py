@@ -1,0 +1,100 @@
+"""Property tests for the Markov trajectory sampler: the associative-scan
+path (the engine default) must reproduce the sequential ``lax.scan``
+reference bit-for-bit, and the engine's ``round_chunk`` blocking must be
+exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import markov, throughput
+from repro.core.lea import LoadParams
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    rounds=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_associative_scan_trajectory_bit_equals_scan(n, rounds, seed):
+    rng = np.random.default_rng(seed)
+    p_gg = jnp.asarray(rng.uniform(0.01, 0.99, n), jnp.float32)
+    p_bb = jnp.asarray(rng.uniform(0.01, 0.99, n), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    assoc = markov.sample_trajectory(key, p_gg, p_bb, rounds)
+    scan = markov.sample_trajectory_scan(key, p_gg, p_bb, rounds)
+    assert assoc.shape == scan.shape == (rounds, n)
+    np.testing.assert_array_equal(np.asarray(assoc), np.asarray(scan))
+
+
+def test_associative_scan_trajectory_edge_probs():
+    """Absorbing-ish chains (p near 0/1) keep exact agreement."""
+    key = jax.random.PRNGKey(0)
+    for pg, pb in [(1.0, 0.0), (0.0, 1.0), (1.0, 1.0), (0.0, 0.0)]:
+        p_gg = jnp.full((5,), pg)
+        p_bb = jnp.full((5,), pb)
+        a = markov.sample_trajectory(key, p_gg, p_bb, 50)
+        b = markov.sample_trajectory_scan(key, p_gg, p_bb, 50)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trajectory_vmaps_and_stays_bit_equal():
+    """The engine vmaps the sampler over sweep rows; both paths agree there."""
+    keys = jax.random.split(jax.random.PRNGKey(3), 6)
+    p_gg = jnp.asarray(np.random.default_rng(0).uniform(0.2, 0.9, (6, 8)), jnp.float32)
+    p_bb = jnp.asarray(np.random.default_rng(1).uniform(0.2, 0.9, (6, 8)), jnp.float32)
+    a = jax.vmap(lambda k, g, b: markov.sample_trajectory(k, g, b, 40))(keys, p_gg, p_bb)
+    b = jax.vmap(lambda k, g, b: markov.sample_trajectory_scan(k, g, b, 40))(keys, p_gg, p_bb)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# round_chunk: blocked engine == unchunked engine, bit-for-bit
+# ---------------------------------------------------------------------------
+
+LP = LoadParams(n=15, kstar=99, ell_g=10, ell_b=3)
+ALL = ("lea", "static", "static_equal", "static_single", "oracle")
+
+
+def test_round_chunk_bit_identical_across_chunk_sizes():
+    key = jax.random.PRNGKey(11)
+    args = (jnp.full((15,), 0.8), jnp.full((15,), 0.7), 10.0, 3.0, 1.0, 250)
+    full = throughput.simulate_strategies(key, LP, *args, strategies=ALL)
+    for chunk in (1, 7, 64, 250, 999):   # includes non-divisors and > rounds
+        got = throughput.simulate_strategies(
+            key, LP, *args, strategies=ALL, round_chunk=chunk
+        )
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(got)), chunk
+
+
+def test_round_chunk_rejects_nonpositive():
+    key = jax.random.PRNGKey(0)
+    args = (jnp.full((15,), 0.8), jnp.full((15,), 0.7), 10.0, 3.0, 1.0, 8)
+    try:
+        throughput.simulate_strategies(key, LP, *args, round_chunk=0)
+    except ValueError:
+        return
+    raise AssertionError("round_chunk=0 should raise")
+
+
+def test_sweep_round_chunk_matches_unchunked():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    p_gg = jnp.full((3, 15), 0.85)
+    p_bb = jnp.full((3, 15), 0.65)
+    a = throughput.sweep(keys, LP, p_gg, p_bb, 10.0, 3.0, 1.0, 120)
+    b = throughput.sweep(keys, LP, p_gg, p_bb, 10.0, 3.0, 1.0, 120, round_chunk=31)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollout_scoring_equals_simulate_strategies():
+    key = jax.random.PRNGKey(9)
+    p_gg, p_bb = jnp.full((15,), 0.8), jnp.full((15,), 0.7)
+    strategies = ("lea", "static", "oracle")
+    states, loads, feasible = throughput.rollout(key, LP, p_gg, p_bb, 100, strategies)
+    succ = throughput.score_rollout(states, loads, feasible, LP, 10.0, 3.0, 1.0)
+    want = throughput.simulate_strategies(
+        key, LP, p_gg, p_bb, 10.0, 3.0, 1.0, 100, strategies=strategies
+    )
+    np.testing.assert_array_equal(np.asarray(succ), np.asarray(want))

@@ -1,0 +1,72 @@
+"""Subprocess body: the repro.sweeps executor on a forced 8-device CPU host.
+
+Asserts, on a heterogeneous-K* registry grid:
+  * sharded executor output == unsharded ``core.throughput.sweep``, bit-exact
+    (including a batch size that does NOT divide the device count -> padding);
+  * sharded + round-chunked == sharded unchunked, bit-exact;
+  * exactly one executor compile per LoadParams group.
+Run by tests/distributed/test_multidevice.py.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro import sweeps
+from repro.core import throughput
+from repro.launch.mesh import make_sweep_mesh
+
+ROUNDS = 128
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_sweep_mesh()
+
+    # 3 K* groups x 2 chains x 3 seeds = 6 rows per group (pads 6 -> 8)
+    scenarios = sweeps.expand(
+        "hetero_kstar", ks=(50, 80, 99), lams=(0.25, 0.65), rounds=ROUNDS
+    )
+    groups = sweeps.build_groups(scenarios, seeds=3)
+    assert len(groups) == 3
+    assert all(g.batch.rows == 6 for g in groups)   # forces pad to 8
+
+    before = sweeps.compile_cache_size()
+    sharded = sweeps.run_groups(groups, mesh=mesh)
+    compiles = sweeps.compile_cache_size() - before
+    assert compiles == len(groups), (compiles, len(groups))
+
+    # sharded == unsharded core.throughput.sweep, bit-identical
+    for g, s in zip(groups, sharded):
+        ref = throughput.sweep(
+            g.batch.keys, g.lp, g.batch.p_gg, g.batch.p_bb,
+            g.batch.mu_g, g.batch.mu_b, g.batch.deadline,
+            g.rounds, strategies=g.strategies,
+        )
+        np.testing.assert_array_equal(s, np.asarray(ref))
+
+    # sharded + chunked == sharded unchunked, bit-identical (chunk pads 128->?
+    # no: 37 does not divide 128, exercising the round-padding path too)
+    chunked = sweeps.run_groups(groups, mesh=mesh, round_chunk=37)
+    for a, b in zip(sharded, chunked):
+        np.testing.assert_array_equal(a, b)
+
+    # re-running an already-compiled grid adds no compiles
+    before = sweeps.compile_cache_size()
+    sweeps.run_groups(groups, mesh=mesh)
+    assert sweeps.compile_cache_size() == before
+
+    # results fold correctly on the sharded output
+    results = sweeps.summarize(groups, sharded, scenario_order=scenarios)
+    assert [r.name for r in results] == [sc.name for sc in scenarios]
+    print("SWEEPS_SHARDED_OK", f"groups={len(groups)}", f"compiles={compiles}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,3 +50,7 @@ def test_dryrun_cli_single_cell():
 
 def test_moe_expert_parallel_matches_dense():
     _run("_moe_ep.py", "MOE_EP_OK")
+
+
+def test_sweeps_sharded_executor_matches_unsharded():
+    _run("_sweeps_sharded.py", "SWEEPS_SHARDED_OK")

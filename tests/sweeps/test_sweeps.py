@@ -1,0 +1,249 @@
+"""Tests for the repro.sweeps subsystem: registry expansion and grouping,
+executor equivalences (registry path == engine path, chunked == unchunked),
+per-group compilation, and the results layer.  Multi-device sharding is
+covered by tests/distributed/_sweeps_sharded.py (own subprocess, forced
+8-device CPU)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sweeps
+from repro.core import throughput
+from repro.sweeps.registry import RowMeta
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_families_expand_with_unique_names_and_catalogue():
+    names = sweeps.family_names()
+    assert {"fig3", "fig4", "kstar_table", "deadline_sweep", "bursty_chains",
+            "hetero_kstar", "elastic_pool", "straggler_slack"} <= set(names)
+    cat = sweeps.catalogue()
+    for fam in names:
+        scs = sweeps.expand(fam)
+        assert scs, fam
+        assert len({sc.name for sc in scs}) == len(scs), fam
+        assert all(sc.family == fam for sc in scs)
+        assert fam in cat
+
+
+def test_expand_unknown_family_raises():
+    with pytest.raises(KeyError):
+        sweeps.expand("no_such_family")
+
+
+def test_scenario_validation():
+    sc = sweeps.expand("fig3", rounds=10)[0]
+    import dataclasses
+    with pytest.raises(ValueError):
+        dataclasses.replace(sc, p_gg=(0.5,))            # wrong length
+    with pytest.raises(ValueError):
+        dataclasses.replace(sc, strategies=("nope",))   # unknown strategy
+    with pytest.raises(ValueError):
+        dataclasses.replace(sc, baseline="static_single")  # not in strategies
+
+
+def test_build_groups_by_static_signature_and_row_layout():
+    scs = sweeps.expand("fig4", rounds=16)
+    groups = sweeps.build_groups(scs, seeds=3)
+    # 6 scenarios over K* in {120, 100, 50} -> 3 groups of 2 scenarios
+    assert len(groups) == 3
+    assert sorted(g.lp.kstar for g in groups) == [50, 100, 120]
+    for g in groups:
+        assert len(g.scenarios) == 2
+        assert g.batch.rows == len(g.rows) == 2 * 3
+        assert g.rows == tuple(
+            RowMeta(si, s) for si in range(2) for s in range(3)
+        )
+        assert g.batch.p_gg.shape == (6, g.lp.n)
+        assert g.batch.keys.shape[0] == 6
+
+
+def test_row_keys_replicate_paper_seed_then_fold_in():
+    scs = sweeps.expand("fig3", rounds=8)
+    (group,) = sweeps.build_groups(scs, seeds=2)
+    for si, sc in enumerate(group.scenarios):
+        base = jax.random.PRNGKey(sc.seed)
+        rows = [ri for ri, rm in enumerate(group.rows) if rm.scenario_index == si]
+        np.testing.assert_array_equal(np.asarray(group.batch.keys[rows[0]]),
+                                      np.asarray(base))
+        np.testing.assert_array_equal(np.asarray(group.batch.keys[rows[1]]),
+                                      np.asarray(jax.random.fold_in(base, 1)))
+
+
+def test_hetero_kstar_group_count_matches_ks():
+    scs = sweeps.expand("hetero_kstar", ks=(50, 80, 99), lams=(0.1, 0.5), rounds=8)
+    groups = sweeps.build_groups(scs)
+    assert len(groups) == 3 and all(len(g.scenarios) == 2 for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# executor: registry path == engine path, chunked == unchunked, compiles
+# ---------------------------------------------------------------------------
+
+ROUNDS = 160
+
+
+def test_fig3_through_sweeps_bit_identical_to_compare():
+    """The acceptance criterion: registry-path Fig. 3 values == PR-1 engine
+    values on the same PRNG keys."""
+    scs = sweeps.expand("fig3", rounds=ROUNDS)
+    res = sweeps.run(scs)
+    for sc, r in zip(scs, res):
+        old = throughput.compare(
+            jax.random.PRNGKey(sc.seed), sc.lp,
+            jnp.asarray(sc.p_gg), jnp.asarray(sc.p_bb),
+            sc.mu_g, sc.mu_b, sc.deadline, ROUNDS, strategies=sc.strategies,
+        )
+        assert old == r.throughput, sc.name
+
+
+def test_fig4_through_sweeps_bit_identical_to_compare():
+    scs = sweeps.expand("fig4", rounds=ROUNDS)
+    res = sweeps.run(scs)
+    for sc, r in zip(scs, res):
+        old = throughput.compare(
+            jax.random.PRNGKey(sc.seed), sc.lp,
+            jnp.asarray(sc.p_gg), jnp.asarray(sc.p_bb),
+            sc.mu_g, sc.mu_b, sc.deadline, ROUNDS, strategies=sc.strategies,
+        )
+        assert old == r.throughput, sc.name
+
+
+def test_executor_chunked_matches_unchunked():
+    scs = sweeps.expand("straggler_slack", speed_ratios=(2.0, 5.0),
+                        deadlines=(1.0,), rounds=ROUNDS)
+    groups = sweeps.build_groups(scs, seeds=2)
+    plain = sweeps.run_groups(groups)
+    for chunk in (1, 23, ROUNDS, 10 * ROUNDS):
+        chunked = sweeps.run_groups(groups, round_chunk=chunk)
+        for a, b in zip(plain, chunked):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_executor_matches_core_sweep():
+    scs = sweeps.expand("bursty_chains", lams=(0.2, 0.8), rounds=ROUNDS)
+    (group,) = sweeps.build_groups(scs, seeds=2)
+    got = sweeps.run_group(group)
+    ref = throughput.sweep(
+        group.batch.keys, group.lp, group.batch.p_gg, group.batch.p_bb,
+        group.batch.mu_g, group.batch.mu_b, group.batch.deadline,
+        group.rounds, strategies=group.strategies,
+    )
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_one_compile_per_group_for_hetero_kstar_grid():
+    # fresh static signature (unique rounds) so cached entries don't mask it
+    scs = sweeps.expand("hetero_kstar", ks=(50, 80, 99), lams=(0.15, 0.55, 0.85),
+                        rounds=96)
+    groups = sweeps.build_groups(scs, seeds=2)
+    assert len(groups) == 3
+    before = sweeps.compile_cache_size()
+    sweeps.run_groups(groups)
+    assert sweeps.compile_cache_size() - before == len(groups)
+    # re-running the same grid compiles nothing new
+    before = sweeps.compile_cache_size()
+    sweeps.run_groups(groups)
+    assert sweeps.compile_cache_size() == before
+
+
+def test_suggest_round_chunk_scales_with_budget():
+    scs = sweeps.expand("fig3", rounds=100_000)
+    (group,) = sweeps.build_groups(scs, seeds=4)
+    chunk = sweeps.suggest_round_chunk(group, budget_bytes=64 << 20)
+    assert chunk is not None and 0 < chunk < 100_000
+    assert sweeps.suggest_round_chunk(group, budget_bytes=1 << 50) is None
+
+
+# ---------------------------------------------------------------------------
+# results layer
+# ---------------------------------------------------------------------------
+
+def test_results_seeds_ratio_and_ci():
+    scs = sweeps.expand("bursty_chains", lams=(0.3,), rounds=ROUNDS)
+    res = sweeps.run(scs, seeds=4)
+    (r,) = res
+    assert r.seeds == 4
+    for s in r.scenario.strategies:
+        assert len(r.per_seed[s]) == 4
+        assert abs(np.mean(r.per_seed[s]) - r.throughput[s]) < 1e-12
+        lo, hi = r.ci95[s]
+        assert 0.0 <= lo <= r.throughput[s] <= hi <= 1.0
+    base = r.scenario.baseline
+    assert r.ratio[base] == 1.0
+    assert r.ratio["lea"] == r.throughput["lea"] / r.throughput[base]
+    assert r.baseline_ratio >= 1.0  # lea/oracle should not lose to static here
+
+
+def test_manifest_json_roundtrip():
+    res = sweeps.run("elastic_pool", ns=(10, 15), rounds=64)
+    doc = sweeps.manifest(res, bench="unit_test", extra={"devices": 1})
+    blob = json.dumps(doc)
+    back = json.loads(blob)
+    assert back["bench"] == "unit_test" and back["scenarios"] == len(res)
+    assert back["devices"] == 1
+    for row in back["results"]:
+        assert {"scenario", "family", "kstar", "baseline"} <= set(row)
+
+
+def test_name_colliding_scenarios_keep_their_own_results():
+    """The same family expanded twice (different rounds -> same names, different
+    groups) must not alias: each scenario gets the result of ITS simulation."""
+    a = sweeps.expand("deadline_sweep", deadlines=(1.0,), rounds=16)
+    b = sweeps.expand("deadline_sweep", deadlines=(1.0,), rounds=32)
+    res = sweeps.run(a + b)
+    assert res[0].scenario.rounds == 16 and res[1].scenario.rounds == 32
+    assert res[0].scenario is not res[1].scenario
+
+
+def test_catalogue_only_family_raises_clear_error():
+    with pytest.raises(ValueError, match="catalogue-only"):
+        sweeps.run("kstar_table")
+
+
+def test_seedless_streams_disjoint_from_explicit_paper_keys():
+    """Mixing a seedless family with fig3 must not alias PRNG streams: the
+    seedless fallback keys are fold_ins, never raw PRNGKey(i)."""
+    scs = sweeps.expand("fig3", rounds=8) + sweeps.expand(
+        "bursty_chains", lams=(0.2, 0.5), rounds=8
+    )
+    groups = sweeps.build_groups(scs)
+    explicit = {tuple(np.asarray(jax.random.PRNGKey(i))) for i in range(len(scs))}
+    seedless_keys = []
+    for g in groups:
+        for rm, sc in ((rm, g.scenarios[rm.scenario_index]) for rm in g.rows):
+            k = tuple(np.asarray(g.batch.keys[g.rows.index(rm)]))
+            if sc.seed is None:
+                seedless_keys.append(k)
+                assert k not in explicit
+    # distinct seedless scenarios get distinct streams
+    assert len(set(seedless_keys)) == len(seedless_keys)
+
+
+def test_manifest_zero_baseline_ratio_is_rfc_json():
+    """A baseline that never succeeds must serialize as null, not Infinity."""
+    import dataclasses
+    res = sweeps.run("bursty_chains", lams=(0.3,), rounds=32)
+    (r,) = res
+    rigged = dataclasses.replace(
+        r,
+        throughput={**r.throughput, r.scenario.baseline: 0.0},
+        ratio={**r.ratio, "lea": float("inf")},
+    )
+    doc = sweeps.manifest([rigged], bench="inf_test")
+    blob = json.dumps(doc, allow_nan=False)   # must not raise
+    assert json.loads(blob)["results"][0]["ratio_lea"] is None
+
+
+def test_summarize_rejects_row_mismatch():
+    scs = sweeps.expand("fig3", rounds=8)
+    (group,) = sweeps.build_groups(scs)
+    with pytest.raises(ValueError):
+        sweeps.summarize_group(group, np.zeros((1, 8, 3), bool))

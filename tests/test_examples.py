@@ -1,0 +1,33 @@
+"""Smoke gate for the examples/ drivers: each runs end-to-end (subprocess,
+reduced round counts via the REPRO_*_ROUNDS knobs) and prints its final OK."""
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(script: str, env_extra: dict[str, str], timeout: int = 600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(_ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    ).rstrip(os.pathsep)
+    env.update(env_extra)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "examples", script)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=_ROOT,
+    )
+    assert proc.returncode == 0, f"{script} failed:\n{proc.stdout}\n{proc.stderr}"
+    assert proc.stdout.rstrip().endswith("OK"), proc.stdout
+    return proc.stdout
+
+
+def test_quickstart_example():
+    out = _run_example("quickstart.py", {"REPRO_QUICKSTART_ROUNDS": "150"})
+    assert "recovery threshold" in out and "fig3_scenario4" in out
+
+
+def test_coded_regression_example():
+    out = _run_example("coded_regression.py", {"REPRO_EXAMPLE_ROUNDS": "80"})
+    assert "timely throughput" in out
