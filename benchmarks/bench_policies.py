@@ -1,0 +1,98 @@
+"""Policy shoot-out benchmark + ``BENCH_policies.json``.
+
+Runs the registered scheduling policies (vanilla LEA, windowed LEA,
+discounted LEA, Thompson sampling, UCB) against the static floor and the
+genie oracle on three chain regimes — a stationary paper chain, the
+``drifting_chains`` sinusoidal drift and the ``regime_switch`` degradation
+waves — through the full ``repro.sweeps`` registry path, and emits
+``BENCH_policies.json`` at the repo root with per-policy timely
+throughput, the ratio against each scenario's baseline, and the final
+cumulative regret vs the oracle (the ``regret_*`` manifest columns).
+
+Sized for the CI smoke gate (a few seconds of simulation); the knobs are
+module constants so a paper-scale run is one edit away.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro import sweeps
+from repro.configs.paper_lea import SIM
+from repro.sweeps.scenarios import _sim_lp
+
+_BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_policies.json",
+)
+
+ROUNDS = 1_200
+SEEDS = 4
+# the full policy axis: vanilla LEA and its adaptive variants, the
+# randomised/optimistic learners, the static floor, the genie oracle
+# (spelled out by name — "oracle" must stay present for the regret columns)
+STRATEGIES = ("lea", "lea_window64", "lea_discount97", "thompson", "ucb",
+              "static", "oracle")
+
+
+def _stationary_scenario(rounds: int) -> sweeps.Scenario:
+    """The paper's Sec. 6.1 scenario-2 chain with the policy axis attached."""
+    lp = _sim_lp()
+    p_gg, p_bb = SIM.scenarios[1]
+    return sweeps.Scenario(
+        name="stationary_sim2", family="bench_policies", lp=lp,
+        p_gg=(p_gg,) * SIM.n, p_bb=(p_bb,) * SIM.n,
+        mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline, rounds=rounds,
+        strategies=STRATEGIES, baseline="lea", seed=2,
+        meta=(("chain", "sim_scenario2"),),
+    )
+
+
+def run(rounds: int = ROUNDS, seeds: int = SEEDS,
+        write_baseline: bool = True) -> list[dict]:
+    scenarios = (
+        (_stationary_scenario(rounds),)
+        + sweeps.expand("drifting_chains", periods=(400,), rounds=rounds,
+                        strategies=STRATEGIES)
+        + sweeps.expand("regime_switch", dwells=(250,), rounds=rounds,
+                        strategies=STRATEGIES)
+    )
+    t0 = time.perf_counter()
+    results = sweeps.run(scenarios, seeds=seeds)
+    wall_s = time.perf_counter() - t0
+    total_rounds = len(scenarios) * seeds * rounds
+
+    if write_baseline:
+        doc = sweeps.manifest(
+            results,
+            bench="bench_policies",
+            extra={
+                "strategies": list(STRATEGIES),
+                "seeds": seeds,
+                "rounds": rounds,
+                "wall_s": wall_s,
+                "sim_rounds_per_sec": total_rounds / max(wall_s, 1e-9),
+            },
+        )
+        sweeps.write_manifest(_BASELINE_PATH, doc)
+
+    rows = []
+    for r in results:
+        for s in STRATEGIES:
+            derived = f"R={r.throughput[s]:.4f}"
+            if s != r.scenario.baseline:
+                derived += f";ratio={r.ratio[s]:.2f}x"
+            if s in r.regret:
+                derived += f";final_regret={r.regret[s]:.1f}"
+            rows.append({
+                "name": f"policy_{r.name}_{s}",
+                "us_per_call": wall_s * 1e6 / total_rounds,
+                "derived": derived,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

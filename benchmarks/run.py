@@ -1,46 +1,74 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
 
-Exit code 0 is the CI smoke gate: every suite must produce its rows without
-raising.  ``fig3_sim`` additionally refreshes the ``BENCH_fig3.json`` perf
-baseline (rounds/sec, allocator us/call) at the repo root.
+Usage:
+  python -m benchmarks.run                 # run every suite
+  python -m benchmarks.run bench_policies  # run the named suite(s) only
+  python -m benchmarks.run --list          # print registered targets + blurbs
 
-Tables:
-  fig3_sim         paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)
-  fig4_ec2         paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)
-  table_kstar      recovery-threshold table (eqs. 15/16)
-  sweep_smoke      repro.sweeps gate: tiny hetero-K* registry grid, sharded
-                   over 8 forced host devices + round-chunked, checked
-                   bit-exact vs the plain engine; refreshes BENCH_sweep.json
-  bench_kernels    Pallas-kernel + XLA-path microbenchmarks
-  bench_allocator  old (sequential seed) vs new (batched) engine + allocator
-  coded_dp         beyond-paper: LEA-coded microbatch DP in the trainer
-  roofline         33-cell dry-run roofline terms (from experiments/dryrun)
+Exit code 0 is the CI smoke gate: every requested suite must produce its
+rows without raising.  ``fig3_sim`` additionally refreshes the
+``BENCH_fig3.json`` perf baseline (rounds/sec, allocator us/call) at the
+repo root; ``sweep_smoke`` refreshes ``BENCH_sweep.json`` (with a soft
+rows/sec regression check against the committed baseline); and
+``bench_policies`` refreshes ``BENCH_policies.json`` (per-policy
+throughput, baseline ratio, final regret vs the oracle).
 """
 
 import sys
 import traceback
 
+# (target name, module under benchmarks/, one-line description) — kept as a
+# static table so ``--list`` never has to import jax or the suites
+SUITES = [
+    ("fig3_sim", "fig3_sim",
+     "paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)"),
+    ("fig4_ec2", "fig4_ec2",
+     "paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)"),
+    ("table_kstar", "table_kstar",
+     "recovery-threshold table (eqs. 15/16)"),
+    ("sweep_smoke", "sweep_smoke",
+     "repro.sweeps gate: sharded+chunked registry grid, bit-exact vs engine"),
+    ("bench_policies", "bench_policies",
+     "scheduling-policy shoot-out with regret columns (BENCH_policies.json)"),
+    ("bench_kernels", "bench_kernels",
+     "Pallas-kernel + XLA-path microbenchmarks"),
+    ("bench_allocator", "bench_allocator",
+     "old (sequential seed) vs new (batched) engine + allocator"),
+    ("coded_dp", "coded_dp_bench",
+     "beyond-paper: LEA-coded microbatch DP in the trainer"),
+    ("roofline", "roofline",
+     "33-cell dry-run roofline terms (from experiments/dryrun)"),
+]
 
-def main() -> None:
-    from benchmarks import (bench_allocator, bench_kernels, coded_dp_bench,
-                            fig3_sim, fig4_ec2, roofline, sweep_smoke,
-                            table_kstar)
 
-    suites = [
-        ("fig3_sim", fig3_sim.run),
-        ("fig4_ec2", fig4_ec2.run),
-        ("table_kstar", table_kstar.run),
-        ("sweep_smoke", sweep_smoke.run),
-        ("bench_kernels", bench_kernels.run),
-        ("bench_allocator", bench_allocator.run),
-        ("coded_dp", coded_dp_bench.run),
-        ("roofline", roofline.run),
-    ]
+def list_targets() -> str:
+    width = max(len(name) for name, _, _ in SUITES)
+    return "\n".join(f"{name:<{width}}  {desc}" for name, _, desc in SUITES)
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--list" in argv:
+        print(list_targets())
+        return
+
+    known = {name for name, _, _ in SUITES}
+    unknown = [a for a in argv if a not in known]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark target(s): {', '.join(unknown)}\n"
+            f"registered targets:\n{list_targets()}"
+        )
+    selected = [row for row in SUITES if not argv or row[0] in argv]
+
+    import importlib
+
     print("name,us_per_call,derived")
     failed = False
-    for name, fn in suites:
+    for name, module, _ in selected:
         try:
+            fn = importlib.import_module(f"benchmarks.{module}").run
             for row in fn():
                 print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")
         except Exception as e:  # pragma: no cover

@@ -36,10 +36,13 @@ from .markov import (  # noqa: F401
     t_step_transitions,
 )
 from .throughput import (  # noqa: F401
+    STATIC_STRATEGIES,
     STRATEGIES,
+    allocator_strategies,
     compare,
     simulate,
     simulate_strategies,
+    strategy_known,
     sweep,
     timely_throughput,
 )

@@ -4,6 +4,13 @@ State convention throughout the codebase: ``1 = good``, ``0 = bad``.
 Each worker i has transition probs ``p_gg[i] = P[good -> good]`` and
 ``p_bb[i] = P[bad -> bad]``; chains are mutually independent and initialized
 from their stationary distribution (as in the paper).
+
+Non-stationary chains (beyond the paper): the trajectory samplers also
+accept ``p_gg``/``p_bb`` of shape (rounds, n) — row t governs the
+transition INTO round t (t >= 1) and row 0 the initial distribution.  The
+associative-scan sampler composes per-round transition maps anyway, so a
+time-varying chain is the same parallel prefix with per-row thresholds;
+stationary (n,) inputs take the exact original code path, bit-for-bit.
 """
 
 from __future__ import annotations
@@ -20,7 +27,12 @@ def stationary_good_prob(p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
 
 
 def initial_states(key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
-    """Sample worker states (n,) int32 from the stationary distribution."""
+    """Sample worker states (n,) int32 from the stationary distribution.
+
+    A (rounds, n) schedule initializes from its round-0 chain.
+    """
+    if p_gg.ndim == 2:
+        p_gg, p_bb = p_gg[0], p_bb[0]
     pi_g = stationary_good_prob(p_gg, p_bb)
     return (jax.random.uniform(key, p_gg.shape) < pi_g).astype(jnp.int32)
 
@@ -42,16 +54,26 @@ def sample_trajectory_scan(
     """Sequential reference: (rounds, n) trajectory via ``lax.scan``.
 
     Kept as the oracle for :func:`sample_trajectory` (the associative-scan
-    path), which must reproduce it bit-for-bit.
+    path), which must reproduce it bit-for-bit.  Accepts a (rounds, n)
+    time-varying schedule like the parallel sampler.
     """
     k0, k1 = jax.random.split(key)
     s0 = initial_states(k0, p_gg, p_bb)
+    keys = jax.random.split(k1, rounds - 1)
+
+    if p_gg.ndim == 2:
+        def body_tv(carry, xs):
+            k, pg, pb = xs
+            s = step_states(k, carry, pg, pb)
+            return s, s
+
+        _, tail = jax.lax.scan(body_tv, s0, (keys, p_gg[1:], p_bb[1:]))
+        return jnp.concatenate([s0[None], tail], axis=0)
 
     def body(carry, k):
         s = step_states(k, carry, p_gg, p_bb)
         return s, s
 
-    keys = jax.random.split(k1, rounds - 1)
     _, tail = jax.lax.scan(body, s0, keys)
     return jnp.concatenate([s0[None], tail], axis=0)
 
@@ -82,11 +104,17 @@ def sample_trajectory(
     if rounds == 1:
         return s0[None]
 
+    # per-step thresholds: a (rounds, n) schedule contributes rows 1..M-1
+    # (row t is the chain in force for the transition into round t); the
+    # stationary (n,) case broadcasts one row over all steps as before.
+    n_shape = p_gg.shape[-1:]
+    p_step_gg = p_gg[1:] if p_gg.ndim == 2 else p_gg
+    p_step_bb = p_bb[1:] if p_bb.ndim == 2 else p_bb
     keys = jax.random.split(k1, rounds - 1)
-    u = jax.vmap(lambda k: jax.random.uniform(k, p_gg.shape))(keys)  # (M-1, n)
+    u = jax.vmap(lambda k: jax.random.uniform(k, n_shape))(keys)  # (M-1, n)
     # f_t as a value table: out1[t] = f_t(good), out0[t] = f_t(bad)
-    out1 = (u < p_gg).astype(jnp.int32)
-    out0 = (u < (1.0 - p_bb)).astype(jnp.int32)
+    out1 = (u < p_step_gg).astype(jnp.int32)
+    out0 = (u < (1.0 - p_step_bb)).astype(jnp.int32)
 
     def compose(f, g):
         """(g ∘ f): apply the earlier map f first, then the later map g."""

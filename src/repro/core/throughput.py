@@ -52,6 +52,28 @@ load < K* — but the accounting no longer relies on that implicit property).
 :func:`simulate` (single strategy) and :func:`compare` keep the seed call
 signatures; both wrap :func:`simulate_strategies` with identical key
 splitting, so results match the sequential seed path on the same key.
+
+Pluggable policies (``repro.policies``)
+---------------------------------------
+Every non-static strategy name is resolved through the policy registry
+(:func:`repro.policies.resolve`) at trace time: a policy supplies the
+(M, n) predicted-p_good trajectory (its estimator-state replay in closed
+form) and the engine feeds all rounds x policies through the one batched
+allocator call as before.  ``"lea"`` and ``"oracle"`` are themselves
+registry entries whose trajectory functions are the verbatim PR-1 closed
+forms, so resolving them through the registry is bit-identical to the
+pre-registry engine on the same PRNG keys (asserted in
+tests/policies/).  The static draw strategies (``static``,
+``static_equal``, ``static_single``) stay engine-native — they never
+allocate from predictions.
+
+Non-stationary chains: ``p_gg``/``p_bb`` may be (rounds, n) instead of
+(n,) — row t governs the transition into round t, row 0 the initial
+distribution (``markov.sample_trajectory`` composes per-round maps, so
+time-varying chains cost nothing extra).  Static strategies keep drawing
+from the round-0 chain's stationary distribution (there is no global one
+under drift); the genie tracks the true current chain.  Stationary inputs
+take the exact pre-existing code paths, bit-for-bit.
 """
 
 from __future__ import annotations
@@ -65,44 +87,59 @@ from . import lea as lea_mod
 from . import markov
 from .lea import LoadParams
 
+# The classic closed strategy tuple, kept for back-compat with seed-era
+# callers; the engine itself now accepts any registered policy name too
+# (see strategy_known / repro.policies).
 STRATEGIES = ("lea", "static", "static_equal", "static_single", "oracle")
-_ALLOCATOR_STRATEGIES = ("lea", "oracle")
+STATIC_STRATEGIES = ("static", "static_equal", "static_single")
+_ALLOCATOR_STRATEGIES = ("lea", "oracle")   # legacy alias (pre-policies order)
+
+# fold_in tag separating policy-private PRNG streams from the trajectory /
+# round-key streams derived by jax.random.split(key)
+_POLICY_KEY_TAG = 0x9E3779B9 % (2**31)
+
+
+def _policy_registry():
+    # local import: repro.policies imports repro.core.{lea,markov}; resolving
+    # lazily keeps the package import graph acyclic
+    from repro.policies import registry as policy_registry
+
+    return policy_registry
+
+
+def strategy_known(name: str) -> bool:
+    """Is ``name`` a legal strategy: a static draw or a registered policy?"""
+    return name in STATIC_STRATEGIES or _policy_registry().is_registered(name)
+
+
+def allocator_strategies(strategies: tuple[str, ...]) -> tuple[str, ...]:
+    """The policy (allocator-driven) strategies, deduped, in appearance order."""
+    seen: list[str] = []
+    for s in strategies:
+        if s not in STATIC_STRATEGIES and s not in seen:
+            seen.append(s)
+    return tuple(seen)
 
 
 def _lea_p_good_trajectory(states: jnp.ndarray) -> jnp.ndarray:
-    """Every round's LEA-predicted p_good, (M, n) from the (M, n) trajectory.
+    """Vanilla LEA's (M, n) closed-form estimator replay.
 
-    Replays ``lea.update_estimator`` in closed form: the counts entering round
-    m are the transition tallies among ``states[0..m-1]`` — a shifted cumsum
-    of one-hot transition indicators (exact in float32: integer counts stay
-    below 2^24).  Round 0 has no observation and uses the seed's 0.5 fill.
+    Lives in :mod:`repro.policies.estimators` now (it IS the ``"lea"``
+    policy); this alias keeps the engine-internal name the PR-1 tests and
+    docs refer to.
     """
-    rounds_total, n = states.shape
-    if rounds_total >= 2:
-        inc = lea_mod.transition_onehot(states[:-1], states[1:])  # (M-1, n, 4)
-        csum = jnp.cumsum(inc, axis=0)
-        zeros = jnp.zeros((1, n, 4), jnp.float32)
-        # counts before round m: m<2 -> 0, else transitions t=1..m-1 = csum[m-2]
-        counts = jnp.concatenate([zeros, zeros, csum[:-1]], axis=0)  # (M, n, 4)
-    else:
-        counts = jnp.zeros((rounds_total, n, 4), jnp.float32)
-    p_gg_hat, p_bb_hat = lea_mod.smoothed_transitions(counts)
-    prev_state = jnp.concatenate([states[:1], states[:-1]], axis=0)
-    p_good = jnp.where(prev_state == 1, p_gg_hat, 1.0 - p_bb_hat)
-    first = (jnp.arange(rounds_total) == 0)[:, None]
-    return jnp.where(first, 0.5, p_good)
+    from repro.policies.estimators import lea_p_good
+
+    return lea_p_good(states)
 
 
 def _oracle_p_good_trajectory(
     states: jnp.ndarray, p_gg: jnp.ndarray, p_bb: jnp.ndarray, pi_g: jnp.ndarray
 ) -> jnp.ndarray:
-    """Genie p_good per round: exact conditional given last round's true state
-    (stationary distribution for round 0)."""
-    prev_state = jnp.concatenate([states[:1], states[:-1]], axis=0)
-    p_good = jnp.where(prev_state == 1, p_gg[None, :], 1.0 - p_bb[None, :])
-    rounds = states.shape[0]
-    first = (jnp.arange(rounds) == 0)[:, None]
-    return jnp.where(first, pi_g[None, :], p_good)
+    """Genie p_good per round (the ``"oracle"`` policy's trajectory)."""
+    from repro.policies.estimators import oracle_p_good
+
+    return oracle_p_good(states, p_gg, p_bb, pi_g)
 
 
 def _static_loads_batch(
@@ -148,16 +185,35 @@ def _p_good_rows(
     p_gg: jnp.ndarray,
     p_bb: jnp.ndarray,
     alloc_names: tuple[str, ...],
+    key: jax.Array,
 ) -> jnp.ndarray:
-    """(A, M, n) predicted p_good per allocator strategy (cheap: O(A*M*n))."""
-    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    """(A, M, n) predicted p_good per policy strategy (cheap: O(A*M*n)).
+
+    Each name resolves through the policy registry; randomised policies get
+    a private key stream (``fold_in`` of the simulation key, disjoint from
+    the trajectory/round streams), which deterministic policies never
+    consume — so ``lea``/``oracle`` results are unchanged by its existence.
+    """
+    from repro.policies.api import PolicyContext
+
+    registry = _policy_registry()
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
+    pkey = jax.random.fold_in(key, _POLICY_KEY_TAG)
     p_rows = []
-    for s in alloc_names:
-        if s == "lea":
-            p_rows.append(_lea_p_good_trajectory(states))
-        else:
-            p_rows.append(_oracle_p_good_trajectory(states, p_gg, p_bb, pi_g))
+    for j, s in enumerate(alloc_names):
+        ctx = PolicyContext(
+            states=states, p_gg=p_gg, p_bb=p_bb, pi_g=pi_g,
+            key=jax.random.fold_in(pkey, j),
+        )
+        p_rows.append(registry.resolve(s).p_good_trajectory(ctx))
     return jnp.stack(p_rows)
+
+
+def _chain_row0(p_gg: jnp.ndarray, p_bb: jnp.ndarray):
+    """The chain in force at round 0 ((n,) rows from a (rounds, n) schedule)."""
+    if p_gg.ndim == 2:
+        return p_gg[0], p_bb[0]
+    return p_gg, p_bb
 
 
 def _rollout_block(
@@ -175,7 +231,7 @@ def _rollout_block(
     bit-identical results — this is what makes the ``round_chunk`` path exact.
     """
     m = states.shape[0]
-    alloc_names = [s for s in _ALLOCATOR_STRATEGIES if s in strategies]
+    alloc_names = allocator_strategies(strategies)
     loads_by: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
     if alloc_names:
         loads_all, _ = lea_mod.allocate(p_alloc, lp)       # one (A*m, n) DP
@@ -218,8 +274,22 @@ def _check_strategies(strategies: tuple[str, ...]) -> None:
     if not strategies:
         raise ValueError("strategies must be non-empty")
     for s in strategies:
-        if s not in STRATEGIES:
-            raise ValueError(f"unknown strategy {s!r}")
+        if not strategy_known(s):
+            raise ValueError(
+                f"unknown strategy {s!r}: not a static draw "
+                f"{STATIC_STRATEGIES} and not a registered policy "
+                f"({', '.join(_policy_registry().names())})"
+            )
+
+
+def _check_chain_shapes(p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int) -> None:
+    if p_gg.ndim != p_bb.ndim or p_gg.shape != p_bb.shape:
+        raise ValueError(f"p_gg/p_bb shapes differ: {p_gg.shape} vs {p_bb.shape}")
+    if p_gg.ndim == 2 and p_gg.shape[0] != rounds:
+        raise ValueError(
+            f"time-varying chain must have one row per round: got "
+            f"{p_gg.shape[0]} rows for rounds={rounds}"
+        )
 
 
 @partial(jax.jit, static_argnames=("strategies", "lp", "rounds", "round_chunk"))
@@ -239,7 +309,10 @@ def simulate_strategies(
 
     Returns (rounds, len(strategies)) bool success indicators, one column per
     strategy in the given order.  ``mu_g``/``mu_b``/``deadline`` may be traced
-    scalars (they are vmapped over by :func:`sweep`).
+    scalars (they are vmapped over by :func:`sweep`).  ``strategies`` may mix
+    static draws with any registered policy name (``repro.policies``).
+    ``p_gg``/``p_bb`` of shape (rounds, n) run a non-stationary chain (row t
+    governs the transition into round t).
 
     ``round_chunk``: with the default ``None`` the whole (S, M, n) round block
     is materialised at once; a positive value instead runs a ``lax.map`` over
@@ -251,13 +324,14 @@ def simulate_strategies(
     chunked results are bit-identical to the unchunked path.
     """
     _check_strategies(strategies)
+    _check_chain_shapes(p_gg, p_bb, rounds)
     k_traj, k_rounds = jax.random.split(key)
     states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
-    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
     round_keys = jax.random.split(k_rounds, rounds)
-    alloc_names = tuple(s for s in _ALLOCATOR_STRATEGIES if s in strategies)
+    alloc_names = allocator_strategies(strategies)
     if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names)    # (A, M, n)
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
     else:  # keep the block signature uniform; zero-size axis costs nothing
         p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
 
@@ -317,13 +391,14 @@ def rollout(
     seed-era per-round estimator/allocate loop.
     """
     _check_strategies(strategies)
+    _check_chain_shapes(p_gg, p_bb, rounds)
     k_traj, k_rounds = jax.random.split(key)
     states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)
-    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
     round_keys = jax.random.split(k_rounds, rounds)
-    alloc_names = tuple(s for s in _ALLOCATOR_STRATEGIES if s in strategies)
+    alloc_names = allocator_strategies(strategies)
     if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names)
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)
     else:
         p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
     loads_mat, feasible = _rollout_block(
@@ -366,7 +441,7 @@ def simulate(
     Thin wrapper over :func:`simulate_strategies`; kept for the sequential
     seed API (and as the old-path baseline in benchmarks/bench_allocator.py).
     """
-    if strategy not in STRATEGIES:
+    if not strategy_known(strategy):
         raise ValueError(f"unknown strategy {strategy!r}")
     succ = simulate_strategies(
         key, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies=(strategy,)
@@ -390,7 +465,8 @@ def sweep(
 
     Args:
       keys: (B,) PRNG keys (one independent trajectory per row).
-      p_gg/p_bb: (B, n) per-row transition probabilities.
+      p_gg/p_bb: (B, n) per-row transition probabilities, or (B, rounds, n)
+        for non-stationary chains (row t governs the transition into round t).
       mu_g/mu_b/deadline: scalars or (B,) per-row values.
       lp/rounds/strategies: static, shared across the batch (group sweep calls
         by LoadParams when K* differs across scenarios — or use

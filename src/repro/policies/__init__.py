@@ -1,0 +1,38 @@
+"""repro.policies — pluggable scheduling policies with regret accounting.
+
+Generalises the paper's LEA into one of many registry-resolved schedulers:
+the engine (:mod:`repro.core.throughput`) looks every non-static strategy
+name up here, replays the policy's estimator state as a closed-form
+batched trajectory function, and feeds all rounds x policies through ONE
+batched :func:`repro.core.lea.allocate` call.
+
+  * :mod:`~repro.policies.api`        — the :class:`Policy` protocol;
+  * :mod:`~repro.policies.estimators` — built-ins: paper LEA, sliding-window
+    and discounted-count LEA (non-stationary chains), Beta-posterior
+    Thompson sampling, optimistic UCB, the genie oracle;
+  * :mod:`~repro.policies.registry`   — ``@policies.register``, dynamic
+    ``lea_window<W>`` / ``lea_discount<D>`` family spellings;
+  * :mod:`~repro.policies.regret`     — per-round / cumulative
+    timely-throughput regret vs the oracle, batched over sweep grids.
+
+Quick use::
+
+    from repro import sweeps
+    res = sweeps.run("drifting_chains", rounds=2000)
+    for r in res:
+        print(r.name, r.throughput["lea_window64"], r.regret["lea"])
+"""
+
+from .api import Policy, PolicyContext
+from .estimators import discounted_lea, lea_p_good, oracle_p_good, windowed_lea
+from .registry import (catalogue, describe, is_registered, names, register,
+                       register_policy, resolve)
+from .regret import (cumulative_regret, final_regret, per_round_regret,
+                     regret_curve_summary)
+
+__all__ = [
+    "Policy", "PolicyContext", "catalogue", "cumulative_regret", "describe",
+    "discounted_lea", "final_regret", "is_registered", "lea_p_good", "names",
+    "oracle_p_good", "per_round_regret", "register", "register_policy",
+    "regret_curve_summary", "resolve", "windowed_lea",
+]

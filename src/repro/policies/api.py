@@ -1,0 +1,82 @@
+"""Policy protocol for the scheduling-policy subsystem.
+
+A *policy* is a pluggable scheduler for the timely-throughput engine: given
+the (M, n) worker-state trajectory it emits the (M, n) per-round predicted
+probability that each worker is good next round.  The engine then feeds
+every round of every policy through ONE batched
+:func:`repro.core.lea.allocate` call (Lemma 4.5's two-level assignment),
+exactly as it always did for LEA — a policy IS its estimator-state replay,
+written as a closed-form batched trajectory function instead of a
+sequential per-round update loop.
+
+Why closed form: the batched engine vectorises over rounds, so a policy
+may not carry Python-side state between rounds.  Anything expressible as a
+(parallel-prefix) function of the observed trajectory qualifies — running
+transition counts are a ``cumsum``, sliding windows are a cumsum
+difference, discounted counts are a first-order linear recurrence
+(``lax.associative_scan``), Thompson sampling is a posterior draw per
+round from those counts.  All built-ins live in
+:mod:`repro.policies.estimators`.
+
+Causality contract: round m's prediction may read ``states[:m]`` only
+(what the master has observed by the start of round m).  The genie oracle
+is the one sanctioned exception — it additionally reads the true chain
+parameters (``ctx.p_gg`` / ``ctx.p_bb``) and is the regret reference.
+:mod:`repro.policies.regret` measures every other policy against it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolicyContext(NamedTuple):
+    """Everything a policy's trajectory function may look at.
+
+    ``p_gg``/``p_bb`` are the TRUE chain parameters — ``(n,)`` for a
+    stationary chain or ``(M, n)`` for a non-stationary one (row t governs
+    the transition into round t; row 0 the initial distribution).  Only
+    genie policies (``uses_model=True``) may read them.  ``key`` is a
+    policy-private PRNG key derived from the simulation key; it is only
+    consumed by ``needs_key`` policies (Thompson sampling), so
+    deterministic policies stay bit-identical whether or not it exists.
+    """
+
+    states: jnp.ndarray   # (M, n) int32 observed trajectory, 1=good
+    p_gg: jnp.ndarray     # (n,) or (M, n) true transition probabilities
+    p_bb: jnp.ndarray     # (n,) or (M, n)
+    pi_g: jnp.ndarray     # (n,) stationary dist of the round-0 chain
+    key: jax.Array        # policy-private PRNG key
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A named scheduler: trajectory function + capability flags.
+
+    ``trajectory(ctx) -> (M, n)`` predicted p_good per round, feeding the
+    engine's batched allocator.  Values must be float32 in [0, 1].
+    """
+
+    name: str
+    trajectory: Callable[[PolicyContext], jnp.ndarray]
+    needs_key: bool = False    # consumes ctx.key (randomised policy)
+    uses_model: bool = False   # genie: reads the true p_gg/p_bb
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.name or not self.name.isidentifier():
+            raise ValueError(f"policy name must be an identifier, got {self.name!r}")
+
+    def p_good_trajectory(self, ctx: PolicyContext) -> jnp.ndarray:
+        """Run the estimator replay; validates the output shape at trace time."""
+        p = self.trajectory(ctx)
+        if p.shape != ctx.states.shape:
+            raise ValueError(
+                f"policy {self.name!r} returned shape {p.shape}, "
+                f"expected {ctx.states.shape}"
+            )
+        return p

@@ -1,0 +1,273 @@
+"""Built-in policies: estimator-state replays as closed-form batched functions.
+
+Every policy here predicts round m's per-worker P[good] from the observed
+trajectory prefix ``states[:m]`` (plus, for the genie, the true chain), in
+one vectorised pass over all M rounds — no sequential per-round updates.
+The engine stacks these (M, n) trajectories and solves ONE batched
+allocator DP for all rounds x policies.
+
+Catalogue:
+
+  ``lea``            — the paper's LEA estimator (Sec. 3.2 phase 4): running
+                       transition counts with add-one smoothing, replayed
+                       as an exact cumsum (bit-identical to sequential
+                       ``lea.update_estimator`` — PR-1's invariant, kept).
+  ``lea_window<W>``  — sliding-window LEA: counts over the last W observed
+                       transitions only (cumsum difference).  Tracks
+                       non-stationary chains at the cost of variance.
+  ``lea_discount<D>``— discounted-count LEA: counts decayed by gamma per
+                       round (first-order recurrence via
+                       ``lax.associative_scan``); effective memory
+                       ~1/(1-gamma) transitions.
+  ``thompson``       — Beta-posterior Thompson sampling on the transition
+                       probabilities: each round draws p_gg/p_bb from the
+                       posterior the counts induce and predicts with the
+                       sample (randomised exploration).
+  ``ucb``            — optimistic UCB: the LEA point estimate plus a
+                       sqrt(2 ln m / visits) confidence bonus, clipped.
+  ``oracle``         — genie-aided optimum of Thm. 4.6: the true one-step
+                       conditional given the previous true state (and, on
+                       non-stationary chains, the true current chain).
+
+All count-based variants share the same prediction rule given counts
+(:func:`predict_from_counts` == ``lea.smoothed_transitions`` + prev-state
+select + the round-0 0.5 fill), so they differ ONLY in how history is
+weighted — vanilla (all of it), windowed (last W), discounted (geometric).
+With ``window >= M`` or ``gamma -> 1`` they recover vanilla LEA exactly
+(the window case bit-for-bit; the tests assert it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lea as lea_mod
+
+from .api import Policy, PolicyContext
+from .registry import register
+
+# ---------------------------------------------------------------------------
+# shared count machinery
+# ---------------------------------------------------------------------------
+
+
+def transition_increments(states: jnp.ndarray) -> jnp.ndarray:
+    """(M-1, n, 4) one-hot transition indicators between consecutive rounds.
+
+    The same ``lea.transition_onehot`` expression the sequential estimator
+    uses — every count variant below is a weighted sum of these, which is
+    what keeps the vanilla cumsum replay bit-identical to per-round updates.
+    """
+    return lea_mod.transition_onehot(states[:-1], states[1:])
+
+
+def counts_before_round(states: jnp.ndarray) -> jnp.ndarray:
+    """Vanilla LEA counts entering each round: (M, n, 4) exact cumsum.
+
+    Round m sees the transition tallies among ``states[0..m-1]`` — a shifted
+    cumsum of the increments (exact in float32: integer counts < 2^24).
+    Rounds 0 and 1 have no completed transition and see zeros.
+    """
+    rounds_total, n = states.shape
+    if rounds_total < 2:
+        return jnp.zeros((rounds_total, n, 4), jnp.float32)
+    csum = jnp.cumsum(transition_increments(states), axis=0)  # (M-1, n, 4)
+    zeros = jnp.zeros((1, n, 4), jnp.float32)
+    return jnp.concatenate([zeros, zeros, csum[:-1]], axis=0)
+
+
+def windowed_counts_before_round(states: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Sliding-window counts entering each round: last ``window`` transitions.
+
+    cs[j] = sum of the first j increments, so round m's window is
+    ``cs[m-1] - cs[max(m-1-window, 0)]`` — a difference of exact integer
+    float32 cumsums, so ``window >= M`` reproduces
+    :func:`counts_before_round` bit-for-bit.
+    """
+    rounds_total, n = states.shape
+    if rounds_total < 2:
+        return jnp.zeros((rounds_total, n, 4), jnp.float32)
+    csum = jnp.cumsum(transition_increments(states), axis=0)  # (M-1, n, 4)
+    cs = jnp.concatenate(
+        [jnp.zeros((1, n, 4), jnp.float32), csum], axis=0
+    )                                                          # cs[j], j=0..M-1
+    m = jnp.arange(rounds_total)
+    hi = jnp.maximum(m - 1, 0)
+    lo = jnp.maximum(m - 1 - window, 0)
+    return cs[hi] - cs[lo]
+
+
+def discounted_counts_before_round(states: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Geometrically-discounted counts entering each round.
+
+    z[j] = gamma * z[j-1] + inc[j] — a first-order linear recurrence, run as
+    a ``lax.associative_scan`` over (coefficient, value) pairs (O(log M)
+    depth, same shape discipline as the trajectory sampler).  Round m sees
+    ``z[m-2]``, mirroring the vanilla shift.
+    """
+    rounds_total, n = states.shape
+    if rounds_total < 2:
+        return jnp.zeros((rounds_total, n, 4), jnp.float32)
+    inc = transition_increments(states)                        # (M-1, n, 4)
+    coef = jnp.full(inc.shape, jnp.float32(gamma))
+
+    def combine(a, b):
+        ca, va = a
+        cb, vb = b
+        return (ca * cb, cb * va + vb)
+
+    _, z = jax.lax.associative_scan(combine, (coef, inc), axis=0)
+    zeros = jnp.zeros((1, n, 4), jnp.float32)
+    return jnp.concatenate([zeros, zeros, z[:-1]], axis=0)
+
+
+def prev_state_rows(states: jnp.ndarray) -> jnp.ndarray:
+    """(M, n) state observed entering each round (round 0 repeats itself —
+    masked out by the round-0 fill everywhere it is used)."""
+    return jnp.concatenate([states[:1], states[:-1]], axis=0)
+
+
+def predict_from_counts(states: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """The LEA prediction rule given per-round counts: smoothed transition
+    estimates, selected by the last observed state; 0.5 before any
+    observation.  Shared verbatim by all count-based policies."""
+    p_gg_hat, p_bb_hat = lea_mod.smoothed_transitions(counts)
+    prev_state = prev_state_rows(states)
+    p_good = jnp.where(prev_state == 1, p_gg_hat, 1.0 - p_bb_hat)
+    first = (jnp.arange(states.shape[0]) == 0)[:, None]
+    return jnp.where(first, 0.5, p_good)
+
+
+def lea_p_good(states: jnp.ndarray) -> jnp.ndarray:
+    """Vanilla LEA's (M, n) predicted p_good — the PR-1 closed-form replay,
+    bit-identical to sequential ``lea.update_estimator`` calls."""
+    return predict_from_counts(states, counts_before_round(states))
+
+
+def oracle_p_good(
+    states: jnp.ndarray,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    pi_g: jnp.ndarray,
+) -> jnp.ndarray:
+    """Genie p_good per round: the exact conditional given last round's true
+    state (round 0: the initial stationary distribution).  ``p_gg``/``p_bb``
+    may be (n,) or, for a non-stationary chain, (M, n) with row t governing
+    the transition into round t — the genie always knows the current chain.
+    """
+    rounds = states.shape[0]
+    if p_gg.ndim == 1:
+        p_gg_t, p_bb_t = p_gg[None, :], p_bb[None, :]
+    else:
+        p_gg_t, p_bb_t = p_gg, p_bb
+    prev_state = prev_state_rows(states)
+    p_good = jnp.where(prev_state == 1, p_gg_t, 1.0 - p_bb_t)
+    first = (jnp.arange(rounds) == 0)[:, None]
+    return jnp.where(first, pi_g[None, :], p_good)
+
+
+# ---------------------------------------------------------------------------
+# registered policies
+# ---------------------------------------------------------------------------
+
+
+@register("lea", description="paper LEA: all-history transition counts (Sec. 3.2)")
+def _lea(ctx: PolicyContext) -> jnp.ndarray:
+    return lea_p_good(ctx.states)
+
+
+@register("oracle", uses_model=True,
+          description="genie-aided optimum (Thm. 4.6): true one-step conditional")
+def _oracle(ctx: PolicyContext) -> jnp.ndarray:
+    return oracle_p_good(ctx.states, ctx.p_gg, ctx.p_bb, ctx.pi_g)
+
+
+def windowed_lea(window: int, name: str | None = None) -> Policy:
+    """A sliding-window LEA policy instance (``resolve("lea_window<W>")``)."""
+    if window < 1:
+        raise ValueError("window must be >= 1")
+
+    def traj(ctx: PolicyContext) -> jnp.ndarray:
+        return predict_from_counts(
+            ctx.states, windowed_counts_before_round(ctx.states, window)
+        )
+
+    return Policy(
+        name=name or f"lea_window{window}", trajectory=traj,
+        description=f"windowed LEA: counts over the last {window} transitions",
+    )
+
+
+def _discount_name(gamma: float) -> str:
+    """The canonical ``lea_discount<D>`` spelling with D = gamma's decimal
+    digits (gamma = D / 10**len(D)): 0.97 -> lea_discount97, 0.995 ->
+    lea_discount995 — exactly what the registry's dynamic resolver parses
+    back, so registration and resolution can never disagree."""
+    digits = f"{gamma:.12f}".rstrip("0")[2:]   # "0.97" -> "97"
+    if not digits or int(digits) / 10 ** len(digits) != gamma:
+        raise ValueError(
+            f"gamma={gamma!r} has no exact lea_discount<D> spelling; pass an "
+            "explicit name="
+        )
+    return f"lea_discount{digits}"
+
+
+def discounted_lea(gamma: float, name: str | None = None) -> Policy:
+    """A discounted-count LEA policy instance (``resolve("lea_discount<D>")``)."""
+    if not 0.0 < gamma < 1.0:
+        raise ValueError("gamma must be in (0, 1)")
+
+    def traj(ctx: PolicyContext) -> jnp.ndarray:
+        return predict_from_counts(
+            ctx.states, discounted_counts_before_round(ctx.states, gamma)
+        )
+
+    return Policy(
+        name=name or _discount_name(gamma), trajectory=traj,
+        description=f"discounted LEA: counts decayed by gamma={gamma:g} per round",
+    )
+
+
+@register("thompson", needs_key=True,
+          description="Beta-posterior Thompson sampling on transition probs")
+def _thompson(ctx: PolicyContext) -> jnp.ndarray:
+    """Posterior draw per round: p_gg ~ Beta(C_gg+1, C_gb+1) and
+    p_bb ~ Beta(C_bb+1, C_bg+1) (the Laplace-smoothed counts ARE the
+    posterior parameters), predict with the sample.  Rounds with no data
+    draw from the uniform prior — native exploration."""
+    counts = counts_before_round(ctx.states)
+    kg, kb = jax.random.split(ctx.key)
+    s_gg = jax.random.beta(kg, counts[..., 0] + 1.0, counts[..., 1] + 1.0)
+    s_bb = jax.random.beta(kb, counts[..., 3] + 1.0, counts[..., 2] + 1.0)
+    prev_state = prev_state_rows(ctx.states)
+    return jnp.where(prev_state == 1, s_gg, 1.0 - s_bb).astype(jnp.float32)
+
+
+@register("ucb", description="optimistic UCB: LEA estimate + sqrt(2 ln m / visits)")
+def _ucb(ctx: PolicyContext) -> jnp.ndarray:
+    """Optimism in the face of uncertainty: the LEA point estimate plus a
+    per-worker confidence bonus shrinking with the visits to the current
+    conditioning state, clipped into [0, 1]."""
+    states = ctx.states
+    counts = counts_before_round(states)
+    p_gg_hat, p_bb_hat = lea_mod.smoothed_transitions(counts)
+    prev_state = prev_state_rows(states)
+    p_hat = jnp.where(prev_state == 1, p_gg_hat, 1.0 - p_bb_hat)
+    visits = jnp.where(
+        prev_state == 1,
+        counts[..., 0] + counts[..., 1],
+        counts[..., 2] + counts[..., 3],
+    )
+    m = jnp.arange(states.shape[0], dtype=jnp.float32)[:, None]
+    bonus = jnp.sqrt(2.0 * jnp.log1p(m) / (visits + 1.0))
+    return jnp.clip(p_hat + bonus, 0.0, 1.0).astype(jnp.float32)
+
+
+# concrete members of the parameterised families, pre-registered so
+# ``policies.names()`` / the catalogue show canonical instances
+from .registry import register_policy as _register_policy  # noqa: E402
+
+_register_policy(windowed_lea(64))
+_register_policy(windowed_lea(256))
+_register_policy(discounted_lea(0.97))

@@ -1,0 +1,116 @@
+"""Timely-throughput regret accounting against the genie oracle.
+
+The paper's optimality claim (Thm. 5.1) is a vanishing-regret statement:
+LEA's timely throughput approaches the genie-aided optimum R*(d) as the
+horizon grows.  This module makes that measurable for ANY policy the
+registry knows: per-round regret is the oracle's success indicator minus
+the policy's on the SAME worker trajectory (the engine already runs all
+strategies on one shared trajectory, so the comparison is paired, not
+independent), and cumulative regret is its running sum.
+
+Shapes are batched over the sweep grid: ``succ`` is any ``(..., M, S)``
+success array — a single simulation's (M, S), a sweep row batch's
+(B, M, S) — and every function maps over the leading axes.  Sums of 0/1
+indicators are taken in float32 (exact below 2^24 rounds, the engine-wide
+convention).
+
+Sublinear cumulative regret == the policy converges to the oracle;
+linear == a persistent gap (e.g. vanilla LEA on a drifting chain whose
+all-history counts never track the current regime).  The acceptance tests
+assert both regimes.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+REFERENCE = "oracle"
+
+
+def _strategy_index(strategies: Sequence[str], name: str) -> int:
+    try:
+        return tuple(strategies).index(name)
+    except ValueError:
+        raise ValueError(
+            f"strategy {name!r} not in {tuple(strategies)}; regret needs the "
+            f"reference policy in the simulated strategy tuple"
+        ) from None
+
+
+def per_round_regret(
+    succ,
+    strategies: Sequence[str],
+    policy: str,
+    reference: str = REFERENCE,
+):
+    """(..., M) per-round regret of ``policy`` vs ``reference``.
+
+    +1 where the oracle succeeded and the policy failed, -1 the other way
+    (a policy can win single rounds by luck; only cumulative sums are
+    meaningful), 0 where they agree.
+    """
+    succ = jnp.asarray(succ)
+    j_ref = _strategy_index(strategies, reference)
+    j_pol = _strategy_index(strategies, policy)
+    return (
+        succ[..., j_ref].astype(jnp.float32) - succ[..., j_pol].astype(jnp.float32)
+    )
+
+
+def cumulative_regret(
+    succ,
+    strategies: Sequence[str],
+    policy: str,
+    reference: str = REFERENCE,
+):
+    """(..., M) running cumulative regret along the round axis."""
+    return jnp.cumsum(
+        per_round_regret(succ, strategies, policy, reference), axis=-1
+    )
+
+
+def final_regret(
+    succ,
+    strategies: Sequence[str],
+    reference: str = REFERENCE,
+) -> Mapping[str, np.ndarray]:
+    """Total regret per non-reference strategy, reduced over rounds only.
+
+    Returns ``{strategy: (...,) float64}`` — one value per leading batch
+    element (a scalar array for an unbatched (M, S) input).  The reference
+    maps to exact zeros, kept so consumers can iterate uniformly.
+    """
+    succ = jnp.asarray(succ)
+    out = {}
+    for s in strategies:
+        out[s] = np.asarray(
+            jnp.sum(per_round_regret(succ, strategies, s, reference), axis=-1),
+            np.float64,
+        )
+    return out
+
+
+def regret_curve_summary(
+    succ,
+    strategies: Sequence[str],
+    policy: str,
+    reference: str = REFERENCE,
+    *,
+    points: int = 16,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(rounds, mean cumulative regret) sampled at ``points`` horizons.
+
+    Averages over all leading batch axes — the paired Monte-Carlo estimate
+    of E[Regret(m)] used by the sublinearity tests and bench_policies.
+    """
+    cum = np.asarray(cumulative_regret(succ, strategies, policy, reference),
+                     np.float64)
+    rounds_total = cum.shape[-1]
+    idx = np.unique(
+        np.linspace(1, rounds_total, num=min(points, rounds_total), dtype=int)
+    ) - 1
+    mean_cum = cum.reshape(-1, rounds_total).mean(axis=0)
+    return idx + 1, mean_cum[idx]

@@ -148,7 +148,7 @@ def suggest_round_chunk(
         b = math.ceil(b / mesh.devices.size)
     n = group.lp.n
     s = len(group.strategies)
-    a = sum(1 for st in group.strategies if st in throughput._ALLOCATOR_STRATEGIES)
+    a = len(throughput.allocator_strategies(group.strategies))
     per_round = 4 * b * (8 * (s + 2) * n)
     if n <= _PAIRWISE_RANK_MAX_N:
         per_round += 4 * b * (a * n * n)

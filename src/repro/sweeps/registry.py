@@ -32,17 +32,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lea import LoadParams
-from repro.core.throughput import STRATEGIES
+from repro.core.throughput import strategy_known
+
+# a schedule segment: (start_round, p_gg row, p_bb row) — the chain in force
+# from start_round until the next segment's start (piecewise-constant)
+ScheduleSegment = tuple[int, tuple[float, ...], tuple[float, ...]]
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One named simulation cell (hashable: probabilities are tuples)."""
+    """One named simulation cell (hashable: probabilities are tuples).
+
+    ``strategies`` may name any registered policy
+    (:mod:`repro.policies`) alongside the engine-native static draws.
+    A non-empty ``schedule`` makes the chain non-stationary: piecewise-
+    constant segments materialised into (rounds, n) transition arrays at
+    batch-build time (``p_gg``/``p_bb`` then hold the round-0 rows, kept
+    for display and validation).
+    """
 
     name: str
     family: str
     lp: LoadParams
-    p_gg: tuple[float, ...]          # per-worker, length lp.n
+    p_gg: tuple[float, ...]          # per-worker, length lp.n (round-0 chain)
     p_bb: tuple[float, ...]
     mu_g: float
     mu_b: float
@@ -52,20 +64,57 @@ class Scenario:
     baseline: str = "static"
     seed: int | None = None          # explicit PRNGKey seed (paper replication)
     meta: tuple[tuple[str, Any], ...] = ()
+    schedule: tuple[ScheduleSegment, ...] = ()
 
     def __post_init__(self):
         if len(self.p_gg) != self.lp.n or len(self.p_bb) != self.lp.n:
             raise ValueError(f"{self.name}: p_gg/p_bb must have length n={self.lp.n}")
         for s in self.strategies:
-            if s not in STRATEGIES:
+            if not strategy_known(s):
                 raise ValueError(f"{self.name}: unknown strategy {s!r}")
         if self.baseline not in self.strategies:
             raise ValueError(f"{self.name}: baseline {self.baseline!r} not in strategies")
+        if self.schedule:
+            starts = [seg[0] for seg in self.schedule]
+            if starts[0] != 0:
+                raise ValueError(f"{self.name}: schedule must start at round 0")
+            if any(b <= a for a, b in zip(starts, starts[1:])):
+                raise ValueError(f"{self.name}: schedule starts must increase")
+            if starts[-1] >= self.rounds:
+                raise ValueError(f"{self.name}: schedule start beyond rounds")
+            for start, g, b in self.schedule:
+                if len(g) != self.lp.n or len(b) != self.lp.n:
+                    raise ValueError(
+                        f"{self.name}: schedule rows at {start} must have length n"
+                    )
+            if (tuple(self.schedule[0][1]) != tuple(self.p_gg)
+                    or tuple(self.schedule[0][2]) != tuple(self.p_bb)):
+                raise ValueError(
+                    f"{self.name}: p_gg/p_bb must equal the schedule's round-0 rows"
+                )
 
     @property
     def group_signature(self) -> tuple:
-        """The static-arg signature the executor compiles per."""
-        return (self.lp, self.rounds, self.strategies)
+        """The static-arg signature the executor compiles per.
+
+        Scheduled scenarios batch as (rounds, n) chain arrays — a different
+        input shape — so they group separately from stationary ones.
+        """
+        return (self.lp, self.rounds, self.strategies, bool(self.schedule))
+
+    def chain_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Materialise the chain: (n,) float32 rows, or (rounds, n) when
+        scheduled (row t = the chain governing the transition into round t)."""
+        if not self.schedule:
+            return (np.asarray(self.p_gg, np.float32),
+                    np.asarray(self.p_bb, np.float32))
+        p_gg = np.empty((self.rounds, self.lp.n), np.float32)
+        p_bb = np.empty((self.rounds, self.lp.n), np.float32)
+        bounds = [seg[0] for seg in self.schedule] + [self.rounds]
+        for (start, g, b), end in zip(self.schedule, bounds[1:]):
+            p_gg[start:end] = np.asarray(g, np.float32)
+            p_bb[start:end] = np.asarray(b, np.float32)
+        return p_gg, p_bb
 
     def meta_dict(self) -> dict[str, Any]:
         return dict(self.meta)
@@ -75,8 +124,8 @@ class ScenarioBatch(NamedTuple):
     """Flat (B, ...) pytree of simulation inputs — one row per (scenario, seed)."""
 
     keys: jnp.ndarray       # (B, 2) uint32 PRNG keys
-    p_gg: jnp.ndarray       # (B, n) float32
-    p_bb: jnp.ndarray       # (B, n) float32
+    p_gg: jnp.ndarray       # (B, n) float32 — or (B, rounds, n) when scheduled
+    p_bb: jnp.ndarray       # (B, n) float32 — or (B, rounds, n)
     mu_g: jnp.ndarray       # (B,)   float32
     mu_b: jnp.ndarray       # (B,)   float32
     deadline: jnp.ndarray   # (B,)   float32
@@ -206,15 +255,16 @@ def build_groups(
         by_sig.setdefault(sc.group_signature, []).append((pos, sc))
 
     groups = []
-    for (lp, rounds, strategies), entries in by_sig.items():
+    for (lp, rounds, strategies, _scheduled), entries in by_sig.items():
         scs = [sc for _, sc in entries]
         keys, p_gg, p_bb, mu_g, mu_b, deadline, rows = [], [], [], [], [], [], []
         for si, (pos, sc) in enumerate(entries):
             base = scenario_base_key(sc, fallback_seed_base, pos)
+            chain_gg, chain_bb = sc.chain_arrays()
             for s in range(seeds):
                 keys.append(row_key(base, s))
-                p_gg.append(np.asarray(sc.p_gg, np.float32))
-                p_bb.append(np.asarray(sc.p_bb, np.float32))
+                p_gg.append(chain_gg)
+                p_bb.append(chain_bb)
                 mu_g.append(sc.mu_g)
                 mu_b.append(sc.mu_b)
                 deadline.append(sc.deadline)

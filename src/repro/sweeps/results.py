@@ -9,6 +9,14 @@ Bernoulli normal approximation (rounds are not independent under a mixing
 chain, so the single-seed CI is a lower bound on the true width; repeats
 give the honest one).
 
+Regret axis: whenever a scenario's strategies include the genie
+``"oracle"``, every other strategy additionally gets its final cumulative
+timely-throughput regret vs the oracle (:mod:`repro.policies.regret` —
+paired per-round differences on the shared trajectory, summed over rounds,
+averaged over Monte-Carlo repeats).  Manifest rows carry these as
+``regret_<strategy>`` columns, so policy sweeps report throughput, baseline
+ratio AND convergence-to-optimal in one document.
+
 :func:`manifest` renders results as a JSON document in the ``BENCH_*.json``
 trajectory shape (a ``bench`` name, run metadata, a flat ``results`` list),
 and :func:`write_manifest` drops it at the repo root next to
@@ -26,6 +34,8 @@ from typing import Any, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.policies import regret as regret_mod
+
 from .registry import Scenario, SweepGroup
 
 _Z95 = 1.959963984540054  # two-sided 95% normal quantile
@@ -41,6 +51,9 @@ class ScenarioResult:
     per_seed: dict[str, tuple[float, ...]]   # strategy -> per-repeat R
     ci95: dict[str, tuple[float, float]]     # strategy -> (lo, hi)
     ratio: dict[str, float]                  # strategy -> R_s / R_baseline
+    # strategy -> mean final cumulative regret vs the oracle (empty when the
+    # scenario does not simulate the oracle)
+    regret: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def name(self) -> str:
@@ -75,6 +88,7 @@ class ScenarioResult:
                 for s, v in self.ratio.items()
                 if s != self.scenario.baseline
             },
+            **{f"regret_{s}": v for s, v in self.regret.items()},
         }
 
 
@@ -103,6 +117,7 @@ def summarize_group(group: SweepGroup, succ: np.ndarray) -> list[ScenarioResult]
         jnp.mean(jnp.asarray(succ).astype(jnp.float32), axis=1), np.float64
     )                                                        # (B, S)  exact cast
     results = []
+    has_oracle = regret_mod.REFERENCE in group.strategies
     for si, sc in enumerate(group.scenarios):
         rows = [ri for ri, rm in enumerate(group.rows) if rm.scenario_index == si]
         seed_tp = per_round[rows]                            # (seeds, S)
@@ -117,9 +132,18 @@ def summarize_group(group: SweepGroup, succ: np.ndarray) -> list[ScenarioResult]
             s: (throughput[s] / base if base > 0 else float("inf"))
             for s in group.strategies
         }
+        regret: dict[str, float] = {}
+        if has_oracle:
+            # (seeds, rounds, S) -> per-strategy mean final cumulative regret
+            finals = regret_mod.final_regret(succ[rows], group.strategies)
+            regret = {
+                s: float(v.mean())
+                for s, v in finals.items()
+                if s != regret_mod.REFERENCE
+            }
         results.append(ScenarioResult(
             scenario=sc, seeds=seed_tp.shape[0], throughput=throughput,
-            per_seed=per_seed, ci95=ci95, ratio=ratio,
+            per_seed=per_seed, ci95=ci95, ratio=ratio, regret=regret,
         ))
     return results
 

@@ -22,9 +22,23 @@ Computing* (arXiv:2206.09399)):
                           work), preempted-pool regimes
   * ``straggler_slack`` — speed-ratio x deadline grid: how much straggler
                           slack LEA can squeeze vs static
+
+Non-stationary families (the ``repro.policies`` proving grounds — chains
+whose parameters move, where windowed/discounted estimators beat vanilla
+LEA's all-history counts; cf. the changing-worker regimes of Slack Squeeze
+Coded Computing):
+
+  * ``drifting_chains`` — per-worker availability drifts sinusoidally with
+                          phase offsets, so the identity of the reliable
+                          workers rotates continuously
+  * ``regime_switch``   — abrupt regime changes every ``dwell`` rounds: a
+                          rotating third of the pool degrades (preemption /
+                          credit-exhaustion waves)
 """
 
 from __future__ import annotations
+
+import math
 
 from repro.configs.paper_lea import EC2, SIM
 from repro.core import markov
@@ -33,9 +47,33 @@ from repro.core.lea import LoadParams
 
 from .registry import Scenario, register
 
+# default strategy tuple for the non-stationary families: vanilla LEA vs its
+# adaptive variants, the static floor and the genie ceiling (regret columns)
+POLICY_STRATEGIES = ("lea", "lea_window64", "lea_discount97", "static", "oracle")
+
 
 def _const(n: int, v: float) -> tuple[float, ...]:
     return (float(v),) * n
+
+
+def _chain_rows(pis, lam: float) -> tuple[tuple[float, ...], tuple[float, ...]]:
+    """Per-worker (p_gg, p_bb) rows with stationary dists ``pis`` and shared
+    mixing eigenvalue ``lam`` (the bursty_chains parametrization)."""
+    p_gg = tuple(float(pi + (1.0 - pi) * lam) for pi in pis)
+    p_bb = tuple(float((1.0 - pi) + pi * lam) for pi in pis)
+    return p_gg, p_bb
+
+
+def _sim_lp(k: int = SIM.k, deg_f: int = SIM.deg_f) -> LoadParams:
+    """The paper Sec. 6.1 LoadParams: K* from ``CodeSpec(n, r, k, deg_f)``,
+    two-level loads from the mu * d budget — shared by every family that
+    runs on the SIM worker pool."""
+    spec = CodeSpec(SIM.n, SIM.r, k, deg_f)
+    return LoadParams(
+        n=SIM.n, kstar=spec.recovery_threshold,
+        ell_g=int(min(SIM.mu_g * SIM.deadline, SIM.r)),
+        ell_b=int(SIM.mu_b * SIM.deadline),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -45,12 +83,7 @@ def _const(n: int, v: float) -> tuple[float, ...]:
 @register("fig3")
 def fig3(rounds: int | None = None) -> tuple[Scenario, ...]:
     """Paper Fig. 3: 4 Markov chains, n=15, K*=99, LEA vs static vs oracle."""
-    spec = CodeSpec(SIM.n, SIM.r, SIM.k, SIM.deg_f)
-    lp = LoadParams(
-        n=SIM.n, kstar=spec.recovery_threshold,
-        ell_g=int(min(SIM.mu_g * SIM.deadline, SIM.r)),
-        ell_b=int(SIM.mu_b * SIM.deadline),
-    )
+    lp = _sim_lp()
     rounds = rounds or SIM.rounds
     return tuple(
         Scenario(
@@ -99,11 +132,15 @@ def fig4(rounds: int = 400) -> tuple[Scenario, ...]:
 
 
 @register("kstar_table")
-def kstar_table() -> tuple[Scenario, ...]:
-    """Recovery-threshold worked examples (eqs. 15/16) — catalogue only.
+def kstar_table(rounds: int = 0) -> tuple[Scenario, ...]:
+    """Recovery-threshold worked examples (eqs. 15/16) — catalogue by default.
 
-    These scenarios are never simulated (``rounds=0``); the table benchmark
-    reads the expected K* / coding mode off ``meta`` and checks ``CodeSpec``.
+    With the default ``rounds=0`` these scenarios are never simulated; the
+    table benchmark reads the expected K* / coding mode off ``meta`` and
+    checks ``CodeSpec`` (``sweeps.run`` raises its catalogue-only error).
+    Passing ``rounds > 0`` makes the family genuinely expandable into
+    simulatable scenarios — each worked example runs on a placeholder
+    fifty-fifty chain, useful for smoke-testing the K* grid end to end.
     """
     cases = [
         # (n, r, k, deg_f, expected K*, expected mode, where in the paper);
@@ -123,7 +160,7 @@ def kstar_table() -> tuple[Scenario, ...]:
         scenarios.append(Scenario(
             name=f"kstar_{where.replace(' ', '_')}", family="kstar_table",
             lp=lp, p_gg=_const(n, 0.5), p_bb=_const(n, 0.5),
-            mu_g=2.0, mu_b=1.0, deadline=1.0, rounds=0,
+            mu_g=2.0, mu_b=1.0, deadline=1.0, rounds=rounds,
             strategies=("lea",), baseline="lea",
             meta=(("n", n), ("r", r), ("k", k), ("deg_f", deg),
                   ("expect_kstar", want), ("mode", want_mode), ("where", where)),
@@ -172,21 +209,15 @@ def bursty_chains(
     chain's mixing eigenvalue lam = p_gg + p_bb - 1 ramps from iid (lam=0) to
     long bursts (lam -> 1) — the regime where LEA's one-step prediction gains
     the most over the stationary static draw."""
-    spec = CodeSpec(SIM.n, SIM.r, SIM.k, SIM.deg_f)
-    lp = LoadParams(
-        n=SIM.n, kstar=spec.recovery_threshold,
-        ell_g=int(min(SIM.mu_g * SIM.deadline, SIM.r)),
-        ell_b=int(SIM.mu_b * SIM.deadline),
-    )
+    lp = _sim_lp()
     scenarios = []
     for lam in lams:
-        # p_gg = pi_g + (1 - pi_g) lam, p_bb = (1 - pi_g) + pi_g lam keeps the
-        # stationary distribution at pi_g for every lam in [0, 1).
-        p_gg = pi_g + (1.0 - pi_g) * lam
-        p_bb = (1.0 - pi_g) + pi_g * lam
+        # _chain_rows keeps the stationary distribution at pi_g for every
+        # lam in [0, 1) while the mixing eigenvalue ramps.
+        p_gg, p_bb = _chain_rows((pi_g,) * SIM.n, lam)
         scenarios.append(Scenario(
             name=f"bursty_lam{lam:g}", family="bursty_chains", lp=lp,
-            p_gg=_const(SIM.n, p_gg), p_bb=_const(SIM.n, p_bb),
+            p_gg=p_gg, p_bb=p_bb,
             mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline, rounds=rounds,
             meta=(("lam", lam), ("pi_g", pi_g)),
         ))
@@ -206,22 +237,16 @@ def hetero_kstar(
     per K*, not once per scenario."""
     scenarios = []
     for k in ks:
-        spec = CodeSpec(SIM.n, SIM.r, k, deg_f)
-        lp = LoadParams(
-            n=SIM.n, kstar=spec.recovery_threshold,
-            ell_g=int(min(SIM.mu_g * SIM.deadline, SIM.r)),
-            ell_b=int(SIM.mu_b * SIM.deadline),
-        )
+        lp = _sim_lp(k=k, deg_f=deg_f)
         for lam in lams:
-            p_gg = pi_g + (1.0 - pi_g) * lam
-            p_bb = (1.0 - pi_g) + pi_g * lam
+            p_gg, p_bb = _chain_rows((pi_g,) * SIM.n, lam)
             scenarios.append(Scenario(
-                name=f"kstar{spec.recovery_threshold}_lam{lam:g}",
+                name=f"kstar{lp.kstar}_lam{lam:g}",
                 family="hetero_kstar", lp=lp,
-                p_gg=_const(SIM.n, p_gg), p_bb=_const(SIM.n, p_bb),
+                p_gg=p_gg, p_bb=p_bb,
                 mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline,
                 rounds=rounds,
-                meta=(("k", k), ("kstar", spec.recovery_threshold), ("lam", lam)),
+                meta=(("k", k), ("kstar", lp.kstar), ("lam", lam)),
             ))
     return tuple(scenarios)
 
@@ -253,6 +278,97 @@ def elastic_pool(
             p_gg=_const(n, p_gg), p_bb=_const(n, p_bb),
             mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline, rounds=rounds,
             meta=(("n", n), ("kstar", spec.recovery_threshold)),
+        ))
+    return tuple(scenarios)
+
+
+# ---------------------------------------------------------------------------
+# non-stationary families (repro.policies proving grounds)
+# ---------------------------------------------------------------------------
+
+@register("drifting_chains")
+def drifting_chains(
+    periods: tuple[int, ...] = (400, 1000),
+    rounds: int = 2_000,
+    step: int = 50,
+    lam: float = 0.5,
+    base_pi: float = 0.55,
+    amp: float = 0.35,
+    strategies: tuple[str, ...] = POLICY_STRATEGIES,
+    baseline: str = "lea",
+) -> tuple[Scenario, ...]:
+    """Sinusoidal availability drift with per-worker phase offsets.
+
+    Worker i's stationary availability follows
+    ``pi_i(t) = base_pi + amp * sin(2*pi*(t/period + i/n))`` (piecewise-
+    constant in blocks of ``step`` rounds; mixing eigenvalue ``lam`` fixed),
+    so WHICH workers are reliable rotates continuously — vanilla LEA's
+    all-history counts converge to every worker's time-average and stop
+    ranking, while windowed/discounted estimators track the current phase.
+    One scenario per drift period."""
+    n = SIM.n
+    lp = _sim_lp()
+    scenarios = []
+    for period in periods:
+        schedule = []
+        for start in range(0, rounds, step):
+            t_mid = start + step / 2.0
+            pis = [
+                min(max(base_pi + amp * math.sin(
+                    2.0 * math.pi * (t_mid / period + i / n)), 0.02), 0.98)
+                for i in range(n)
+            ]
+            p_gg, p_bb = _chain_rows(pis, lam)
+            schedule.append((start, p_gg, p_bb))
+        scenarios.append(Scenario(
+            name=f"drift_T{period}", family="drifting_chains", lp=lp,
+            p_gg=schedule[0][1], p_bb=schedule[0][2],
+            mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline,
+            rounds=rounds, strategies=tuple(strategies), baseline=baseline,
+            schedule=tuple(schedule),
+            meta=(("period", period), ("step", step), ("lam", lam),
+                  ("base_pi", base_pi), ("amp", amp)),
+        ))
+    return tuple(scenarios)
+
+
+@register("regime_switch")
+def regime_switch(
+    dwells: tuple[int, ...] = (250, 500),
+    rounds: int = 2_000,
+    lam: float = 0.5,
+    pi_good: float = 0.9,
+    pi_degraded: float = 0.1,
+    n_rotate: int = 3,
+    strategies: tuple[str, ...] = POLICY_STRATEGIES,
+    baseline: str = "lea",
+) -> tuple[Scenario, ...]:
+    """Abrupt degradation waves: every ``dwell`` rounds a different third of
+    the pool degrades (preemption / credit-exhaustion, cf. the Fig. 1 EC2
+    traces), rotating through ``n_rotate`` worker groups.
+
+    Long-run, every worker is degraded 1/n_rotate of the time, so vanilla
+    LEA's cumulative counts blur the groups together; a windowed/discounted
+    estimator re-identifies the currently-degraded group within its memory
+    length after each switch.  One scenario per dwell time."""
+    n = SIM.n
+    lp = _sim_lp()
+    scenarios = []
+    for dwell in dwells:
+        schedule = []
+        for regime, start in enumerate(range(0, rounds, dwell)):
+            degraded = {i for i in range(n) if i % n_rotate == regime % n_rotate}
+            pis = [pi_degraded if i in degraded else pi_good for i in range(n)]
+            p_gg, p_bb = _chain_rows(pis, lam)
+            schedule.append((start, p_gg, p_bb))
+        scenarios.append(Scenario(
+            name=f"regime_dwell{dwell}", family="regime_switch", lp=lp,
+            p_gg=schedule[0][1], p_bb=schedule[0][2],
+            mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline,
+            rounds=rounds, strategies=tuple(strategies), baseline=baseline,
+            schedule=tuple(schedule),
+            meta=(("dwell", dwell), ("lam", lam), ("pi_good", pi_good),
+                  ("pi_degraded", pi_degraded), ("n_rotate", n_rotate)),
         ))
     return tuple(scenarios)
 

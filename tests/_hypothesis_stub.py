@@ -103,3 +103,28 @@ def _as_module() -> types.ModuleType:
     mod.strategies = st_mod
     mod.__stub__ = True
     return mod
+
+
+def install_if_missing() -> types.ModuleType:
+    """Make ``import hypothesis`` work: REAL package if installed, else stub.
+
+    The real hypothesis always wins — dev environments that have it get
+    genuine shrinking and example databases; only when the import machinery
+    cannot find it at all (the pinned container) is the stub registered
+    under ``sys.modules``.  Idempotent: repeated calls return whatever is
+    already active, so conftest re-imports and direct script runs agree.
+    """
+    import importlib.util
+    import sys
+
+    existing = sys.modules.get("hypothesis")
+    if existing is not None:
+        return existing
+    if importlib.util.find_spec("hypothesis") is not None:
+        import hypothesis  # the real package
+
+        return hypothesis
+    mod = _as_module()
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+    return mod

@@ -10,13 +10,11 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-# The container has no `hypothesis`; fall back to the deterministic seeded
-# stub in tests/_hypothesis_stub.py so property tests still collect and run.
-try:
-    import hypothesis  # noqa: F401
-except ImportError:
-    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from _hypothesis_stub import _as_module
+# Property tests use the REAL `hypothesis` whenever it is installed (genuine
+# shrinking in dev environments); only when the package is absent (the pinned
+# container) does tests/_hypothesis_stub.py register its deterministic seeded
+# fallback so the tests still collect and run.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_stub import install_if_missing
 
-    sys.modules["hypothesis"] = _as_module()
-    sys.modules["hypothesis.strategies"] = sys.modules["hypothesis"].strategies
+install_if_missing()

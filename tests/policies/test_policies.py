@@ -1,0 +1,312 @@
+"""repro.policies: registry resolution, estimator closed forms, bit-identity
+of the registry-resolved ``lea``/``oracle`` with the pre-refactor engine,
+non-stationary chain support, and the engine integration paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import policies
+from repro.core import lea, markov, throughput
+from repro.core.lea import LoadParams
+from repro.policies import estimators
+from repro.policies.api import Policy, PolicyContext
+
+LP = LoadParams(n=15, kstar=99, ell_g=10, ell_b=3)
+
+
+def _ctx(states, p_gg=None, p_bb=None, key=None):
+    n = states.shape[1]
+    p_gg = jnp.full((n,), 0.8) if p_gg is None else p_gg
+    p_bb = jnp.full((n,), 0.7) if p_bb is None else p_bb
+    row0 = (p_gg[0], p_bb[0]) if p_gg.ndim == 2 else (p_gg, p_bb)
+    return PolicyContext(
+        states=states, p_gg=p_gg, p_bb=p_bb,
+        pi_g=markov.stationary_good_prob(*row0),
+        key=jax.random.PRNGKey(0) if key is None else key,
+    )
+
+
+def _states(key=0, rounds=60, n=6, p=0.6):
+    return jax.random.bernoulli(
+        jax.random.PRNGKey(key), p, (rounds, n)
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_policies_registered():
+    names = policies.names()
+    assert {"lea", "oracle", "lea_window64", "lea_window256", "lea_discount97",
+            "thompson", "ucb"} <= set(names)
+    cat = policies.catalogue()
+    for n in names:
+        assert n in cat
+        assert policies.resolve(n).name == n
+
+
+def test_dynamic_family_spellings_resolve_and_memoise():
+    a = policies.resolve("lea_window48")
+    assert a is policies.resolve("lea_window48")    # memoised instance
+    assert "lea_window48" in policies.names()
+    d = policies.resolve("lea_discount995")
+    assert "0.995" in d.description
+    with pytest.raises(KeyError):
+        policies.resolve("lea_window0")
+    with pytest.raises(KeyError):
+        policies.resolve("no_such_policy")
+
+
+def test_is_registered_rejects_out_of_range_dynamic_spellings():
+    """Validation-time and resolve-time must agree: a spelling resolve would
+    reject is not 'registered', so engines/scenarios fail with the clean
+    ValueError instead of a KeyError mid-trace."""
+    assert not policies.is_registered("lea_window0")
+    assert not policies.is_registered("lea_discount0")
+    assert policies.is_registered("lea_window1")
+    assert policies.is_registered("lea_discount5")
+    assert not throughput.strategy_known("lea_window0")
+
+
+def test_discount_names_round_trip_through_dynamic_resolver():
+    """discounted_lea's default name is the canonical lea_discount<D>
+    spelling (D = decimal digits), so registering an instance and resolving
+    its name dynamically can never disagree about gamma."""
+    assert estimators.discounted_lea(0.995).name == "lea_discount995"
+    assert estimators.discounted_lea(0.5).name == "lea_discount5"
+    with pytest.raises(ValueError, match="no exact"):
+        estimators.discounted_lea(1.0 / 3.0)
+
+
+def test_register_rejects_duplicates_and_bad_names():
+    with pytest.raises(ValueError):
+        policies.register_policy(policies.resolve("lea"))
+    with pytest.raises(ValueError):
+        Policy(name="not an identifier", trajectory=lambda ctx: ctx.states)
+
+
+def test_custom_policy_usable_as_engine_strategy():
+    name = "always_stationary_test"
+    if not policies.is_registered(name):
+        @policies.register(name, description="predicts pi_g every round")
+        def _traj(ctx):
+            return jnp.broadcast_to(ctx.pi_g, ctx.states.shape).astype(jnp.float32)
+
+    succ = throughput.simulate_strategies(
+        jax.random.PRNGKey(0), LP, jnp.full((15,), 0.8), jnp.full((15,), 0.7),
+        10.0, 3.0, 1.0, 40, strategies=(name, "lea"),
+    )
+    assert succ.shape == (40, 2)
+
+
+def test_unknown_strategy_raises_with_policy_names():
+    with pytest.raises(ValueError, match="not a registered policy"):
+        throughput.simulate_strategies(
+            jax.random.PRNGKey(0), LP, jnp.full((15,), 0.8),
+            jnp.full((15,), 0.7), 10.0, 3.0, 1.0, 8, strategies=("nope",),
+        )
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: registry-resolved lea/oracle == pre-refactor closed forms
+# ---------------------------------------------------------------------------
+
+def test_registry_lea_matches_sequential_estimator_bitwise():
+    """The ``"lea"`` policy IS the engine's estimator replay: equal, bit for
+    bit, to sequential ``lea.update_estimator`` steps (the PR-1 invariant,
+    now asserted through the registry path)."""
+    states = _states(5, rounds=50, n=4)
+    p_traj = policies.resolve("lea").p_good_trajectory(_ctx(states))
+    est = lea.init_estimator(4)
+    for m in range(50):
+        want = jnp.where(
+            est.seen_prev, lea.predicted_good_prob(est), jnp.full((4,), 0.5)
+        )
+        np.testing.assert_array_equal(np.asarray(p_traj[m]), np.asarray(want))
+        est = lea.update_estimator(est, states[m])
+
+
+def test_engine_policy_path_matches_manual_replay_bitwise():
+    """The full refactored pipeline on ("lea", "oracle") reproduces a manual
+    composition of the PR-1 building blocks — same key split, trajectory,
+    closed-form p_good, one batched allocate, scoring — bit for bit."""
+    key = jax.random.PRNGKey(11)
+    p_gg, p_bb = jnp.full((15,), 0.85), jnp.full((15,), 0.65)
+    rounds = 120
+    succ = throughput.simulate_strategies(
+        key, LP, p_gg, p_bb, 10.0, 3.0, 1.0, rounds,
+        strategies=("lea", "oracle"),
+    )
+    # manual replay out of the building blocks
+    k_traj, _ = jax.random.split(key)
+    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)
+    pi_g = markov.stationary_good_prob(p_gg, p_bb)
+    p_lea = estimators.lea_p_good(states)
+    p_ora = estimators.oracle_p_good(states, p_gg, p_bb, pi_g)
+    loads, _ = lea.allocate(jnp.stack([p_lea, p_ora]), LP)
+    speeds = jnp.where(states == 1, 10.0, 3.0)
+    on_time = loads.astype(jnp.float32) / speeds <= 1.0 + 1e-9
+    received = jnp.sum(jnp.where(on_time, loads, 0), axis=-1)
+    want = jnp.moveaxis(received >= LP.kstar, 0, 1)
+    np.testing.assert_array_equal(np.asarray(succ), np.asarray(want))
+
+
+def test_policy_key_stream_does_not_perturb_deterministic_policies():
+    """Adding a randomised policy to the tuple must not change the lea/oracle
+    columns (policy-private keys are a disjoint fold_in stream)."""
+    key = jax.random.PRNGKey(3)
+    args = (jnp.full((15,), 0.8), jnp.full((15,), 0.7), 10.0, 3.0, 1.0, 80)
+    base = throughput.simulate_strategies(
+        key, LP, *args, strategies=("lea", "oracle"))
+    mixed = throughput.simulate_strategies(
+        key, LP, *args, strategies=("lea", "thompson", "oracle"))
+    np.testing.assert_array_equal(np.asarray(base[:, 0]), np.asarray(mixed[:, 0]))
+    np.testing.assert_array_equal(np.asarray(base[:, 1]), np.asarray(mixed[:, 2]))
+
+
+# ---------------------------------------------------------------------------
+# estimator closed forms
+# ---------------------------------------------------------------------------
+
+def test_windowed_counts_match_bruteforce_and_full_window_is_vanilla():
+    states = _states(1, rounds=40, n=3)
+    inc = np.asarray(estimators.transition_increments(states))
+    for window in (1, 5, 17):
+        got = np.asarray(estimators.windowed_counts_before_round(states, window))
+        for m in range(40):
+            lo, hi = max(m - 1 - window, 0), max(m - 1, 0)
+            np.testing.assert_array_equal(got[m], inc[lo:hi].sum(axis=0)
+                                          if hi > lo else np.zeros((3, 4)))
+    # window >= M reproduces the vanilla counts bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(estimators.windowed_counts_before_round(states, 40)),
+        np.asarray(estimators.counts_before_round(states)),
+    )
+
+
+def test_windowed_policy_with_full_window_equals_lea_bitwise():
+    states = _states(2, rounds=64, n=5)
+    np.testing.assert_array_equal(
+        np.asarray(policies.resolve("lea_window64").p_good_trajectory(_ctx(states))),
+        np.asarray(policies.resolve("lea").p_good_trajectory(_ctx(states))),
+    )
+
+
+def test_discounted_counts_match_sequential_recurrence():
+    states = _states(3, rounds=50, n=4)
+    gamma = 0.9
+    got = np.asarray(estimators.discounted_counts_before_round(states, gamma))
+    inc = np.asarray(estimators.transition_increments(states), np.float64)
+    z = np.zeros((4, 4))
+    want = [np.zeros((4, 4)), np.zeros((4, 4))]
+    for j in range(inc.shape[0] - 1):
+        z = gamma * z + inc[j]
+        want.append(z.copy())
+    np.testing.assert_allclose(got, np.stack(want), rtol=1e-5, atol=1e-5)
+
+
+def test_thompson_is_deterministic_per_key_and_bounded():
+    states = _states(4, rounds=30, n=5)
+    pol = policies.resolve("thompson")
+    a = pol.p_good_trajectory(_ctx(states, key=jax.random.PRNGKey(1)))
+    b = pol.p_good_trajectory(_ctx(states, key=jax.random.PRNGKey(1)))
+    c = pol.p_good_trajectory(_ctx(states, key=jax.random.PRNGKey(2)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert np.all(np.asarray(a) >= 0.0) and np.all(np.asarray(a) <= 1.0)
+    assert pol.needs_key
+
+
+def test_ucb_is_optimistic_and_clipped():
+    states = _states(6, rounds=40, n=5)
+    p_ucb = np.asarray(policies.resolve("ucb").p_good_trajectory(_ctx(states)))
+    p_lea = np.asarray(policies.resolve("lea").p_good_trajectory(_ctx(states)))
+    # optimism: never below the point estimate (0.5 fill aside), never > 1
+    assert np.all(p_ucb[1:] >= p_lea[1:] - 1e-6)
+    assert np.all(p_ucb <= 1.0)
+
+
+def test_oracle_tracks_time_varying_chain():
+    rounds, n = 20, 4
+    states = _states(7, rounds=rounds, n=n)
+    p_gg = jnp.asarray(np.linspace(0.55, 0.95, rounds)[:, None]
+                       * np.ones((1, n)), jnp.float32)
+    p_bb = jnp.asarray(np.linspace(0.9, 0.5, rounds)[:, None]
+                       * np.ones((1, n)), jnp.float32)
+    got = np.asarray(estimators.oracle_p_good(
+        states, p_gg, p_bb, markov.stationary_good_prob(p_gg[0], p_bb[0])))
+    prev = np.asarray(states)
+    for t in range(1, rounds):
+        want = np.where(prev[t - 1] == 1, np.asarray(p_gg)[t],
+                        1.0 - np.asarray(p_bb)[t])
+        np.testing.assert_allclose(got[t], want, rtol=1e-6)
+
+
+def test_policy_shape_validation():
+    bad = Policy(name="bad_shape", trajectory=lambda ctx: ctx.states[:1])
+    with pytest.raises(ValueError, match="returned shape"):
+        bad.p_good_trajectory(_ctx(_states(0, rounds=6, n=3)))
+
+
+# ---------------------------------------------------------------------------
+# non-stationary engine paths
+# ---------------------------------------------------------------------------
+
+def test_constant_schedule_bit_identical_to_stationary():
+    key = jax.random.PRNGKey(9)
+    rounds = 90
+    flat_g, flat_b = jnp.full((15,), 0.8), jnp.full((15,), 0.7)
+    sched_g = jnp.broadcast_to(flat_g, (rounds, 15))
+    sched_b = jnp.broadcast_to(flat_b, (rounds, 15))
+    a = throughput.simulate_strategies(
+        key, LP, flat_g, flat_b, 10.0, 3.0, 1.0, rounds,
+        strategies=("lea", "static", "oracle"))
+    b = throughput.simulate_strategies(
+        key, LP, sched_g, sched_b, 10.0, 3.0, 1.0, rounds,
+        strategies=("lea", "static", "oracle"))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_time_varying_samplers_bit_equal_and_shift_regime():
+    key = jax.random.PRNGKey(4)
+    rounds, n = 4000, 8
+    half = rounds // 2
+    p_gg = jnp.concatenate([jnp.full((half, n), 0.95), jnp.full((half, n), 0.3)])
+    p_bb = jnp.concatenate([jnp.full((half, n), 0.4), jnp.full((half, n), 0.9)])
+    t1 = markov.sample_trajectory(key, p_gg, p_bb, rounds)
+    t2 = markov.sample_trajectory_scan(key, p_gg, p_bb, rounds)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    freq = np.asarray(t1, np.float64).mean(axis=1)
+    # the two halves live in visibly different availability regimes
+    assert freq[:half].mean() > 0.75 and freq[half:].mean() < 0.35
+
+
+def test_time_varying_chain_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="one row per round"):
+        throughput.simulate_strategies(
+            jax.random.PRNGKey(0), LP, jnp.full((10, 15), 0.8),
+            jnp.full((10, 15), 0.7), 10.0, 3.0, 1.0, 8, strategies=("lea",),
+        )
+
+
+def test_round_chunked_policies_bit_identical_unchunked():
+    key = jax.random.PRNGKey(12)
+    rounds = 96
+    p_gg = jnp.broadcast_to(
+        jnp.asarray(np.linspace(0.6, 0.95, rounds), jnp.float32)[:, None],
+        (rounds, 15))
+    p_bb = jnp.full((rounds, 15), 0.7)
+    strategies = ("lea", "lea_window64", "lea_discount97", "thompson",
+                  "static", "oracle")
+    plain = throughput.simulate_strategies(
+        key, LP, p_gg, p_bb, 10.0, 3.0, 1.0, rounds, strategies=strategies)
+    for chunk in (1, 25, rounds):
+        chunked = throughput.simulate_strategies(
+            key, LP, p_gg, p_bb, 10.0, 3.0, 1.0, rounds,
+            strategies=strategies, round_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(chunked))

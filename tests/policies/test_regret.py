@@ -1,0 +1,175 @@
+"""Regret accounting + the ISSUE's acceptance criteria: sublinear LEA regret
+on stationary chains (>= 8 seeds) and windowed/discounted policies strictly
+beating vanilla LEA on the non-stationary families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import policies, sweeps
+from repro.core import throughput
+from repro.core.lea import LoadParams
+from repro.policies import regret
+
+LP = LoadParams(n=15, kstar=99, ell_g=10, ell_b=3)
+
+
+def _sweep(strategies, rounds=200, seeds=3, p_gg=0.8, p_bb=0.7):
+    keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(seeds)])
+    pg = jnp.broadcast_to(jnp.full((15,), p_gg), (seeds, 15))
+    pb = jnp.broadcast_to(jnp.full((15,), p_bb), (seeds, 15))
+    return throughput.sweep(keys, LP, pg, pb, 10.0, 3.0, 1.0, rounds,
+                            strategies=strategies)
+
+
+# ---------------------------------------------------------------------------
+# regret mechanics
+# ---------------------------------------------------------------------------
+
+def test_per_round_and_cumulative_shapes_and_self_regret():
+    strategies = ("lea", "static", "oracle")
+    succ = _sweep(strategies, rounds=64, seeds=2)
+    per = regret.per_round_regret(succ, strategies, "lea")
+    cum = regret.cumulative_regret(succ, strategies, "lea")
+    assert per.shape == (2, 64) and cum.shape == (2, 64)
+    np.testing.assert_allclose(np.asarray(cum[:, -1]),
+                               np.asarray(per).sum(axis=-1), atol=1e-5)
+    # the reference has identically-zero regret against itself
+    self_reg = regret.cumulative_regret(succ, strategies, "oracle")
+    np.testing.assert_array_equal(np.asarray(self_reg), np.zeros((2, 64)))
+
+
+def test_final_regret_matches_manual_sum_and_unbatched_input():
+    strategies = ("lea", "oracle")
+    succ = _sweep(strategies, rounds=80, seeds=2)
+    finals = regret.final_regret(succ, strategies)
+    manual = (np.asarray(succ[..., 1], np.float64)
+              - np.asarray(succ[..., 0], np.float64)).sum(axis=-1)
+    np.testing.assert_allclose(finals["lea"], manual, atol=1e-5)
+    np.testing.assert_array_equal(finals["oracle"], np.zeros(2))
+    # unbatched (M, S) input: scalar-shaped outputs
+    one = regret.final_regret(np.asarray(succ)[0], strategies)
+    assert one["lea"].shape == ()
+    np.testing.assert_allclose(one["lea"], manual[0], atol=1e-5)
+
+
+def test_missing_reference_raises():
+    succ = _sweep(("lea", "static"), rounds=16, seeds=1)
+    with pytest.raises(ValueError, match="oracle"):
+        regret.per_round_regret(succ, ("lea", "static"), "lea")
+    with pytest.raises(ValueError, match="not in"):
+        regret.per_round_regret(succ, ("lea", "static"), "nope", "lea")
+
+
+def test_regret_curve_summary_horizons():
+    strategies = ("lea", "oracle")
+    succ = _sweep(strategies, rounds=100, seeds=2)
+    rounds_at, mean_cum = regret.regret_curve_summary(
+        succ, strategies, "lea", points=5)
+    assert rounds_at[-1] == 100 and len(rounds_at) == len(mean_cum) == 5
+    cum = np.asarray(regret.cumulative_regret(succ, strategies, "lea"),
+                     np.float64).mean(axis=0)
+    np.testing.assert_allclose(mean_cum[-1], cum[-1], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sublinear regret on stationary chains (averaged over 8 seeds)
+# ---------------------------------------------------------------------------
+
+def test_lea_regret_sublinear_on_stationary_chain():
+    """Thm 5.1 empirically, as regret: LEA's mean cumulative regret vs the
+    genie grows sublinearly — the per-round regret RATE at the full horizon
+    is well below the early-horizon rate, and the total stays far under any
+    linear envelope."""
+    strategies = ("lea", "oracle")
+    rounds, seeds = 3000, 8
+    succ = _sweep(strategies, rounds=rounds, seeds=seeds)
+    cum = np.asarray(regret.cumulative_regret(succ, strategies, "lea"),
+                     np.float64).mean(axis=0)
+    early, late = 250, rounds
+    rate_early = cum[early - 1] / early
+    rate_late = cum[late - 1] / late
+    assert rate_late < 0.75 * rate_early, (rate_early, rate_late)
+    assert 0.0 <= cum[late - 1] < 0.01 * rounds, cum[late - 1]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: adaptive policies beat vanilla LEA on non-stationary families
+# ---------------------------------------------------------------------------
+
+def test_windowed_and_discounted_beat_vanilla_lea_on_drifting_chains():
+    res = sweeps.run("drifting_chains", periods=(400,), rounds=1600, seeds=4)
+    (r,) = res
+    assert r.throughput["lea_window64"] > r.throughput["lea"], r.throughput
+    assert r.throughput["lea_discount97"] > r.throughput["lea"], r.throughput
+    # regret orders the same way, and the genie stays on top
+    assert r.regret["lea_window64"] < r.regret["lea"]
+    assert r.throughput["oracle"] >= r.throughput["lea_window64"] - 1e-9
+
+
+def test_adaptive_policies_beat_vanilla_lea_on_regime_switch():
+    res = sweeps.run("regime_switch", dwells=(250,), rounds=1600, seeds=4)
+    (r,) = res
+    best_adaptive = max(r.throughput["lea_window64"],
+                       r.throughput["lea_discount97"])
+    assert best_adaptive > r.throughput["lea"], r.throughput
+
+
+# ---------------------------------------------------------------------------
+# sweeps integration: regret columns, scheduled grouping
+# ---------------------------------------------------------------------------
+
+def test_manifest_rows_carry_regret_columns():
+    res = sweeps.run("drifting_chains", periods=(300,), rounds=300, seeds=2)
+    doc = sweeps.manifest(res, bench="unit_policies")
+    row = doc["results"][0]
+    for s in ("lea", "lea_window64", "lea_discount97", "static"):
+        assert f"regret_{s}" in row
+    assert "regret_oracle" not in row          # the reference itself
+    assert "drifting_chains" in doc["families"]
+
+
+def test_no_oracle_no_regret_columns():
+    res = sweeps.run("fig4", rounds=32)        # lea vs static_single only
+    assert all(r.regret == {} for r in res)
+    assert all("regret_lea" not in r.row() for r in res)
+
+
+def test_scheduled_scenarios_group_apart_from_stationary():
+    drift = sweeps.expand("drifting_chains", periods=(200,), rounds=400)
+    # a stationary clone with the same (lp, rounds, strategies) signature
+    import dataclasses
+    flat = dataclasses.replace(drift[0], name="flat_clone", schedule=())
+    groups = sweeps.build_groups(drift + (flat,))
+    assert len(groups) == 2
+    shapes = sorted(g.batch.p_gg.shape for g in groups)
+    assert shapes == [(1, 15), (1, 400, 15)]
+
+
+def test_schedule_validation():
+    import dataclasses
+    sc = sweeps.expand("drifting_chains", periods=(200,), rounds=400)[0]
+    with pytest.raises(ValueError, match="start at round 0"):
+        dataclasses.replace(sc, schedule=((10,) + sc.schedule[0][1:],))
+    bad_rows = (sc.schedule[0], (500, sc.schedule[1][1], sc.schedule[1][2]))
+    with pytest.raises(ValueError, match="beyond rounds"):
+        dataclasses.replace(sc, schedule=bad_rows)
+    with pytest.raises(ValueError, match="round-0 rows"):
+        dataclasses.replace(sc, p_gg=(0.5,) * 15)
+    with pytest.raises(ValueError, match="must increase"):
+        dataclasses.replace(
+            sc, schedule=(sc.schedule[0], (0,) + sc.schedule[1][1:]))
+
+
+def test_registry_policy_names_valid_in_scenarios_and_sweep_executor():
+    """A dynamic policy spelling flows end to end: scenario validation, the
+    executor's compile, the results layer."""
+    drift = sweeps.expand(
+        "drifting_chains", periods=(150,), rounds=150,
+        strategies=("lea", "lea_window32", "oracle"),
+    )
+    res = sweeps.run(drift)
+    (r,) = res
+    assert set(r.throughput) == {"lea", "lea_window32", "oracle"}
+    assert "lea_window32" in r.regret

@@ -162,6 +162,62 @@ def test_suggest_round_chunk_scales_with_budget():
     assert sweeps.suggest_round_chunk(group, budget_bytes=1 << 50) is None
 
 
+def test_suggest_round_chunk_rounds_smaller_than_chunk_is_none():
+    """When the whole run fits the budget the chooser must decline to chunk —
+    including the degenerate single-round group."""
+    scs = sweeps.expand("fig3", rounds=48)
+    (group,) = sweeps.build_groups(scs)
+    assert sweeps.suggest_round_chunk(group, budget_bytes=1 << 30) is None
+    one = sweeps.expand("fig3", rounds=1)
+    (g1,) = sweeps.build_groups(one)
+    # even a 1-byte budget cannot produce a chunk smaller than one round,
+    # and chunk == rounds means "don't chunk"
+    assert sweeps.suggest_round_chunk(g1, budget_bytes=1) is None
+
+
+def test_suggest_round_chunk_floor_is_one_round():
+    """An impossibly small budget clamps to chunk=1 (never 0, never None)."""
+    scs = sweeps.expand("fig3", rounds=64)
+    (group,) = sweeps.build_groups(scs, seeds=2)
+    chunk = sweeps.suggest_round_chunk(group, budget_bytes=1)
+    assert chunk == 1
+    # and the engine accepts the floor, bit-identically
+    (ref,) = sweeps.run_groups([group])
+    (chunked,) = sweeps.run_groups([group], round_chunk=chunk)
+    np.testing.assert_array_equal(ref, chunked)
+
+
+def test_suggest_round_chunk_non_dividing_chunk_is_valid():
+    """The chooser does not round to divisors; a non-dividing suggestion must
+    execute bit-identically (the engine pads the final block)."""
+    scs = sweeps.expand("fig3", rounds=100)
+    (group,) = sweeps.build_groups(scs)
+    budget = None
+    for shift in range(14, 32):
+        c = sweeps.suggest_round_chunk(group, budget_bytes=1 << shift)
+        if c is not None and 1 < c < 100 and 100 % c != 0:
+            budget = c
+            break
+    assert budget is not None, "no non-dividing chunk found in budget scan"
+    (ref,) = sweeps.run_groups([group])
+    (chunked,) = sweeps.run_groups([group], round_chunk=budget)
+    np.testing.assert_array_equal(ref, chunked)
+
+
+def test_kstar_table_expands_to_simulatable_scenarios_with_rounds():
+    """Satellite: the catalogue-only family becomes genuinely runnable when
+    expanded with rounds > 0 (default stays display-only, see
+    test_catalogue_only_family_raises_clear_error)."""
+    scs = sweeps.expand("kstar_table", rounds=16)
+    assert all(sc.rounds == 16 for sc in scs)
+    res = sweeps.run(scs)
+    assert len(res) == len(scs)
+    for r in res:
+        assert 0.0 <= r.throughput["lea"] <= 1.0
+    # paper-expected K* values still ride along in meta
+    assert all(r.scenario.meta_dict()["expect_kstar"] >= 1 for r in res)
+
+
 # ---------------------------------------------------------------------------
 # results layer
 # ---------------------------------------------------------------------------

@@ -1,0 +1,46 @@
+"""The benchmarks/run.py CLI: --list target discovery and target selection."""
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cli(*args: str, timeout: int = 120):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=_ROOT,
+    )
+
+
+def test_list_prints_every_registered_target_with_description():
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    lines = [ln for ln in proc.stdout.splitlines() if ln.strip()]
+    from benchmarks.run import SUITES
+
+    assert len(lines) == len(SUITES)
+    for (name, _, desc), line in zip(SUITES, lines):
+        assert line.startswith(name) and desc in line
+    # --list must not print the CSV header (it runs nothing)
+    assert "us_per_call" not in proc.stdout
+
+
+def test_unknown_target_fails_with_target_listing():
+    proc = _run_cli("no_such_bench")
+    assert proc.returncode != 0
+    assert "no_such_bench" in proc.stderr
+    assert "bench_policies" in proc.stderr      # the listing helps recovery
+
+
+def test_bench_policies_is_a_registered_target():
+    from benchmarks.run import SUITES
+
+    names = [name for name, _, _ in SUITES]
+    assert "bench_policies" in names and "sweep_smoke" in names
