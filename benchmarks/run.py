@@ -7,30 +7,36 @@ Usage:
   python -m benchmarks.run --list          # print registered targets + blurbs
 
 Exit code 0 is the CI smoke gate: every requested suite must produce its
-rows without raising.  ``fig3_sim`` additionally refreshes the
-``BENCH_fig3.json`` perf baseline (rounds/sec, allocator us/call) at the
-repo root; ``sweep_smoke`` refreshes ``BENCH_sweep.json`` (with a soft
-rows/sec regression check against the committed baseline); and
-``bench_policies`` refreshes ``BENCH_policies.json`` (per-policy
-throughput, baseline ratio, final regret vs the oracle).
+rows without raising.  Four targets additionally refresh a manifest at the
+repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
+``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
+``BENCH_sweep.json`` (with a soft rows/sec regression check against the
+committed baseline), ``bench_policies`` -> ``BENCH_policies.json``
+(per-policy throughput, baseline ratio, final regret + CI vs the oracle)
+and ``bench_gf`` -> ``BENCH_gf.json`` (exact GF(p) device-vs-numpy
+speedups, >= 5x acceptance on the exact coded round).
 """
 
 import sys
 import traceback
 
 # (target name, module under benchmarks/, one-line description) — kept as a
-# static table so ``--list`` never has to import jax or the suites
+# static table so ``--list`` never has to import jax or the suites.
+# Convention: a blurb names the BENCH_*.json it refreshes at the repo root
+# IF AND ONLY IF the target writes one (audited by tests/test_benchmarks_cli).
 SUITES = [
     ("fig3_sim", "fig3_sim",
-     "paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle)"),
+     "paper Fig. 3 (4 sim scenarios, LEA vs static vs oracle; writes BENCH_fig3.json)"),
     ("fig4_ec2", "fig4_ec2",
      "paper Fig. 4 (6 EC2 scenarios, simulated credit dynamics)"),
     ("table_kstar", "table_kstar",
      "recovery-threshold table (eqs. 15/16)"),
     ("sweep_smoke", "sweep_smoke",
-     "repro.sweeps gate: sharded+chunked registry grid, bit-exact vs engine"),
+     "repro.sweeps gate: sharded+chunked grid, bit-exact vs engine; writes BENCH_sweep.json"),
     ("bench_policies", "bench_policies",
-     "scheduling-policy shoot-out with regret columns (BENCH_policies.json)"),
+     "scheduling-policy shoot-out with regret columns; writes BENCH_policies.json"),
+    ("bench_gf", "bench_gf",
+     "exact GF(p) device path vs numpy modp oracle; writes BENCH_gf.json"),
     ("bench_kernels", "bench_kernels",
      "Pallas-kernel + XLA-path microbenchmarks"),
     ("bench_allocator", "bench_allocator",

@@ -11,11 +11,19 @@ throughput, so it converges while the static allocation starves.
 
 The whole simulation side runs on the PR-1 batched engine: ONE
 ``throughput.rollout`` call samples the trajectory and allocates every
-round for both strategies (a single batched allocator DP), and round
+round for both strategies (a single batched allocator DP), per-chunk
+on-time masks come from one vectorised ``chunk_on_time`` call, and round
 success is one vectorised comparison — the seed-era per-round
 estimator/update/allocate Python loop is gone.  Only the gradient-descent
 recursion itself (w_{m+1} depends on w_m) runs round-by-round, decoding
 through a memoised ``DecodeCache``.
+
+Exact-path variant: the float descent above is the ML adaptation (decode
+conditioning caps k); the paper's protocol is EXACT over a finite field.
+The final section replays the same LEA straggler patterns through
+``coded_matmul_exact`` — encode, worker-shard matmul and erasure-aware
+decode all on device over GF(2^31 - 1) — and checks the decode against the
+numpy ``matmul_modp`` oracle to the last bit.
 
 Smoke knob: REPRO_EXAMPLE_ROUNDS overrides the round count (CI gate).
 """
@@ -26,8 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CodeSpec, DecodeCache, LoadParams,
-                        coded_linear_gradient, encode_dataset)
+from repro.core import (FIELD_P, CodeSpec, DecodeCache, LoadParams,
+                        chunk_on_time, coded_linear_gradient,
+                        coded_matmul_exact, decode_matrix_modp,
+                        encode_dataset, encode_dataset_modp, matmul_modp)
 from repro.core import throughput
 
 # NOTE on k: the decode interpolates a degree-(k-1)*2 polynomial; over the
@@ -60,8 +70,10 @@ states, loads, feasible = throughput.rollout(
 )
 success = throughput.score_rollout(states, loads, feasible, lp,
                                    MU_G, MU_B, D)                  # (M, S)
-states_h, loads_h, success_h = (np.asarray(states), np.asarray(loads),
-                                np.asarray(success))
+# every round's erasure pattern in one vectorised call: which encoded
+# evaluations arrived (the first loads[i] chunks of each on-time worker)
+on_time_all = chunk_on_time(states, loads, MU_G, MU_B, D, R)       # (S, M, nr)
+success_h, on_time_h = np.asarray(success), np.asarray(on_time_all)
 
 
 def descend(strategy: str):
@@ -74,14 +86,7 @@ def descend(strategy: str):
     for m in range(ROUNDS):
         if success_h[m, j]:
             hits += 1
-            # which encoded evaluations arrived (first loads[i] per worker)
-            on_time = np.zeros(spec.nr, bool)
-            for i in range(N):
-                done = (loads_h[j, m, i]
-                        if (states_h[m, i] == 1 or loads_h[j, m, i] <= lp.ell_b)
-                        else 0)
-                on_time[i * R: i * R + done] = True
-            grad = coded_linear_gradient(coded, w, on_time, cache=cache)
+            grad = coded_linear_gradient(coded, w, on_time_h[j, m], cache=cache)
             # float-decode sanity guard: an ill-conditioned received set (rare
             # under the strided alphas, possible under static's all-or-nothing
             # patterns) is treated as a failed round, like a checksum miss.
@@ -105,4 +110,36 @@ print(f"static : timely throughput {tput_static:.3f}, final loss {loss_static[-1
       f"|w-w*|/|w*| = {err_static:.3f}")
 assert tput_lea > tput_static, "LEA should beat the static allocation"
 assert err_lea < err_static, "more on-time rounds => closer to w*"
+
+# -- exact-path variant: the SAME straggler patterns, over the paper's field -
+# A deg-1 exact code on the same cluster (matmul f; k can be large here —
+# GF(p) has no conditioning), fed the LEA rollout's erasure patterns.  The
+# device round (encode -> shard matmul -> erasure-aware decode, all exact
+# Mersenne-31 arithmetic) must agree with the numpy modp oracle bit for bit.
+spec_x = CodeSpec(N, R, K, deg_f=1)
+rng_x = np.random.default_rng(1)
+x_int = rng_x.integers(0, FIELD_P, size=(K, ROWS, COLS), dtype=np.int64)
+w_int = rng_x.integers(0, FIELD_P, size=(COLS,), dtype=np.int64)
+coded_x = encode_dataset_modp(spec_x, jnp.asarray(x_int, jnp.int32))
+xt_np = np.asarray(coded_x.x_tilde, np.int64)
+
+j_lea = STRATEGIES.index("lea")
+exact_jit = jax.jit(lambda m: coded_matmul_exact(coded_x, jnp.asarray(w_int, jnp.int32), m))
+res_np = matmul_modp(xt_np.reshape(spec_x.nr * ROWS, COLS), w_int.reshape(-1, 1))
+res_np = res_np.reshape(spec_x.nr, ROWS)     # round-invariant worker results
+checked = 0
+for m in range(ROUNDS):
+    on = on_time_h[j_lea, m]
+    if on.sum() < spec_x.recovery_threshold:
+        continue
+    out, ok = exact_jit(jnp.asarray(on))
+    rec = np.nonzero(on)[0][: spec_x.recovery_threshold]
+    want = matmul_modp(decode_matrix_modp(spec_x, rec), res_np[rec])
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), want)
+    checked += 1
+    if checked >= 6:
+        break
+print(f"exact  : GF(p) device round == numpy modp oracle on {checked} LEA "
+      f"straggler patterns (K*={spec_x.recovery_threshold}, bit-exact)")
 print("OK")

@@ -20,9 +20,10 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CodeSpec, LoadParams, allocate, encode_dataset,
-                        coded_matmul, init_estimator, predicted_good_prob,
-                        update_estimator)
+from repro.core import (FIELD_P, CodeSpec, LoadParams, allocate,
+                        coded_matmul, coded_matmul_exact, encode_dataset,
+                        encode_dataset_modp, init_estimator, matmul_modp,
+                        predicted_good_prob, update_estimator)
 
 # -- a 5-worker cluster storing r=2 coded chunks each, k=6 data chunks -------
 spec = CodeSpec(n=5, r=2, k=6, deg_f=1)
@@ -64,6 +65,21 @@ expected = jnp.einsum("krc,c->kr", x_chunks, w)
 err = float(jnp.max(jnp.abs(result - expected)))
 print(f"decoded f(X_j) = X_j @ w for all {spec.k} chunks, max err {err:.2e}")
 assert err < 1e-3
+
+# -- the same round, EXACT over the paper's finite field GF(2^31 - 1) --------
+# No float conditioning, no tolerance: encode, worker matmul and the
+# erasure-aware decode all run on device in Mersenne-31 arithmetic
+# (repro.kernels.gf) and agree with the numpy modp oracle to the last bit.
+rng_x = np.random.default_rng(1)
+x_int = rng_x.integers(0, FIELD_P, size=(spec.k, 16, 8), dtype=np.int64)
+w_int = rng_x.integers(0, FIELD_P, size=(8,), dtype=np.int64)
+coded_x = encode_dataset_modp(spec, jnp.asarray(x_int, jnp.int32))
+out, ok = coded_matmul_exact(coded_x, jnp.asarray(w_int, jnp.int32),
+                             jnp.asarray(on_time))
+exact_want = matmul_modp(x_int.reshape(-1, 8), w_int.reshape(-1, 1)).reshape(spec.k, 16)
+assert bool(ok)
+np.testing.assert_array_equal(np.asarray(out, np.int64), exact_want)
+print(f"exact GF(p) decode: bit-identical to the numpy oracle (p = {FIELD_P})")
 
 # -- the paper's Fig. 3 grid, through the sweep subsystem, in one line -------
 from repro import sweeps

@@ -34,6 +34,15 @@ the middle of each training/serving step.  Two replacements:
     instead of raising ``TimeoutError`` (jit cannot raise data-dependently);
     ``ok`` is False when fewer than K* results were on time and ``out`` is
     then meaningless.
+
+Exact GF(p) path
+----------------
+:func:`encode_dataset_modp` / :func:`coded_matmul_exact` /
+:class:`ModpDecodeCache` are the finite-field twins of the float path: the
+whole encode -> worker-shard matmul -> erasure-aware decode round runs on
+device in exact Mersenne-31 arithmetic (``repro.kernels.gf``), bit-identical
+to the numpy ``lagrange.*_modp`` oracle, with on-time masks produced from
+engine trajectories by :func:`chunk_on_time`.
 """
 
 from __future__ import annotations
@@ -45,8 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .lagrange import (CodeSpec, decode_matrix, decode_matrix_jax, encode,
-                       generator_matrix)
+from .lagrange import (CodeSpec, _gf, decode_matrix, decode_matrix_jax,
+                       decode_matrix_modp_device, encode, generator_matrix,
+                       generator_matrix_modp_device)
 
 
 @dataclasses.dataclass
@@ -244,3 +254,152 @@ def uncoded_linear_gradient(x_chunks: jnp.ndarray, y_chunks: jnp.ndarray, w: jnp
     """Oracle: sum_j X_jᵀ(X_j w − y_j) computed directly on the raw data."""
     grads = jax.vmap(chunk_gradient, in_axes=(0, 0, None))(x_chunks, y_chunks, w)
     return jnp.sum(grads, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Exact GF(p) path: encode -> worker matmul -> decode, entirely on device
+# ---------------------------------------------------------------------------
+#
+# The float path above is the ML adaptation; this is the paper's actual
+# protocol — exact arithmetic over the finite field F = GF(2^31 - 1), where
+# the MDS guarantee is bit-exact and conditioning does not exist.  The seed
+# could only run it through the numpy ``lagrange.*_modp`` host oracle; the
+# ``repro.kernels.gf`` subsystem (Mersenne-31 matmul, batched Lagrange basis,
+# Fermat inversion) moves encode, worker-shard evaluation AND the
+# erasure-pattern-aware decode onto the device, so the exact path now runs at
+# engine speed with the on-time mask coming straight from ``rollout()``
+# trajectories.  Residues are exact: every result is bit-identical to the
+# numpy ``matmul_modp``/``decode_matrix_modp`` pipeline (asserted in tests).
+
+
+@dataclasses.dataclass
+class CodedDatasetModp:
+    """Exact-path encoded dataset: int32 residues in [0, p), chunk v on
+    worker v//r (same placement as the float :class:`CodedDataset`)."""
+
+    spec: CodeSpec
+    x_tilde: jnp.ndarray            # (nr, rows, cols) int32 residues
+
+    @property
+    def nr(self) -> int:
+        return self.spec.nr
+
+
+def encode_dataset_modp(spec: CodeSpec, x_chunks) -> CodedDatasetModp:
+    """Exact device encode: (k, rows, cols) int residues -> (nr, rows, cols).
+
+    The generator is built on device (:func:`generator_matrix_modp_device`)
+    and applied with the GF(p) matmul kernel path — one exact GEMM, no host
+    round-trip.  Inputs must be integers in (-2^31, 2^31); they are reduced
+    into [0, p).
+    """
+    gf = _gf()
+    x_chunks = jnp.asarray(x_chunks)
+    if x_chunks.shape[0] != spec.k:
+        raise ValueError(f"expected {spec.k} chunks, got {x_chunks.shape[0]}")
+    g = generator_matrix_modp_device(spec)
+    flat = x_chunks.reshape(spec.k, -1)
+    x_t = gf.from_gf(gf.matmul_gf(g, flat)).reshape((spec.nr,) + x_chunks.shape[1:])
+    return CodedDatasetModp(spec=spec, x_tilde=x_t)
+
+
+class ModpDecodeCache:
+    """Host-side memo of EXACT decode matrices keyed on the erasure pattern.
+
+    The mod-p twin of :class:`DecodeCache`: worker states are discrete, so
+    received sets recur across rounds and each distinct pattern pays the
+    GF(p) basis build (gather + Fermat inversion) once.  Matrices are the
+    device-built int32 residues of :func:`decode_matrix_modp_device` —
+    bit-identical to the numpy ``decode_matrix_modp`` oracle.  No dtype in
+    the key: the field has exactly one integer representation.
+    """
+
+    def __init__(self, spec: CodeSpec):
+        self.spec = spec
+        self._mats: dict[tuple, jnp.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._mats)
+
+    def matrix(self, received: np.ndarray) -> jnp.ndarray:
+        key = tuple(int(v) for v in received)
+        mat = self._mats.get(key)
+        if mat is None:
+            self.misses += 1
+            mat = decode_matrix_modp_device(self.spec, jnp.asarray(received, jnp.int32))
+            self._mats[key] = mat
+        else:
+            self.hits += 1
+        return mat
+
+    def from_on_time(self, on_time: np.ndarray):
+        """(received indices, exact decode matrix) for the first K* on-time."""
+        received = np.nonzero(np.asarray(on_time))[0][: self.spec.recovery_threshold]
+        return received, self.matrix(received)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _decode_on_time_modp(
+    spec: CodeSpec, results: jnp.ndarray, on_time: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact device decode: (nr, *dims) residues + (nr,) bool -> ((k, *dims), ok)."""
+    gf = _gf()
+    kstar = spec.recovery_threshold
+    received = received_indices(on_time, kstar)
+    d = decode_matrix_modp_device(spec, received)
+    gathered = jnp.take(results, received, axis=0)         # (K*, *dims)
+    ok = jnp.sum(on_time) >= kstar
+    out = gf.from_gf(gf.matmul_gf(d, gathered.reshape(kstar, -1)))
+    return out.reshape((spec.k,) + results.shape[1:]), ok
+
+
+def coded_matmul_exact(
+    coded: CodedDatasetModp, w, on_time: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact f(X_j) = X_j @ w mod p from on-time evaluations — all on device.
+
+    The paper's round, over its actual finite field: every worker evaluates
+    its stored shards (one exact GF(p) GEMM across all chunks), the master
+    gathers the K* lexicographically-first on-time results and decodes
+    through the erasure-pattern decode matrix built on device.  ``on_time``
+    is traced — feed it the chunk masks of an engine ``rollout()``
+    (:func:`chunk_on_time`) and the whole round compiles into one XLA
+    computation.  Returns ``(decoded (k, rows[, d]), ok)``: exact int
+    equality with the numpy ``matmul_modp``/``decode_matrix_modp`` pipeline
+    whenever ``ok`` (jit cannot raise data-dependently, so short rounds
+    return ``ok=False`` instead of the eager path's ``TimeoutError``).
+    """
+    gf = _gf()
+    w = jnp.asarray(w)
+    squeeze = w.ndim == 1
+    w2 = w[:, None] if squeeze else w                      # (cols, d)
+    nr, rows = coded.x_tilde.shape[0], coded.x_tilde.shape[1]
+    flat = coded.x_tilde.reshape(nr * rows, -1)            # (nr*rows, cols)
+    results = gf.from_gf(gf.matmul_gf(flat, w2))           # (nr*rows, d)
+    results = results.reshape(nr, rows, w2.shape[1])
+    out, ok = _decode_on_time_modp(coded.spec, results, jnp.asarray(on_time))
+    return (out[..., 0] if squeeze else out), ok
+
+
+def chunk_on_time(
+    states: jnp.ndarray, loads: jnp.ndarray, mu_g, mu_b, deadline, r: int
+) -> jnp.ndarray:
+    """Engine trajectory -> per-chunk on-time masks: (..., n) -> (..., n*r).
+
+    Worker i evaluates a *prefix* of its r stored chunks (two-level loads),
+    so when its whole load meets the deadline its first ``loads_i`` chunks
+    arrive, else none — exactly the all-or-nothing rule
+    ``throughput._score_block`` scores rounds with (same speed model, same
+    deadline tolerance), which makes round success equivalent to
+    ``sum(chunk mask) >= K*``.  Broadcasts over any leading axes: feed it
+    ``rollout()``'s (M, n) states and (S, M, n) loads and get every round's
+    erasure pattern in one call.
+    """
+    speeds = jnp.where(states == 1, mu_g, mu_b)
+    done = jnp.where(
+        loads.astype(jnp.float32) / speeds <= deadline + 1e-9, loads, 0
+    )                                                      # (..., n)
+    nr = done.shape[-1] * r
+    return (jnp.arange(nr) % r) < jnp.repeat(done, r, axis=-1)

@@ -18,9 +18,13 @@ Implements the coding scheme of Sec. 3.1 of the paper (following Yu et al. 2019)
 Two numeric paths:
   * float32/float64 with Chebyshev interpolation nodes (conditioning-bounded)
     — used by the ML-facing ops and the Pallas kernels;
-  * exact arithmetic over the prime field GF(p), p = 2^31 - 1 — used by the
-    property tests to certify the MDS / any-K*-subset property bit-exactly,
-    mirroring the finite field F of the paper.
+  * exact arithmetic over the prime field GF(p), p = 2^31 - 1 — mirroring the
+    finite field F of the paper.  The numpy ``*_modp`` functions are the host
+    oracle; the ``*_modp_device`` functions build the same matrices on device
+    through :mod:`repro.kernels.gf` (Mersenne-31 matmul + batched Lagrange
+    basis), bit-identically — residues are exact, so host and device agree
+    to the last bit.  ``coded_ops.coded_matmul_exact`` runs the whole
+    encode -> worker matmul -> erasure-aware decode round on device.
 """
 
 from __future__ import annotations
@@ -313,3 +317,63 @@ def matmul_modp(a: np.ndarray, b: np.ndarray, p: int = FIELD_P) -> np.ndarray:
     terms = (a[:, :, None] * b2[None, :, :]) % p      # (m, c, flat)
     out = np.sum(terms, axis=1) % p
     return out.reshape((a.shape[0],) + trailing)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident exact GF(p) path (repro.kernels.gf) — no host round-trip
+# ---------------------------------------------------------------------------
+
+def _gf():
+    # local import: repro.kernels.gf is a leaf package, but keeping the core
+    # import graph lazy mirrors the policies/throughput convention
+    from repro.kernels import gf as gf_mod
+
+    return gf_mod
+
+
+def _alpha_grid_modp(spec: CodeSpec) -> np.ndarray:
+    """The strided integer alpha grid of the exact path: chunk v -> idx(v)."""
+    return np.arange(spec.nr, dtype=np.int32)[chunk_alpha_indices(spec)]
+
+
+def generator_matrix_modp_device(spec: CodeSpec) -> jnp.ndarray:
+    """Device-built exact (nr, k) generator over GF(p) — int32 residues.
+
+    Bit-identical (as integers) to the numpy :func:`generator_matrix_modp`:
+    same integer alphas/betas (0..nr-1 strided / nr..nr+k-1), same field —
+    residues are exact, so the only difference is where the matrix lives.
+    """
+    gf = _gf()
+    if spec.mode != "lagrange":
+        return jnp.asarray(generator_matrix_modp(spec), jnp.int32)
+    alphas = jnp.asarray(_alpha_grid_modp(spec))
+    betas = jnp.arange(spec.nr, spec.nr + spec.k, dtype=jnp.int32)
+    return gf.from_gf(gf.lagrange_basis_gf(alphas, betas))
+
+
+def decode_matrix_modp_device(spec: CodeSpec, received: jnp.ndarray) -> jnp.ndarray:
+    """Exact (..., k, K*) decode matrices from TRACED (..., K*) received rows.
+
+    The erasure-pattern-aware device decode: a static-shape gather picks the
+    surviving alpha points and the GF(p) Lagrange basis is inverted on
+    device (Fermat), so erasure patterns straight from the engine's Markov
+    trajectories decode with no host sync.  Leading axes batch over
+    patterns (one call builds a whole trajectory's decode matrices).
+    Validity (distinct indices, repetition coverage) is the caller's
+    contract, exactly as for :func:`decode_matrix_jax`.
+    """
+    gf = _gf()
+    received = jnp.asarray(received, jnp.int32)
+    kstar = spec.recovery_threshold
+    assert received.shape[-1] == kstar, (received.shape, kstar)
+    if spec.mode == "lagrange":
+        alpha_grid = jnp.asarray(_alpha_grid_modp(spec))
+        alphas = jnp.take(alpha_grid, received)            # (..., K*) gather
+        betas = jnp.arange(spec.nr, spec.nr + spec.k, dtype=jnp.int32)
+        return gf.from_gf(gf.lagrange_basis_gf(betas, alphas))
+    # repetition: 0/1 selection of the first received copy of each chunk
+    src = received % spec.k                                # (..., K*)
+    pos = jnp.arange(kstar)
+    hit = src[..., None, :] == jnp.arange(spec.k)[:, None]           # (..., k, K*)
+    first = jnp.min(jnp.where(hit, pos, kstar), axis=-1)             # (..., k)
+    return (pos == first[..., None]).astype(jnp.int32)

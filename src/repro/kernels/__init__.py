@@ -4,6 +4,9 @@
   * ``coded_gradient``    — fused worker-side degree-2 evaluation X~^T(X~W - Y)
   * ``flash_attention``   — causal/SWA GQA online-softmax attention
   * ``poisson_binomial``  — batched EA-allocator prefix-tail DP (B, n)->(B, n)
+  * ``gf``                — exact GF(2^31 - 1) linear algebra: blocked
+                            Mersenne-31 matmul + batched Lagrange-basis
+                            construction (the paper's finite field F)
 
 Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd wrapper with CPU-interpret fallback) and ``ref.py`` (pure-jnp oracle).

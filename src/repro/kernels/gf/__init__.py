@@ -1,0 +1,17 @@
+from .ops import (  # noqa: F401
+    FIELD_P,
+    lagrange_basis_gf,
+    matmul_gf,
+    matmul_gf_dot,
+    matmul_gf_pallas,
+    matmul_gf_ref,
+)
+from .ref import (  # noqa: F401
+    add_gf,
+    from_gf,
+    inv_gf,
+    lagrange_basis_gf_ref,
+    mul_gf,
+    sub_gf,
+    to_gf,
+)

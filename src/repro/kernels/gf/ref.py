@@ -1,0 +1,232 @@
+"""GF(p) field primitives + lax-level reference implementations, p = 2^31 - 1.
+
+This module is the arithmetic core of the exact coded-computing path and the
+interpret-mode oracle the Pallas kernel is bit-compared against.  Everything
+is built from uint32 operations only:
+
+  * JAX runs with x64 disabled (and TPUs have no native int64), so the
+    "int64 product" of two 31-bit residues is formed from four 16-bit-limb
+    partial products — each of which fits uint32 exactly — and reduced with
+    the Mersenne identity 2^31 === 1 (mod p): high bits are FOLDED back onto
+    the low 31 bits with shift-adds instead of a division (`fold31`).
+  * every public primitive returns canonical residues in [0, p), and every
+    intermediate stays below 2^32, so the matmul can accumulate with one
+    fold-and-norm per term and never overflow.
+
+Unlike the float kernels there is no reduction-order sensitivity: residues
+are exact, so ANY correct implementation (numpy int64, the lax reference,
+the Pallas kernel, the limb-decomposed dot path) produces bit-identical
+arrays — the tests assert exactly that.
+
+Reference entry points (pure jax.lax, no Pallas):
+
+  * :func:`matmul_gf_ref`         — (m, c) @ (c, n) mod p via a fori_loop of
+                                    broadcast multiply-fold-adds
+  * :func:`lagrange_basis_gf_ref` — batched Lagrange basis matrices over
+                                    GF(p) (the encode/decode matrix builder),
+                                    Fermat inversion via 31 fixed squarings
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Mersenne prime 2^31 - 1 (shared with repro.core.lagrange.FIELD_P).
+FIELD_P = (1 << 31) - 1
+
+# NOTE: field constants appear as Python int literals (weak-typed scalars),
+# never as jnp arrays — module-level jnp constants would be captured consts
+# inside the Pallas kernel, which pallas_call rejects.
+_MASK31 = 0x7FFF_FFFF   # == FIELD_P
+
+
+def norm31(x: jnp.ndarray) -> jnp.ndarray:
+    """One conditional subtract: [0, 2p) -> [0, p).  uint32 in, uint32 out."""
+    return jnp.where(x >= _MASK31, x - _MASK31, x)
+
+
+def fold31(x: jnp.ndarray) -> jnp.ndarray:
+    """Fold bits 31.. back onto bits 0..30: exact mod-p for any uint32.
+
+    2^31 === 1 (mod p), so x = hi * 2^31 + lo === hi + lo.  The sum is at
+    most (2^31 - 1) + 1 = 2^31 < 2p, so one :func:`norm31` canonicalises.
+    """
+    return norm31((x & _MASK31) + (x >> 31))
+
+
+def to_gf(x) -> jnp.ndarray:
+    """Any int array-like -> canonical uint32 residues in [0, p).
+
+    Signed inputs may be negative (Python-sign remainder maps them into
+    [0, p)); values must fit int32 on the way in (JAX has no x64 here).
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"GF(p) arrays must be integer-typed, got {x.dtype}")
+    if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+        return fold31(x.astype(jnp.uint32))
+    return jnp.mod(x.astype(jnp.int32), jnp.int32(FIELD_P)).astype(jnp.uint32)
+
+
+def from_gf(x: jnp.ndarray) -> jnp.ndarray:
+    """Canonical residues -> int32 (values < p < 2^31 always fit)."""
+    return x.astype(jnp.int32)
+
+
+def add_gf(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a + b) mod p for canonical residues (sum < 2p: one norm)."""
+    return norm31(a + b)
+
+
+def sub_gf(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a - b) mod p for canonical residues (a + (p - b) < 2p)."""
+    return norm31(a + (_MASK31 - b))
+
+
+def mul_gf(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a * b) mod p via 16-bit-limb products + Mersenne folding.
+
+    Exact for ANY a, b < 2^31 (canonical residues and the value p itself):
+    with a = ah*2^16 + al and b = bh*2^16 + bl (ah, bh < 2^15) the partial
+    products and their pairwise sums all fit uint32
+
+        a*b = hh*2^32 + (lh + hl)*2^16 + ll
+
+    and each power of two folds by 2^31 === 1:  2^32 === 2, and the middle
+    word m = mh*2^15 + ml gives m*2^16 === ml*2^16 + mh.  Every intermediate
+    sum stays < 2^32 and every norm31 input stays < 2p.  Output is canonical.
+    """
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    al = a & 0xFFFF
+    ah = a >> 16
+    bl = b & 0xFFFF
+    bh = b >> 16
+    ll = al * bl                       # < 2^32, exact in uint32
+    mid = al * bh + ah * bl            # each term < 2^31.x: sum < 2^32, exact
+    hh = ah * bh                       # < 2^32
+    ml = mid & 0x7FFF                  # < 2^15
+    mh = mid >> 15                     # < 2^17
+    t = fold31(ll)                                  # [0, p)
+    t = norm31(t + (ml << 16))                      # + ml*2^16 < 2^31
+    t = norm31(t + mh)
+    # hh*2^32 === 2*hh; hh < 2^32 so fold first, then double via one add
+    hh2 = fold31(hh)
+    t = norm31(t + hh2)
+    return norm31(t + hh2)
+
+
+def rot_gf(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(x * 2^s) mod p for x < 2^31 — a rotate within the low 31 bits.
+
+    ``s`` is a static Python int (any value; reduced mod 31 since
+    2^31 === 1).  The high ``s`` bits wrap to the bottom: result
+    <= 2^31 - 1, canonicalised with one norm.
+    """
+    s = int(s) % 31
+    if s == 0:
+        return norm31(x)
+    lo_bits = 31 - s
+    hi = x >> lo_bits
+    lo = (x & ((1 << lo_bits) - 1)) << s
+    return norm31(lo + hi)
+
+
+def inv_gf(a: jnp.ndarray) -> jnp.ndarray:
+    """Modular inverse via Fermat: a^(p-2) mod p, 31 fixed squarings.
+
+    Vectorised square-and-multiply over the static 31-bit exponent
+    p - 2 = 0b111...1101; inv_gf(0) = 0 (callers guarantee nonzero
+    denominators — distinct interpolation nodes).
+    """
+    a = jnp.asarray(a, jnp.uint32)
+    e = FIELD_P - 2
+    result = jnp.ones_like(a)
+    base = a
+    for bit in range(31):
+        if (e >> bit) & 1:
+            result = mul_gf(result, base)
+        if bit != 30:
+            base = mul_gf(base, base)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# lax-level reference implementations
+# ---------------------------------------------------------------------------
+
+def matmul_gf_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Exact (m, c) @ (c, n) mod p — the kernel's interpret-mode oracle.
+
+    A ``fori_loop`` over the contraction axis of broadcast
+    multiply-fold-adds; every partial sum is renormalised per step, so
+    nothing ever exceeds 32 bits.  Inputs any int dtype; output uint32
+    canonical residues.
+    """
+    a = to_gf(a)
+    b = to_gf(b)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul_gf: bad shapes {a.shape} @ {b.shape}")
+    m, c = a.shape
+    n = b.shape[1]
+
+    def body(i, acc):
+        col = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)    # (m, 1)
+        row = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0)    # (1, n)
+        return add_gf(acc, mul_gf(col, row))
+
+    return jax.lax.fori_loop(0, c, body, jnp.zeros((m, n), jnp.uint32))
+
+
+def _prod_gf(x: jnp.ndarray) -> jnp.ndarray:
+    """Product over the last axis, mod p (fori_loop of mul_gf steps)."""
+    j = x.shape[-1]
+
+    def body(l, acc):
+        return mul_gf(acc, jax.lax.dynamic_slice_in_dim(x, l, 1, axis=-1)[..., 0])
+
+    return jax.lax.fori_loop(
+        0, j, body, jnp.ones(x.shape[:-1], jnp.uint32)
+    )
+
+
+def lagrange_basis_gf_ref(eval_pts: jnp.ndarray, nodes: jnp.ndarray) -> jnp.ndarray:
+    """Batched exact Lagrange basis: M[..., e, j] = prod_{l != j}
+    (x_e - u_l) / (u_j - u_l) over GF(p).
+
+    ``eval_pts`` is (E,); ``nodes`` is (..., J) — leading axes batch over
+    node sets (erasure patterns), which is what makes a (B, K*) batch of
+    received sets one call.  Division is Fermat inversion of the (…, J)
+    denominator products.  Bit-identical to the numpy host oracle
+    (``repro.core.lagrange._lagrange_basis_modp``) by exactness.
+    """
+    x = to_gf(eval_pts)                       # (E,)
+    u = to_gf(nodes)                          # (..., J)
+    if x.ndim != 1:
+        raise ValueError(f"eval_pts must be 1-D, got {x.shape}")
+    j_count = u.shape[-1]
+    diff = sub_gf(x[:, None], u[..., None, :])          # (..., E, J) over l
+    j_idx = jnp.arange(j_count)
+
+    def num_body(l, acc):
+        col = jax.lax.dynamic_slice_in_dim(diff, l, 1, axis=-1)   # (..., E, 1)
+        factor = jnp.where(j_idx == l, jnp.uint32(1), col)        # (..., E, J)
+        return mul_gf(acc, factor)
+
+    num = jax.lax.fori_loop(
+        0, j_count, num_body,
+        jnp.ones(diff.shape[:-2] + (x.shape[0], j_count), jnp.uint32),
+    )
+    # den[..., j] = prod_{l != j} (u_j - u_l): (…, J, J) pair table, diagonal
+    # masked to 1 (J is small — the coding matrices are (nr, k) / (k, K*))
+    pair = sub_gf(u[..., :, None], u[..., None, :])               # (..., J, J)
+    eye = jnp.eye(j_count, dtype=bool)
+    den = _prod_gf(jnp.where(eye, jnp.uint32(1), pair))           # (..., J)
+    return mul_gf(num, inv_gf(den)[..., None, :])                 # (..., E, J)
+
+
+__all__ = [
+    "FIELD_P", "add_gf", "fold31", "from_gf", "inv_gf", "lagrange_basis_gf_ref",
+    "matmul_gf_ref", "mul_gf", "norm31", "rot_gf", "sub_gf", "to_gf",
+]

@@ -26,14 +26,16 @@ The one-liner::
 
 from .executor import (compile_cache_size, run, run_group, run_groups,
                        suggest_round_chunk)
-from .registry import (Scenario, ScenarioBatch, SweepGroup, build_groups,
-                       catalogue, describe, expand, family_names, register)
+from .registry import (Scenario, ScenarioBatch, SweepGroup, as_dense_schedule,
+                       build_groups, catalogue, describe, expand, family_names,
+                       register)
 from .results import (ScenarioResult, manifest, summarize, summarize_group,
                       write_manifest)
 
 __all__ = [
     "Scenario", "ScenarioBatch", "ScenarioResult", "SweepGroup",
-    "build_groups", "catalogue", "compile_cache_size", "describe", "expand",
-    "family_names", "manifest", "register", "run", "run_group", "run_groups",
-    "suggest_round_chunk", "summarize", "summarize_group", "write_manifest",
+    "as_dense_schedule", "build_groups", "catalogue", "compile_cache_size",
+    "describe", "expand", "family_names", "manifest", "register", "run",
+    "run_group", "run_groups", "suggest_round_chunk", "summarize",
+    "summarize_group", "write_manifest",
 ]

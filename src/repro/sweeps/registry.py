@@ -38,6 +38,26 @@ from repro.core.throughput import strategy_known
 # from start_round until the next segment's start (piecewise-constant)
 ScheduleSegment = tuple[int, tuple[float, ...], tuple[float, ...]]
 
+# a dense chain spec: per-round rows, shape (rounds, n) as nested tuples
+DenseRows = tuple[tuple[float, ...], ...]
+
+
+def as_dense_schedule(p_gg, p_bb) -> tuple[DenseRows, DenseRows]:
+    """Precomputed (rounds, n) chain arrays -> a hashable ``dense_schedule``.
+
+    The dense counterpart of the piecewise-constant ``schedule`` segments:
+    row t is the chain governing the transition into round t (row 0 doubles
+    as the initial distribution, exactly the engine's time-varying-chain
+    convention).  Use for computed drift curves that change every round.
+    """
+    p_gg = np.asarray(p_gg, np.float32)
+    p_bb = np.asarray(p_bb, np.float32)
+    if p_gg.ndim != 2 or p_gg.shape != p_bb.shape:
+        raise ValueError(f"dense schedule needs matching (rounds, n) arrays, "
+                         f"got {p_gg.shape} vs {p_bb.shape}")
+    to_rows = lambda a: tuple(tuple(float(v) for v in row) for row in a)
+    return (to_rows(p_gg), to_rows(p_bb))
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -48,7 +68,10 @@ class Scenario:
     A non-empty ``schedule`` makes the chain non-stationary: piecewise-
     constant segments materialised into (rounds, n) transition arrays at
     batch-build time (``p_gg``/``p_bb`` then hold the round-0 rows, kept
-    for display and validation).
+    for display and validation).  ``dense_schedule`` is the second
+    materialisation path: a precomputed per-round (rounds, n) chain spec
+    (:func:`as_dense_schedule`) for drift curves that move every round —
+    mutually exclusive with ``schedule``.
     """
 
     name: str
@@ -65,6 +88,7 @@ class Scenario:
     seed: int | None = None          # explicit PRNGKey seed (paper replication)
     meta: tuple[tuple[str, Any], ...] = ()
     schedule: tuple[ScheduleSegment, ...] = ()
+    dense_schedule: tuple[DenseRows, DenseRows] | None = None
 
     def __post_init__(self):
         if len(self.p_gg) != self.lp.n or len(self.p_bb) != self.lp.n:
@@ -92,19 +116,49 @@ class Scenario:
                 raise ValueError(
                     f"{self.name}: p_gg/p_bb must equal the schedule's round-0 rows"
                 )
+        if self.dense_schedule is not None:
+            if self.schedule:
+                raise ValueError(
+                    f"{self.name}: schedule and dense_schedule are mutually exclusive"
+                )
+            gg, bb = self.dense_schedule
+            if len(gg) != self.rounds or len(bb) != self.rounds:
+                raise ValueError(
+                    f"{self.name}: dense_schedule must have one row per round "
+                    f"(got {len(gg)}/{len(bb)} for rounds={self.rounds})"
+                )
+            for rows in (gg, bb):
+                if any(len(row) != self.lp.n for row in rows):
+                    raise ValueError(
+                        f"{self.name}: dense_schedule rows must have length n={self.lp.n}"
+                    )
+            if (tuple(gg[0]) != tuple(self.p_gg)
+                    or tuple(bb[0]) != tuple(self.p_bb)):
+                raise ValueError(
+                    f"{self.name}: p_gg/p_bb must equal the dense schedule's round-0 rows"
+                )
+
+    @property
+    def scheduled(self) -> bool:
+        """Does this scenario batch as (rounds, n) chain arrays?"""
+        return bool(self.schedule) or self.dense_schedule is not None
 
     @property
     def group_signature(self) -> tuple:
         """The static-arg signature the executor compiles per.
 
-        Scheduled scenarios batch as (rounds, n) chain arrays — a different
-        input shape — so they group separately from stationary ones.
+        Scheduled scenarios (piecewise OR dense) batch as (rounds, n) chain
+        arrays — a different input shape — so they group separately from
+        stationary ones.
         """
-        return (self.lp, self.rounds, self.strategies, bool(self.schedule))
+        return (self.lp, self.rounds, self.strategies, self.scheduled)
 
     def chain_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """Materialise the chain: (n,) float32 rows, or (rounds, n) when
         scheduled (row t = the chain governing the transition into round t)."""
+        if self.dense_schedule is not None:
+            return (np.asarray(self.dense_schedule[0], np.float32),
+                    np.asarray(self.dense_schedule[1], np.float32))
         if not self.schedule:
             return (np.asarray(self.p_gg, np.float32),
                     np.asarray(self.p_bb, np.float32))

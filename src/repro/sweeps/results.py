@@ -14,8 +14,11 @@ Regret axis: whenever a scenario's strategies include the genie
 timely-throughput regret vs the oracle (:mod:`repro.policies.regret` —
 paired per-round differences on the shared trajectory, summed over rounds,
 averaged over Monte-Carlo repeats).  Manifest rows carry these as
-``regret_<strategy>`` columns, so policy sweeps report throughput, baseline
-ratio AND convergence-to-optimal in one document.
+``regret_<strategy>`` columns plus paired 95% CIs (``regret_ci95_<s>``:
+across repeats when ``seeds > 1``, else the CLT width of the summed paired
+per-round differences — same machinery and same single-seed caveat as the
+throughput CI), so policy sweeps report throughput, baseline ratio AND
+convergence-to-optimal with uncertainty in one document.
 
 :func:`manifest` renders results as a JSON document in the ``BENCH_*.json``
 trajectory shape (a ``bench`` name, run metadata, a flat ``results`` list),
@@ -54,6 +57,10 @@ class ScenarioResult:
     # strategy -> mean final cumulative regret vs the oracle (empty when the
     # scenario does not simulate the oracle)
     regret: dict[str, float] = dataclasses.field(default_factory=dict)
+    # strategy -> paired 95% CI on the mean final regret (same keys as regret)
+    regret_ci95: dict[str, tuple[float, float]] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def name(self) -> str:
@@ -89,17 +96,47 @@ class ScenarioResult:
                 if s != self.scenario.baseline
             },
             **{f"regret_{s}": v for s, v in self.regret.items()},
+            **{f"regret_ci95_{s}": list(v) for s, v in self.regret_ci95.items()},
         }
+
+
+def _half_across_seeds(per_seed: np.ndarray) -> float:
+    """z * s / sqrt(n): the across-repeats half-width both CIs share."""
+    return _Z95 * float(per_seed.std(ddof=1)) / math.sqrt(per_seed.size)
 
 
 def _ci95(per_seed: np.ndarray, rounds: int) -> tuple[float, float]:
     """95% CI of the mean throughput (see module docstring)."""
     m = float(per_seed.mean())
     if per_seed.size > 1:
-        half = _Z95 * float(per_seed.std(ddof=1)) / math.sqrt(per_seed.size)
+        half = _half_across_seeds(per_seed)
     else:
         half = _Z95 * math.sqrt(max(m * (1.0 - m), 0.0) / max(rounds, 1))
     return (max(m - half, 0.0), min(m + half, 1.0))
+
+
+def _regret_ci95(
+    finals: np.ndarray, per_round: np.ndarray | None
+) -> tuple[float, float]:
+    """Paired 95% CI of the mean final cumulative regret.
+
+    ``finals`` is the (seeds,) per-repeat final regret, ``per_round`` the
+    (1, rounds) paired per-round differences it sums (only materialised —
+    and only needed — for single-seed runs).  With repeats the CI is the
+    usual normal interval across seeds (the same machinery as the
+    throughput :func:`_ci95`); a single seed falls back to the CLT width of
+    the summed per-round differences, z * s_diff * sqrt(rounds) — paired
+    per-round variation, with the same serial-correlation caveat as the
+    single-seed throughput CI.  Regret is unbounded, so no clamping.
+    """
+    m = float(finals.mean())
+    if finals.size > 1:
+        half = _half_across_seeds(finals)
+    else:
+        rounds = per_round.shape[-1]
+        sd = float(per_round[0].std(ddof=1)) if rounds > 1 else 0.0
+        half = _Z95 * sd * math.sqrt(rounds)
+    return (m - half, m + half)
 
 
 def summarize_group(group: SweepGroup, succ: np.ndarray) -> list[ScenarioResult]:
@@ -133,17 +170,28 @@ def summarize_group(group: SweepGroup, succ: np.ndarray) -> list[ScenarioResult]
             for s in group.strategies
         }
         regret: dict[str, float] = {}
+        regret_ci95: dict[str, tuple[float, float]] = {}
         if has_oracle:
             # (seeds, rounds, S) -> per-strategy mean final cumulative regret
+            # plus a paired 95% CI from the same per-seed finals
             finals = regret_mod.final_regret(succ[rows], group.strategies)
-            regret = {
-                s: float(v.mean())
-                for s, v in finals.items()
-                if s != regret_mod.REFERENCE
-            }
+            for s, v in finals.items():
+                if s == regret_mod.REFERENCE:
+                    continue
+                regret[s] = float(v.mean())
+                # the (seeds, rounds) diffs are only consumed by the
+                # single-seed CLT fallback; across-seeds CIs never touch them
+                diffs = None
+                if v.size == 1:
+                    diffs = np.asarray(
+                        regret_mod.per_round_regret(succ[rows], group.strategies, s),
+                        np.float64,
+                    )                                    # (1, rounds)
+                regret_ci95[s] = _regret_ci95(np.asarray(v, np.float64), diffs)
         results.append(ScenarioResult(
             scenario=sc, seeds=seed_tp.shape[0], throughput=throughput,
             per_seed=per_seed, ci95=ci95, ratio=ratio, regret=regret,
+            regret_ci95=regret_ci95,
         ))
     return results
 

@@ -34,6 +34,9 @@ Coded Computing):
   * ``regime_switch``   — abrupt regime changes every ``dwell`` rounds: a
                           rotating third of the pool degrades (preemption /
                           credit-exhaustion waves)
+  * ``computed_drift``  — SMOOTH per-round drift through the dense
+                          (rounds, n) ``dense_schedule`` spec (no step-block
+                          quantisation; the second materialisation path)
 """
 
 from __future__ import annotations
@@ -45,7 +48,7 @@ from repro.core import markov
 from repro.core.lagrange import CodeSpec
 from repro.core.lea import LoadParams
 
-from .registry import Scenario, register
+from .registry import Scenario, as_dense_schedule, register
 
 # default strategy tuple for the non-stationary families: vanilla LEA vs its
 # adaptive variants, the static floor and the genie ceiling (regret columns)
@@ -369,6 +372,55 @@ def regime_switch(
             schedule=tuple(schedule),
             meta=(("dwell", dwell), ("lam", lam), ("pi_good", pi_good),
                   ("pi_degraded", pi_degraded), ("n_rotate", n_rotate)),
+        ))
+    return tuple(scenarios)
+
+
+@register("computed_drift")
+def computed_drift(
+    periods: tuple[int, ...] = (400, 1000),
+    rounds: int = 2_000,
+    lam: float = 0.5,
+    base_pi: float = 0.55,
+    amp: float = 0.35,
+    strategies: tuple[str, ...] = POLICY_STRATEGIES,
+    baseline: str = "lea",
+) -> tuple[Scenario, ...]:
+    """Smooth per-round drift via a precomputed dense (rounds, n) chain spec.
+
+    The ``dense_schedule`` showcase: the same rotating sinusoidal
+    availability as ``drifting_chains`` but computed at EVERY round (no
+    ``step``-block quantisation) — ``pi_i(t) = base_pi + amp *
+    sin(2*pi*(t/period + i/n))`` materialised directly as (rounds, n)
+    arrays through :func:`repro.sweeps.registry.as_dense_schedule`.  One
+    scenario per drift period; windowed/discounted LEA variants track the
+    continuously-moving regime that vanilla LEA's all-history counts blur.
+    """
+    n = SIM.n
+    lp = _sim_lp()
+    scenarios = []
+    for period in periods:
+        t = [tm + 0.5 for tm in range(rounds)]      # mid-round sample points
+        p_gg = []
+        p_bb = []
+        for tm in t:
+            pis = [
+                min(max(base_pi + amp * math.sin(
+                    2.0 * math.pi * (tm / period + i / n)), 0.02), 0.98)
+                for i in range(n)
+            ]
+            g, b = _chain_rows(pis, lam)
+            p_gg.append(g)
+            p_bb.append(b)
+        dense = as_dense_schedule(p_gg, p_bb)
+        scenarios.append(Scenario(
+            name=f"cdrift_T{period}", family="computed_drift", lp=lp,
+            p_gg=dense[0][0], p_bb=dense[1][0],
+            mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline,
+            rounds=rounds, strategies=tuple(strategies), baseline=baseline,
+            dense_schedule=dense,
+            meta=(("period", period), ("lam", lam),
+                  ("base_pi", base_pi), ("amp", amp)),
         ))
     return tuple(scenarios)
 

@@ -1,0 +1,190 @@
+"""repro.kernels.gf: exact Mersenne-31 arithmetic, kernel-vs-ref bit-equality.
+
+Residues are exact, so every assertion here is array_equal — never allclose.
+The numpy int64 path is the independent oracle for the primitives; the lax
+reference is the oracle for the Pallas kernel (interpret mode on CPU) and
+the limb-decomposed dot path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import gf
+from repro.kernels.gf import ref as gf_ref
+from repro.kernels.gf.kernel import matmul_gf_pallas
+
+P = gf.FIELD_P
+
+# always-on boundary residues: additive/multiplicative identities and the
+# extremes where limb splits and folds are most likely to break
+_BOUNDARY = np.array([0, 1, 2, P - 1, P - 2, 2**30, 2**16, 2**15, 0xFFFF],
+                     dtype=np.int64)
+
+
+def _rand_residues(rng, shape):
+    vals = rng.integers(0, P, size=shape).astype(np.int64)
+    flat = vals.reshape(-1)
+    take = min(flat.shape[0], _BOUNDARY.shape[0])
+    flat[:take] = _BOUNDARY[:take]          # splice boundary values in
+    return flat.reshape(shape)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 257))
+def test_mul_gf_matches_numpy_int64(seed, n):
+    rng = np.random.default_rng(seed)
+    a = _rand_residues(rng, (n,))
+    b = _rand_residues(rng, (n,))[::-1].copy()
+    got = np.asarray(
+        gf.mul_gf(gf.to_gf(a.astype(np.int32)), gf.to_gf(b.astype(np.int32))),
+        np.int64,
+    )
+    np.testing.assert_array_equal(got, (a * b) % P)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_add_sub_inv_gf_match_numpy_int64(seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_residues(rng, (64,))
+    b = _rand_residues(rng, (64,))[::-1].copy()
+    ga, gb = gf.to_gf(a.astype(np.int32)), gf.to_gf(b.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(gf.add_gf(ga, gb), np.int64), (a + b) % P)
+    np.testing.assert_array_equal(np.asarray(gf.sub_gf(ga, gb), np.int64), (a - b) % P)
+    nz = a[a != 0]
+    inv = np.asarray(gf.inv_gf(gf.to_gf(nz.astype(np.int32))), np.int64)
+    np.testing.assert_array_equal((nz * inv) % P, 1)
+    # inv of 0 is defined as 0 (never used by callers, but must not explode)
+    assert int(gf.inv_gf(gf.to_gf(np.int32(0)))) == 0
+
+
+def test_rot_gf_is_power_of_two_multiplication():
+    rng = np.random.default_rng(0)
+    v = _rand_residues(rng, (128,))
+    gv = gf.to_gf(v.astype(np.int32))
+    for s in (0, 1, 7, 8, 16, 24, 30, 31, 40, 48, 62):
+        got = np.asarray(gf_ref.rot_gf(gv, s), np.int64)
+        np.testing.assert_array_equal(got, (v * pow(2, s, P)) % P)
+
+
+def test_to_gf_reduces_signed_and_unsigned():
+    x = np.array([-1, -P, P - 1, 5], dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(gf.to_gf(x), np.int64), np.array([P - 1, 0, P - 1, 5]))
+    u = np.array([P, P + 1, 2**32 - 1], dtype=np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(gf.to_gf(u), np.int64), np.array([0, 1, 1]))
+
+
+def _np_matmul_gf(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    out = np.zeros((a.shape[0], b.shape[1]), np.int64)
+    for k in range(a.shape[1]):
+        out = (out + a[:, k : k + 1] * b[k : k + 1, :]) % P
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    c=st.integers(1, 300),     # crosses the dot path's 256-wide K-chunk
+    n=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_gf_all_impls_bit_equal_numpy(m, c, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_residues(rng, (m, c))
+    b = _rand_residues(rng, (c, n))
+    want = _np_matmul_gf(a, b)
+    for impl in ("ref", "dot", "pallas"):
+        got = np.asarray(
+            gf.matmul_gf(a.astype(np.int32), b.astype(np.int32), impl=impl),
+            np.int64,
+        )
+        np.testing.assert_array_equal(got, want, err_msg=f"impl={impl}")
+
+
+def test_pallas_kernel_multi_tile_grid_accumulation():
+    """Small explicit blocks force a (2+, 2+, 2+) grid: the K-innermost
+    revisiting accumulation and edge-tile zero padding must stay exact."""
+    rng = np.random.default_rng(3)
+    a = _rand_residues(rng, (19, 37))
+    b = _rand_residues(rng, (37, 150))
+    want = _np_matmul_gf(a, b)
+    got = matmul_gf_pallas(
+        gf.to_gf(a.astype(np.int32)), gf.to_gf(b.astype(np.int32)),
+        block_m=8, block_n=128, block_k=16, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_matmul_gf_rejects_bad_shapes_and_impl():
+    a = np.zeros((2, 3), np.int32)
+    b = np.zeros((4, 2), np.int32)
+    for fn in (lambda: gf.matmul_gf(a, b), lambda: gf.matmul_gf(a[0], b)):
+        try:
+            fn()
+        except ValueError:
+            pass
+        else:  # pragma: no cover
+            raise AssertionError("expected ValueError")
+    try:
+        gf.matmul_gf(np.zeros((2, 4), np.int32), b, impl="nope")
+    except ValueError as e:
+        assert "nope" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    e=st.integers(1, 12),
+    j=st.integers(2, 10),
+    b=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lagrange_basis_gf_matches_numpy_oracle(e, j, b, seed):
+    """Single + batched basis construction == the host `_lagrange_basis_modp`."""
+    from repro.core.lagrange import _lagrange_basis_modp
+
+    rng = np.random.default_rng(seed)
+    ev = rng.choice(4 * (e + j), size=e, replace=False).astype(np.int64)
+    # distinct nodes, disjoint from eval points
+    pool = np.setdiff1d(np.arange(4 * (e + j), 8 * (e + j)), ev)
+    nodes = np.stack([rng.choice(pool, size=j, replace=False) for _ in range(b)])
+    got = np.asarray(
+        gf.lagrange_basis_gf(ev.astype(np.int32), nodes.astype(np.int32)),
+        np.int64,
+    )
+    assert got.shape == (b, e, j)
+    for i in range(b):
+        np.testing.assert_array_equal(got[i], _lagrange_basis_modp(ev, nodes[i]))
+    # unbatched call gives the same matrix
+    got0 = np.asarray(
+        gf.lagrange_basis_gf(ev.astype(np.int32), nodes[0].astype(np.int32)),
+        np.int64,
+    )
+    np.testing.assert_array_equal(got0, got[0])
+
+
+def test_basis_interpolates_polynomials_exactly():
+    """The basis actually interpolates: for data = poly(nodes), basis @ data
+    == poly(eval) — exactness of the whole encode pipeline in one identity."""
+    rng = np.random.default_rng(7)
+    nodes = np.arange(20, 29, dtype=np.int64)        # J = 9 -> deg <= 8
+    ev = np.arange(0, 11, dtype=np.int64)
+    coeffs = rng.integers(0, P, size=9).astype(np.int64)
+
+    def poly(x):
+        acc = np.zeros_like(x)
+        for c in reversed(coeffs):
+            acc = (acc * x + c) % P
+        return acc
+
+    basis = gf.lagrange_basis_gf(ev.astype(np.int32), nodes.astype(np.int32))
+    got = np.asarray(
+        gf.matmul_gf(gf.from_gf(jnp.asarray(basis)),
+                     poly(nodes).reshape(-1, 1).astype(np.int32)),
+        np.int64,
+    )[:, 0]
+    np.testing.assert_array_equal(got, poly(ev))

@@ -303,3 +303,85 @@ def test_summarize_rejects_row_mismatch():
     (group,) = sweeps.build_groups(scs)
     with pytest.raises(ValueError):
         sweeps.summarize_group(group, np.zeros((1, 8, 3), bool))
+
+
+# ---------------------------------------------------------------------------
+# dense chain schedules (PR-4 satellite) + regret CIs
+# ---------------------------------------------------------------------------
+
+def test_dense_schedule_matches_piecewise_step1_bit_for_bit():
+    """A dense spec built from a step-1 piecewise schedule materialises the
+    SAME chain arrays and simulates bit-identically (same group shape)."""
+    sc_p = sweeps.expand("drifting_chains", periods=(120,), rounds=96, step=1,
+                         strategies=("lea", "static", "oracle"))[0]
+    gg, bb = sc_p.chain_arrays()
+    dense = sweeps.as_dense_schedule(gg, bb)
+    import dataclasses
+    # round-0 rows must match the dense spec's float32 materialisation
+    sc_d = dataclasses.replace(sc_p, name="dense_twin", schedule=(),
+                               p_gg=dense[0][0], p_bb=dense[1][0],
+                               dense_schedule=dense, seed=3)
+    sc_p = dataclasses.replace(sc_p, seed=3)
+    np.testing.assert_array_equal(sc_d.chain_arrays()[0], gg)
+    np.testing.assert_array_equal(sc_d.chain_arrays()[1], bb)
+    assert sc_d.group_signature == sc_p.group_signature  # same compile group
+    (g_p,) = sweeps.build_groups([sc_p])
+    (g_d,) = sweeps.build_groups([sc_d])
+    np.testing.assert_array_equal(
+        sweeps.run_groups([g_p])[0], sweeps.run_groups([g_d])[0])
+
+
+def test_dense_schedule_validation():
+    import dataclasses
+    sc = sweeps.expand("computed_drift", periods=(50,), rounds=40)[0]
+    gg, bb = sc.chain_arrays()
+    with pytest.raises(ValueError):      # schedule and dense are exclusive
+        dataclasses.replace(
+            sc, schedule=((0, sc.p_gg, sc.p_bb),))
+    with pytest.raises(ValueError):      # wrong number of rows
+        dataclasses.replace(sc, dense_schedule=sweeps.as_dense_schedule(
+            gg[:-1], bb[:-1]))
+    with pytest.raises(ValueError):      # round-0 row must match p_gg
+        bad = gg.copy(); bad[0, 0] += 0.25
+        dataclasses.replace(sc, dense_schedule=sweeps.as_dense_schedule(bad, bb))
+    with pytest.raises(ValueError):      # mismatched array shapes
+        sweeps.as_dense_schedule(gg, bb[:, :-1])
+
+
+def test_computed_drift_family_runs_with_regret_ci_columns():
+    res = sweeps.run("computed_drift", periods=(60,), rounds=80, seeds=2)
+    assert [r.name for r in res] == ["cdrift_T60"]
+    row = res[0].row()
+    for s in ("lea", "lea_window64", "static"):
+        assert f"regret_{s}" in row and f"regret_ci95_{s}" in row
+        lo, hi = row[f"regret_ci95_{s}"]
+        assert lo <= row[f"regret_{s}"] <= hi
+    assert "regret_oracle" not in row
+    json.dumps(row, allow_nan=False)     # manifest rows stay RFC JSON
+
+
+def test_regret_ci_single_seed_uses_paired_per_round_width():
+    res = sweeps.run("regime_switch", dwells=(40,), rounds=80, seeds=1)
+    row = res[0].row()
+    lo, hi = row["regret_ci95_lea"]
+    assert hi > lo                       # CLT width from per-round diffs
+    assert lo <= row["regret_lea"] <= hi
+
+
+def test_regret_ci_multi_seed_shrinks_with_more_seeds():
+    """Across-seed CI machinery: the half width is the z*s/sqrt(n) of the
+    per-seed finals (checked against a direct recomputation)."""
+    res = sweeps.run("regime_switch", dwells=(40,), rounds=60, seeds=4)
+    r = res[0]
+    from repro.sweeps.results import _Z95
+    import math
+    lo, hi = r.regret_ci95["lea"]
+    assert abs((lo + hi) / 2 - r.regret["lea"]) < 1e-9
+    # reconstruct the finals from the paired engine run
+    (group,) = sweeps.build_groups(
+        sweeps.expand("regime_switch", dwells=(40,), rounds=60), seeds=4)
+    succ = sweeps.run_groups([group])[0]
+    from repro.policies import regret as regret_mod
+    finals = regret_mod.final_regret(succ, group.strategies)["lea"]
+    want_half = _Z95 * finals.std(ddof=1) / math.sqrt(finals.size)
+    assert abs((hi - lo) / 2 - want_half) < 1e-6
