@@ -106,6 +106,17 @@ def received_indices(on_time: jnp.ndarray, kstar: int) -> jnp.ndarray:
 _first_kstar_mask = received_indices
 
 
+def _received_or_raise(spec: CodeSpec, on_time: np.ndarray) -> np.ndarray:
+    """First-K* received indices, or ``TimeoutError`` on a short pattern."""
+    on_time = np.asarray(on_time)
+    got = int(np.count_nonzero(on_time))
+    if got < spec.recovery_threshold:
+        raise TimeoutError(
+            f"round failed: {got} < K*={spec.recovery_threshold} on-time results"
+        )
+    return np.nonzero(on_time)[0][: spec.recovery_threshold]
+
+
 class DecodeCache:
     """Host-side memo of decode matrices keyed on the received chunk set.
 
@@ -137,8 +148,13 @@ class DecodeCache:
         return mat
 
     def from_on_time(self, on_time: np.ndarray, dtype=jnp.float32):
-        """(received indices, decode matrix) for the first-K* on-time chunks."""
-        received = np.nonzero(np.asarray(on_time))[0][: self.spec.recovery_threshold]
+        """(received indices, decode matrix) for the first-K* on-time chunks.
+
+        Raises ``TimeoutError`` when fewer than K* chunks arrived (same
+        convention as :func:`coded_matmul` and the modp twin) rather than
+        building a decode matrix from a truncated received set.
+        """
+        received = _received_or_raise(self.spec, on_time)
         return received, self.matrix(received, dtype)
 
 
@@ -335,8 +351,13 @@ class ModpDecodeCache:
         return mat
 
     def from_on_time(self, on_time: np.ndarray):
-        """(received indices, exact decode matrix) for the first K* on-time."""
-        received = np.nonzero(np.asarray(on_time))[0][: self.spec.recovery_threshold]
+        """(received indices, exact decode matrix) for the first K* on-time.
+
+        Raises ``TimeoutError`` when fewer than K* chunks arrived, matching
+        the eager float path (:func:`coded_matmul`) — a short pattern would
+        otherwise feed a truncated gather into the device basis build.
+        """
+        received = _received_or_raise(self.spec, on_time)
         return received, self.matrix(received)
 
 

@@ -78,7 +78,17 @@ def matmul_gf_pallas(
     n = b.shape[1]
     bm = min(block_m, _round_up(m, 8))
     bn = min(block_n, _round_up(n, _LANES))
-    bk = min(block_k, _round_up(c, 8))
+    # bk is A's minormost (lane) dim, so like bn it must stay a multiple of
+    # 128 for Mosaic tiling — small K is padded up, never shrunk below a lane
+    # tile (c=50 pads to bk=128; an explicit non-128-multiple block_k is
+    # honoured only in interpret mode, for small-grid tests).
+    bk = min(block_k, _round_up(c, _LANES))
+    if not interpret and (bk % _LANES or bn % _LANES):
+        raise ValueError(
+            f"matmul_gf_pallas: lane-dim blocks (bk={bk}, bn={bn}) must be "
+            f"multiples of {_LANES} on real hardware; pass a conforming "
+            "block_k/block_n or interpret=True"
+        )
     m_pad, c_pad, n_pad = _round_up(m, bm), _round_up(c, bk), _round_up(n, bn)
     a_p = jnp.pad(a.astype(jnp.uint32), ((0, m_pad - m), (0, c_pad - c)))
     b_p = jnp.pad(b.astype(jnp.uint32), ((0, c_pad - c), (0, n_pad - n)))

@@ -17,7 +17,9 @@ Two entry points the coding layer uses:
     then the limb planes are recombined with Mersenne rotations
     (2^31 === 1).  This rides the platform's optimised sgemm instead of an
     elementwise modular loop — where the >= 5x-over-numpy speedup in
-    BENCH_gf.json comes from.
+    BENCH_gf.json comes from.  The GEMMs are pinned to
+    ``Precision.HIGHEST``: JAX's default precision allows TF32 on Ampere+
+    GPUs, whose 10-bit mantissa would round the limb products.
   * ``impl="ref"``    — the lax fori_loop fold path, the kernel's
     interpret-mode oracle.
   * ``impl=None``     — pallas on TPU, dot elsewhere.
@@ -71,9 +73,14 @@ def matmul_gf_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     acc = jnp.zeros((m, n), jnp.uint32)
     for k0 in range(0, c, _DOT_CHUNK):
         k1 = min(k0 + _DOT_CHUNK, c)
+        # Precision.HIGHEST is load-bearing: JAX's default matmul precision
+        # permits TF32 on Ampere+ GPUs (10-bit mantissa), which would round
+        # the 16-bit limb products and the < 2^24 partial sums — silently
+        # wrong residues.  HIGHEST guarantees a true float32 GEMM everywhere.
         part = jnp.dot(
             a_l[:, k0:k1], b_l[k0:k1, :],
             preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST,
         )                                                  # (4m, 4n), exact ints
         part_u = part.astype(jnp.uint32)                   # < 2^24, exact
         part_u = part_u.reshape(_LIMBS, m, _LIMBS, n)

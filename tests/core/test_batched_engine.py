@@ -250,6 +250,9 @@ def test_coded_matmul_device_flags_insufficient_results():
     assert not bool(ok)
     with pytest.raises(TimeoutError):
         coded_matmul(coded, jnp.ones((3,), jnp.float32), on_time)
+    # the cache itself enforces the same convention for direct callers
+    with pytest.raises(TimeoutError):
+        DecodeCache(spec).from_on_time(on_time)
 
 
 def test_coded_linear_gradient_device_matches_eager_and_jits():

@@ -146,6 +146,27 @@ def test_short_round_reports_not_ok():
     assert not bool(ok)
 
 
+def test_modp_cache_from_on_time_raises_on_short_pattern():
+    """The eager cache path mirrors coded_matmul's TimeoutError convention
+    instead of silently building a truncated decode matrix."""
+    spec = lcc.CodeSpec(5, 2, 4, 1)
+    cache = ModpDecodeCache(spec)
+    on_time = np.zeros(spec.nr, bool)
+    on_time[: spec.recovery_threshold - 1] = True          # one short of K*
+    try:
+        cache.from_on_time(on_time)
+    except TimeoutError as e:
+        assert f"K*={spec.recovery_threshold}" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected TimeoutError")
+    assert len(cache) == 0 and cache.misses == 0            # nothing memoised
+    # exactly K* on time still works
+    on_time[spec.recovery_threshold - 1] = True
+    received, dmat = cache.from_on_time(on_time)
+    np.testing.assert_array_equal(
+        np.asarray(dmat, np.int64), lcc.decode_matrix_modp(spec, received))
+
+
 def test_exact_round_on_engine_rollout_patterns():
     """The acceptance bar: coded_matmul_exact == numpy pipeline for every
     feasible erasure pattern produced by an engine rollout's Markov

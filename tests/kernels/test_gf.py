@@ -118,6 +118,50 @@ def test_pallas_kernel_multi_tile_grid_accumulation():
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
 
 
+def test_matmul_gf_dot_pins_highest_precision():
+    """GPU guard CPU CI can run: every dot_general in the limb GEMM path
+    must trace with Precision.HIGHEST, else Ampere+ TF32 (10-bit mantissa)
+    silently rounds the limb products and breaks bit-exactness."""
+    import jax
+
+    a = jnp.zeros((4, 300), jnp.uint32)       # crosses the 256-wide K-chunk
+    b = jnp.zeros((300, 5), jnp.uint32)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "dot_general":
+                yield eqn
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    yield from walk(v.jaxpr)
+
+    from repro.kernels.gf.ops import matmul_gf_dot
+
+    dots = list(walk(jax.make_jaxpr(matmul_gf_dot)(a, b).jaxpr))
+    assert dots, "expected at least one dot_general in matmul_gf_dot"
+    hi = jax.lax.Precision.HIGHEST
+    for eqn in dots:
+        prec = eqn.params["precision"]
+        assert prec in (hi, (hi, hi)), f"dot_general precision {prec!r}"
+
+
+def test_pallas_rejects_non_lane_blocks_outside_interpret():
+    """The Mosaic lane-dim contract (bk, bn multiples of 128) is enforced,
+    not just documented: small block_k/block_n only fly in interpret mode."""
+    a = gf.to_gf(np.zeros((8, 256), np.int32))
+    b = gf.to_gf(np.zeros((256, 256), np.int32))
+    for kwargs in ({"block_k": 64}, {"block_n": 64}):
+        try:
+            matmul_gf_pallas(a, b, interpret=False, **kwargs)
+        except ValueError as e:
+            assert "128" in str(e)
+        else:  # pragma: no cover
+            raise AssertionError("expected ValueError")
+        # the same blocks are honoured under interpret=True
+        out = matmul_gf_pallas(a, b, interpret=True, **kwargs)
+        assert out.shape == (8, 256)
+
+
 def test_matmul_gf_rejects_bad_shapes_and_impl():
     a = np.zeros((2, 3), np.int32)
     b = np.zeros((4, 2), np.int32)
