@@ -6,9 +6,9 @@ A thin ``repro.sweeps`` registry invocation of the ``fig4`` family (see its
 docstring for the hardware substitution: t2.micro credit dynamics replayed by
 the measured two-state Markov chain, arrival gaps folded into the chain via
 ``markov.t_step_transitions``, the paper's EC2 static benchmark as engine
-strategy ``static_single``).  The family's scenarios span three LoadParams
-groups (one per K*), so the sweep executor compiles three computations for
-the six scenarios — and uses the same per-scenario PRNG keys as the PR-1
+strategy ``static_single``).  K* is a traced batch quantity in the
+shape-polymorphic engine, so all six scenarios (three K*s) run as ONE
+compiled computation — on the same per-scenario PRNG keys as the PR-1
 ``throughput.compare`` path, so the emitted values are bit-identical.
 """
 

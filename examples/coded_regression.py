@@ -20,10 +20,13 @@ through a memoised ``DecodeCache``.
 
 Exact-path variant: the float descent above is the ML adaptation (decode
 conditioning caps k); the paper's protocol is EXACT over a finite field.
-The final section replays the same LEA straggler patterns through
-``coded_matmul_exact`` — encode, worker-shard matmul and erasure-aware
-decode all on device over GF(2^31 - 1) — and checks the decode against the
-numpy ``matmul_modp`` oracle to the last bit.
+The final section replays the same LEA straggler patterns through the
+exact DEGREE-2 gradient ``coded_linear_gradient_modp`` — the very
+polynomial this example's workers evaluate, with encode, worker-shard
+gradient GEMMs and erasure-aware decode all on device over GF(2^31 - 1) —
+and checks every decoded gradient against the numpy ``matmul_modp`` /
+``decode_matrix_modp`` oracle to the last bit.  The regression example is
+GF(p) end to end.
 
 Smoke knob: REPRO_EXAMPLE_ROUNDS overrides the round count (CI gate).
 """
@@ -36,7 +39,7 @@ import numpy as np
 
 from repro.core import (FIELD_P, CodeSpec, DecodeCache, LoadParams,
                         chunk_on_time, coded_linear_gradient,
-                        coded_matmul_exact, decode_matrix_modp,
+                        coded_linear_gradient_modp, decode_matrix_modp,
                         encode_dataset, encode_dataset_modp, matmul_modp)
 from repro.core import throughput
 
@@ -112,34 +115,46 @@ assert tput_lea > tput_static, "LEA should beat the static allocation"
 assert err_lea < err_static, "more on-time rounds => closer to w*"
 
 # -- exact-path variant: the SAME straggler patterns, over the paper's field -
-# A deg-1 exact code on the same cluster (matmul f; k can be large here —
-# GF(p) has no conditioning), fed the LEA rollout's erasure patterns.  The
-# device round (encode -> shard matmul -> erasure-aware decode, all exact
-# Mersenne-31 arithmetic) must agree with the numpy modp oracle bit for bit.
-spec_x = CodeSpec(N, R, K, deg_f=1)
+# The SAME deg-2 code (spec, K* = 15) evaluated exactly: integer twins of the
+# regression data, encoded over GF(p), each round's worker-side gradient
+# X~^T(X~ w - y~) computed with the Mersenne-31 GEMMs and decoded through the
+# round's erasure pattern — the full degree-2 protocol, GF(p) end to end.
+# Every decoded gradient must agree with the numpy modp oracle bit for bit.
 rng_x = np.random.default_rng(1)
 x_int = rng_x.integers(0, FIELD_P, size=(K, ROWS, COLS), dtype=np.int64)
+y_int = rng_x.integers(0, FIELD_P, size=(K, ROWS), dtype=np.int64)
 w_int = rng_x.integers(0, FIELD_P, size=(COLS,), dtype=np.int64)
-coded_x = encode_dataset_modp(spec_x, jnp.asarray(x_int, jnp.int32))
+coded_x = encode_dataset_modp(spec, jnp.asarray(x_int, jnp.int32),
+                              jnp.asarray(y_int, jnp.int32))
 xt_np = np.asarray(coded_x.x_tilde, np.int64)
+yt_np = np.asarray(coded_x.y_tilde, np.int64)
 
 j_lea = STRATEGIES.index("lea")
-exact_jit = jax.jit(lambda m: coded_matmul_exact(coded_x, jnp.asarray(w_int, jnp.int32), m))
-res_np = matmul_modp(xt_np.reshape(spec_x.nr * ROWS, COLS), w_int.reshape(-1, 1))
-res_np = res_np.reshape(spec_x.nr, ROWS)     # round-invariant worker results
+exact_jit = jax.jit(lambda m: coded_linear_gradient_modp(
+    coded_x, jnp.asarray(w_int, jnp.int32), m))
+# round-invariant worker-side chunk gradients, by the numpy oracle
+grads_np = np.stack([
+    matmul_modp(
+        xt_np[v].T,
+        ((matmul_modp(xt_np[v], w_int.reshape(-1, 1))[:, 0] - yt_np[v])
+         % FIELD_P).reshape(-1, 1),
+    )[:, 0]
+    for v in range(spec.nr)
+])                                           # (nr, cols)
 checked = 0
 for m in range(ROUNDS):
     on = on_time_h[j_lea, m]
-    if on.sum() < spec_x.recovery_threshold:
+    if on.sum() < spec.recovery_threshold:
         continue
     out, ok = exact_jit(jnp.asarray(on))
-    rec = np.nonzero(on)[0][: spec_x.recovery_threshold]
-    want = matmul_modp(decode_matrix_modp(spec_x, rec), res_np[rec])
+    rec = np.nonzero(on)[0][: spec.recovery_threshold]
+    per_chunk = matmul_modp(decode_matrix_modp(spec, rec), grads_np[rec])
+    want = per_chunk.sum(axis=0) % FIELD_P
     assert bool(ok)
     np.testing.assert_array_equal(np.asarray(out, np.int64), want)
     checked += 1
     if checked >= 6:
         break
-print(f"exact  : GF(p) device round == numpy modp oracle on {checked} LEA "
-      f"straggler patterns (K*={spec_x.recovery_threshold}, bit-exact)")
+print(f"exact  : GF(p) deg-2 gradient round == numpy modp oracle on {checked} "
+      f"LEA straggler patterns (K*={spec.recovery_threshold}, bit-exact)")
 print("OK")

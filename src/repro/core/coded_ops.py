@@ -291,23 +291,28 @@ def uncoded_linear_gradient(x_chunks: jnp.ndarray, y_chunks: jnp.ndarray, w: jnp
 @dataclasses.dataclass
 class CodedDatasetModp:
     """Exact-path encoded dataset: int32 residues in [0, p), chunk v on
-    worker v//r (same placement as the float :class:`CodedDataset`)."""
+    worker v//r (same placement as the float :class:`CodedDataset`).
+    ``y_tilde`` carries encoded targets for the exact degree-2 gradient."""
 
     spec: CodeSpec
     x_tilde: jnp.ndarray            # (nr, rows, cols) int32 residues
+    y_tilde: jnp.ndarray | None = None   # (nr, rows) int32 residues, or None
 
     @property
     def nr(self) -> int:
         return self.spec.nr
 
 
-def encode_dataset_modp(spec: CodeSpec, x_chunks) -> CodedDatasetModp:
+def encode_dataset_modp(
+    spec: CodeSpec, x_chunks, y_chunks=None
+) -> CodedDatasetModp:
     """Exact device encode: (k, rows, cols) int residues -> (nr, rows, cols).
 
     The generator is built on device (:func:`generator_matrix_modp_device`)
     and applied with the GF(p) matmul kernel path — one exact GEMM, no host
     round-trip.  Inputs must be integers in (-2^31, 2^31); they are reduced
-    into [0, p).
+    into [0, p).  ``y_chunks`` (k, rows) targets are encoded alongside for
+    the exact degree-2 gradient (:func:`coded_linear_gradient_modp`).
     """
     gf = _gf()
     x_chunks = jnp.asarray(x_chunks)
@@ -316,7 +321,15 @@ def encode_dataset_modp(spec: CodeSpec, x_chunks) -> CodedDatasetModp:
     g = generator_matrix_modp_device(spec)
     flat = x_chunks.reshape(spec.k, -1)
     x_t = gf.from_gf(gf.matmul_gf(g, flat)).reshape((spec.nr,) + x_chunks.shape[1:])
-    return CodedDatasetModp(spec=spec, x_tilde=x_t)
+    y_t = None
+    if y_chunks is not None:
+        y_chunks = jnp.asarray(y_chunks)
+        if y_chunks.shape[0] != spec.k:
+            raise ValueError(f"expected {spec.k} target chunks, got {y_chunks.shape[0]}")
+        y_t = gf.from_gf(
+            gf.matmul_gf(g, y_chunks.reshape(spec.k, -1))
+        ).reshape((spec.nr,) + y_chunks.shape[1:])
+    return CodedDatasetModp(spec=spec, x_tilde=x_t, y_tilde=y_t)
 
 
 class ModpDecodeCache:
@@ -402,6 +415,54 @@ def coded_matmul_exact(
     results = results.reshape(nr, rows, w2.shape[1])
     out, ok = _decode_on_time_modp(coded.spec, results, jnp.asarray(on_time))
     return (out[..., 0] if squeeze else out), ok
+
+
+def coded_linear_gradient_modp(
+    coded: CodedDatasetModp, w, on_time: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """EXACT least-squares gradient sum_j X_jᵀ(X_j w − y_j) over GF(p).
+
+    The finite-field twin of :func:`coded_linear_gradient_device` — the
+    degree-2 polynomial the paper's regression example actually evaluates,
+    executed end to end in Mersenne-31 arithmetic on device:
+
+      1. every worker shard evaluates its chunk gradient
+         X̃_vᵀ(X̃_v w − ỹ_v) with the ``repro.kernels.gf`` matmuls (one
+         batched GEMM over all nr chunks via ``bmm_gf``);
+      2. the master gathers the K* lexicographically-first on-time results
+         and decodes through the erasure-pattern decode matrix built on
+         device;
+      3. the per-chunk decoded gradients are summed mod p.
+
+    ``w`` is (cols,) or (cols, d) int residues; ``on_time`` is traced (feed
+    it :func:`chunk_on_time` masks from an engine rollout).  Returns
+    ``(gradient, ok)`` with ``gradient`` (cols,[ d]) int32 residues that are
+    bit-identical to the numpy ``matmul_modp``/``decode_matrix_modp``
+    pipeline whenever ``ok`` (asserted in tests); short rounds return
+    ``ok=False`` (jit cannot raise data-dependently).
+    """
+    gf = _gf()
+    spec = coded.spec
+    if coded.y_tilde is None:
+        raise ValueError("dataset was encoded without targets")
+    if spec.deg_f != 2:
+        raise ValueError("linear-model gradient is a degree-2 polynomial; spec.deg_f must be 2")
+    w = jnp.asarray(w)
+    squeeze = w.ndim == 1
+    w2 = w[:, None] if squeeze else w                      # (cols, d)
+    nr, rows, cols = coded.x_tilde.shape
+    d = w2.shape[1]
+    flat = coded.x_tilde.reshape(nr * rows, cols)
+    xw = gf.matmul_gf(flat, w2).reshape(nr, rows, d)       # uint32 residues
+    resid = gf.sub_gf(xw, gf.to_gf(coded.y_tilde)[..., None])   # (nr, rows, d)
+    xt = jnp.swapaxes(coded.x_tilde, 1, 2)                 # (nr, cols, rows)
+    grads = gf.from_gf(gf.bmm_gf(xt, gf.from_gf(resid)))   # (nr, cols, d)
+    per_chunk, ok = _decode_on_time_modp(spec, grads, jnp.asarray(on_time))
+    total = gf.to_gf(per_chunk[0])
+    for j in range(1, spec.k):                             # k static, exact sum
+        total = gf.add_gf(total, gf.to_gf(per_chunk[j]))
+    total = gf.from_gf(total)                              # (cols, d)
+    return (total[..., 0] if squeeze else total), ok
 
 
 def chunk_on_time(

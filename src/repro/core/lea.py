@@ -121,6 +121,47 @@ class LoadParams:
             raise ValueError("ell_g must exceed ell_b (otherwise allocation is trivial)")
 
 
+class PoolLoad(NamedTuple):
+    """TRACED load-allocation parameters + worker-pool validity mask.
+
+    The shape-polymorphic twin of :class:`LoadParams`: every leaf is a JAX
+    array, so one compiled computation serves a whole batch of heterogeneous
+    (K*, ell_g, ell_b, pool-size) rows.  ``mask`` is (..., n) bool over a
+    pool padded to a common width n — ``False`` workers are padding: they
+    receive no load, contribute nothing to the success count, and their
+    probability entries are ignored by :func:`allocate_masked`.
+
+    Leading axes of the scalar leaves broadcast against the probability
+    batch exactly like the static parameters did.
+    """
+
+    kstar: jnp.ndarray   # (...,) int32
+    ell_g: jnp.ndarray   # (...,) int32
+    ell_b: jnp.ndarray   # (...,) int32
+    mask: jnp.ndarray    # (..., n) bool — True = real worker
+
+    @property
+    def n(self) -> int:
+        """The PADDED pool width (static — it is a shape)."""
+        return self.mask.shape[-1]
+
+
+def pool_load(lp: LoadParams, n: int | None = None) -> PoolLoad:
+    """Lift a static :class:`LoadParams` to a (possibly padded) PoolLoad.
+
+    ``n`` >= lp.n pads the pool; the first lp.n slots are the real workers.
+    """
+    n = lp.n if n is None else n
+    if n < lp.n:
+        raise ValueError(f"cannot pad {lp.n} workers into width {n}")
+    return PoolLoad(
+        kstar=jnp.asarray(lp.kstar, jnp.int32),
+        ell_g=jnp.asarray(lp.ell_g, jnp.int32),
+        ell_b=jnp.asarray(lp.ell_b, jnp.int32),
+        mask=jnp.arange(n) < lp.n,
+    )
+
+
 def prefix_thresholds(lp: LoadParams) -> np.ndarray:
     """w(i~) = ceil((K* - (n - i~) * ell_b) / ell_g) for i~ = 1..n  (eq. 7/8).
 
@@ -132,8 +173,40 @@ def prefix_thresholds(lp: LoadParams) -> np.ndarray:
     return np.ceil((lp.kstar - (lp.n - i_tilde) * lp.ell_b) / lp.ell_g).astype(np.int32)
 
 
+def prefix_thresholds_traced(
+    kstar: jnp.ndarray,
+    ell_g: jnp.ndarray,
+    ell_b: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    n: int,
+) -> jnp.ndarray:
+    """TRACED w(i~) for i~ = 1..n over a pool of n_valid real workers.
+
+    The same eq. 7/8 formula as :func:`prefix_thresholds` with the VALID
+    pool size in place of the static n, evaluated in exact int32 arithmetic
+    (``ceil(a/g) = -((-a) // g)``, so it equals the numpy float64 ``ceil``
+    for every reachable magnitude).  Prefixes past the valid pool
+    (``i~ > n_valid`` — they would have to include padded workers) are set
+    to the infeasible sentinel n + 1 > i~, so the DP scores them exactly 0.
+
+    All of ``kstar``/``ell_g``/``ell_b``/``n_valid`` may carry leading batch
+    axes (broadcast against each other); the result gains a trailing (n,).
+    """
+    kstar = jnp.asarray(kstar, jnp.int32)[..., None]
+    ell_g = jnp.asarray(ell_g, jnp.int32)[..., None]
+    ell_b = jnp.asarray(ell_b, jnp.int32)[..., None]
+    n_valid = jnp.asarray(n_valid, jnp.int32)[..., None]
+    i_tilde = jnp.arange(1, n + 1, dtype=jnp.int32)
+    num = kstar - (n_valid - i_tilde) * ell_b
+    w = -((-num) // ell_g)                          # exact integer ceil-div
+    return jnp.where(i_tilde > n_valid, jnp.int32(n + 1), w)
+
+
 def success_prob_all_prefixes(
-    p_good_sorted: jnp.ndarray, lp: LoadParams, *, impl: str | None = None
+    p_good_sorted: jnp.ndarray,
+    lp: "LoadParams | PoolLoad",
+    *,
+    impl: str | None = None,
 ) -> jnp.ndarray:
     """P̂(i~) for every i~ in 1..n, given p_good sorted descending along the
     last axis.  (..., n) in -> (..., n) out (any leading batch axes).
@@ -142,9 +215,21 @@ def success_prob_all_prefixes(
     :func:`prefix_thresholds`.  One O(n^2) DP over the whole batch, routed
     through ``repro.kernels.poisson_binomial`` (``impl``: "pallas" / "ref" /
     None = auto — Pallas on TPU, batched ``lax.scan`` DP elsewhere).
+
+    ``lp`` may be a TRACED :class:`PoolLoad` instead of a static
+    :class:`LoadParams`: the thresholds then come from
+    :func:`prefix_thresholds_traced` (per-row K*/ell, prefixes past the
+    valid pool infeasible) and one compiled DP serves every row.  The
+    caller is responsible for having sorted padded entries to the tail with
+    probability 0 (:func:`allocate_masked` does).
     """
     from repro.kernels.poisson_binomial import success_tails
 
+    if isinstance(lp, PoolLoad):
+        n = p_good_sorted.shape[-1]
+        n_valid = jnp.sum(lp.mask.astype(jnp.int32), axis=-1)
+        w = prefix_thresholds_traced(lp.kstar, lp.ell_g, lp.ell_b, n_valid, n)
+        return success_tails(p_good_sorted, w, impl=impl)
     return success_tails(p_good_sorted, prefix_thresholds(lp), impl=impl)
 
 
@@ -202,6 +287,72 @@ def allocate(
     i_star = jnp.argmax(probs, axis=-1) + 1                     # in 1..n
     loads = jnp.where(ranks < i_star[..., None], lp.ell_g, lp.ell_b).astype(jnp.int32)
     return loads, i_star
+
+
+def allocate_masked(
+    p_good: jnp.ndarray, pool: PoolLoad, *, impl: str | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shape-polymorphic LEA load assignment over a mask-padded pool.
+
+    The traced twin of :func:`allocate`: ``pool`` carries per-row TRACED
+    (K*, ell_g, ell_b) and a (..., n) validity mask, so ONE compiled call
+    serves heterogeneous thresholds and pool sizes.  Masked (padding)
+    workers are demoted below every real probability before the rank
+    elimination, contribute an identity term (p = 0) to the prefix DP, and
+    receive load 0 in the output.
+
+    Returns ``(loads, i_star, feasible)``:
+
+      * ``loads`` (..., n) int32 — the two-level assignment in original
+        worker order; 0 at masked slots;
+      * ``i_star`` (...,) — argmax prefix (1-based, over valid prefixes);
+      * ``feasible`` — False where NO prefix of the valid pool can reach K*
+        (``kstar > n_valid * ell_g``): such rows can never succeed and the
+        flag makes the failure explicit rather than implicit in the scoring
+        (an all-masked row is the degenerate case).  The flag broadcasts
+        over the probability batch axes.
+
+    On a full-width pool (all-True mask) every masking construct is a
+    value-preserving select, so ``loads``/``i_star`` are bit-identical to
+    :func:`allocate` with the equivalent static :class:`LoadParams`
+    whenever both route through the ``ref`` DP — the CPU/GPU default, and
+    the code path the property tests pin.  On TPU the two paths lower to
+    different Pallas kernels (baked vs traced thresholds), which agree to
+    float32 round-off only (see ``poisson_binomial.kernel``); an argmax
+    within an ulp of a tie may then allocate differently.
+    """
+    mask = pool.mask
+    n = p_good.shape[-1]
+    if mask.shape[-1] != n:
+        raise ValueError(f"mask width {mask.shape[-1]} != pool width {n}")
+    n_valid = jnp.sum(mask.astype(jnp.int32), axis=-1)          # (...,)
+    # demote padding below any real probability (p_good lives in [0, 1])
+    p_eff = jnp.where(mask, p_good, -1.0)
+    if n <= _PAIRWISE_RANK_MAX_N:
+        ranks = _ranks_descending(p_eff)
+        p_sorted = _take_by_rank(p_eff, ranks)
+    else:
+        order = jnp.argsort(-p_eff, axis=-1)                    # descending
+        p_sorted = jnp.take_along_axis(p_eff, order, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)                     # rank per worker
+    # padding sorted to the tail: replace its sentinel with the identity
+    # Bernoulli p = 0 so the DP's pmf is untouched past the valid prefix
+    pos = jnp.arange(n)
+    p_dp = jnp.where(pos < n_valid[..., None], p_sorted, 0.0)
+    w = prefix_thresholds_traced(
+        pool.kstar, pool.ell_g, pool.ell_b, n_valid, n
+    )                                                           # (..., n)
+    from repro.kernels.poisson_binomial import success_tails
+
+    probs = success_tails(p_dp, w, impl=impl)                   # (..., n)
+    i_star = jnp.argmax(probs, axis=-1) + 1                     # in 1..n
+    i_tilde = pos + 1
+    feasible = jnp.any((w <= i_tilde) & (i_tilde <= n_valid[..., None]), axis=-1)
+    loads = jnp.where(
+        ranks < i_star[..., None], pool.ell_g[..., None], pool.ell_b[..., None]
+    )
+    loads = jnp.where(mask, loads, 0).astype(jnp.int32)
+    return loads, i_star, jnp.broadcast_to(feasible, i_star.shape)
 
 
 def success_prob_bruteforce(p_good_sorted: jnp.ndarray, lp: LoadParams, i_tilde: int) -> float:

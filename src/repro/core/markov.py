@@ -11,6 +11,15 @@ transition INTO round t (t >= 1) and row 0 the initial distribution.  The
 associative-scan sampler composes per-round transition maps anyway, so a
 time-varying chain is the same parallel prefix with per-row thresholds;
 stationary (n,) inputs take the exact original code path, bit-for-bit.
+
+Mask-padded pools (the shape-polymorphic engine): the samplers accept an
+optional ``worker_mask`` (n,) bool.  Masked (padding) workers are FROZEN —
+pinned to the good state every round — so a padded pool is simulated at its
+padded width with deterministic, inert extras.  The mask does not change
+the PRNG geometry: draws are shaped (n,) over the padded width, exactly as
+an unpadded width-n pool draws (``worker_mask=None`` and an all-True mask
+are value-identical; a row padded from a NARROWER pool keeps the padded
+width's stream — pool width has always been part of the stream geometry).
 """
 
 from __future__ import annotations
@@ -26,15 +35,24 @@ def stationary_good_prob(p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
     return (1.0 - p_bb) / (2.0 - p_gg - p_bb)
 
 
-def initial_states(key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray) -> jnp.ndarray:
+def initial_states(
+    key: jax.Array,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    worker_mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """Sample worker states (n,) int32 from the stationary distribution.
 
-    A (rounds, n) schedule initializes from its round-0 chain.
+    A (rounds, n) schedule initializes from its round-0 chain.  Masked
+    workers (``worker_mask`` False) are pinned to the good state.
     """
     if p_gg.ndim == 2:
         p_gg, p_bb = p_gg[0], p_bb[0]
     pi_g = stationary_good_prob(p_gg, p_bb)
-    return (jax.random.uniform(key, p_gg.shape) < pi_g).astype(jnp.int32)
+    s0 = (jax.random.uniform(key, p_gg.shape) < pi_g).astype(jnp.int32)
+    if worker_mask is None:
+        return s0
+    return jnp.where(worker_mask, s0, 1)
 
 
 def step_states(
@@ -49,13 +67,18 @@ def step_states(
 
 @partial(jax.jit, static_argnames=("rounds",))
 def sample_trajectory_scan(
-    key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int
+    key: jax.Array,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    worker_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Sequential reference: (rounds, n) trajectory via ``lax.scan``.
 
     Kept as the oracle for :func:`sample_trajectory` (the associative-scan
     path), which must reproduce it bit-for-bit.  Accepts a (rounds, n)
-    time-varying schedule like the parallel sampler.
+    time-varying schedule like the parallel sampler, and an optional
+    ``worker_mask`` freezing masked workers in the good state.
     """
     k0, k1 = jax.random.split(key)
     s0 = initial_states(k0, p_gg, p_bb)
@@ -68,21 +91,32 @@ def sample_trajectory_scan(
             return s, s
 
         _, tail = jax.lax.scan(body_tv, s0, (keys, p_gg[1:], p_bb[1:]))
-        return jnp.concatenate([s0[None], tail], axis=0)
+        traj = jnp.concatenate([s0[None], tail], axis=0)
+    else:
+        def body(carry, k):
+            s = step_states(k, carry, p_gg, p_bb)
+            return s, s
 
-    def body(carry, k):
-        s = step_states(k, carry, p_gg, p_bb)
-        return s, s
-
-    _, tail = jax.lax.scan(body, s0, keys)
-    return jnp.concatenate([s0[None], tail], axis=0)
+        _, tail = jax.lax.scan(body, s0, keys)
+        traj = jnp.concatenate([s0[None], tail], axis=0)
+    if worker_mask is None:
+        return traj
+    return jnp.where(worker_mask, traj, 1)
 
 
 @partial(jax.jit, static_argnames=("rounds",))
 def sample_trajectory(
-    key: jax.Array, p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int
+    key: jax.Array,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    worker_mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """(rounds, n) int32 state trajectory, initial state from stationary dist.
+
+    ``worker_mask`` (n,) bool freezes masked workers in the good state
+    (``None`` and an all-True mask are value-identical; the mask never
+    changes the PRNG draw geometry — see the module docstring).
 
     Parallel-prefix formulation: round t's transition is a map {0,1} -> {0,1}
     fully determined by its uniform draw ``u_t`` —
@@ -102,7 +136,8 @@ def sample_trajectory(
     k0, k1 = jax.random.split(key)
     s0 = initial_states(k0, p_gg, p_bb)
     if rounds == 1:
-        return s0[None]
+        traj = s0[None]
+        return traj if worker_mask is None else jnp.where(worker_mask, traj, 1)
 
     # per-step thresholds: a (rounds, n) schedule contributes rows 1..M-1
     # (row t is the chain in force for the transition into round t); the
@@ -124,7 +159,10 @@ def sample_trajectory(
 
     pref0, pref1 = jax.lax.associative_scan(compose, (out0, out1), axis=0)
     tail = jnp.where(s0[None] == 1, pref1, pref0)
-    return jnp.concatenate([s0[None], tail], axis=0)
+    traj = jnp.concatenate([s0[None], tail], axis=0)
+    if worker_mask is None:
+        return traj
+    return jnp.where(worker_mask, traj, 1)
 
 
 def speeds_from_states(states: jnp.ndarray, mu_g: float, mu_b: float) -> jnp.ndarray:

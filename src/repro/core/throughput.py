@@ -74,6 +74,29 @@ time-varying chains cost nothing extra).  Static strategies keep drawing
 from the round-0 chain's stationary distribution (there is no global one
 under drift); the genie tracks the true current chain.  Stationary inputs
 take the exact pre-existing code paths, bit-for-bit.
+
+Shape-polymorphic engine (traced K*/ell + mask-padded pools)
+------------------------------------------------------------
+:func:`simulate_strategies_pool` / :func:`sweep_pool` are the traced twins
+of :func:`simulate_strategies` / :func:`sweep`: the load parameters arrive
+as a :class:`repro.core.lea.PoolLoad` — traced ``kstar``/``ell_g``/
+``ell_b`` scalars plus an (n,) worker-validity mask — so ONE compiled
+computation serves a whole batch of heterogeneous-K*, heterogeneous-load,
+heterogeneous-pool-size rows (the ``repro.sweeps`` executor's grouping
+signature shrinks to ``(rounds, strategies)``).  Masked workers are frozen
+in the good state by the trajectory sampler, demoted below every real
+worker by the masked allocator, assigned load 0 and thereby excluded from
+the received-evaluations count; rows whose valid pool can never reach K*
+(``kstar > n_valid * ell_g``) carry an explicit False feasibility flag.
+The load-bearing invariant: a full-width row (all-True mask) takes
+value-preserving selects only, so its results are bit-identical to the
+static-``LoadParams`` path on the same PRNG key (property-tested per
+layer).  Scope: the invariant is exact wherever both paths run the ``ref``
+Poisson-binomial DP — the CPU/GPU default and the CI configuration; on TPU
+the static and traced paths lower to different Pallas kernels that agree
+to float32 round-off only (see ``repro.kernels.poisson_binomial``).  A row
+padded from a NARROWER pool keeps the padded width's PRNG stream — pool
+width has always been part of the stream geometry.
 """
 
 from __future__ import annotations
@@ -142,8 +165,15 @@ def _oracle_p_good_trajectory(
     return oracle_p_good(states, p_gg, p_bb, pi_g)
 
 
+def _load_fields(load):
+    """(kstar, ell_g, ell_b, mask-or-None) of a LoadParams OR PoolLoad."""
+    if isinstance(load, lea_mod.PoolLoad):
+        return load.kstar, load.ell_g, load.ell_b, load.mask
+    return load.kstar, load.ell_g, load.ell_b, None
+
+
 def _static_loads_batch(
-    keys: jnp.ndarray, pi_g: jnp.ndarray, lp: LoadParams
+    keys: jnp.ndarray, pi_g: jnp.ndarray, kstar, ell_g, ell_b, mask=None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Vectorised rejection resampling: one iid two-level draw chain per round.
 
@@ -151,17 +181,22 @@ def _static_loads_batch(
     chain until its total load reaches K* (at most 128 tries), exactly the
     per-round semantics of the seed's scalar while_loop — rounds that finish
     early simply ignore later (masked) draws, so per-round results are
-    bit-identical.  Returns ``(loads (M, n), feasible (M,))``; ``feasible`` is
-    False iff a round exhausted the cap with total load < K* and must be
-    scored as an explicit failure.
+    bit-identical.  ``kstar``/``ell_g``/``ell_b`` may be static ints or
+    traced scalars; ``mask`` (n,) bool excludes padded workers (their loads
+    are zeroed and never count toward K*).  Returns ``(loads (M, n),
+    feasible (M,))``; ``feasible`` is False iff a round exhausted the cap
+    with total load < K* and must be scored as an explicit failure.
     """
 
     def draw_one(k):
         k2, sub = jax.random.split(k)
         return k2, jax.random.uniform(sub, pi_g.shape)
 
+    def masked(loads):
+        return loads if mask is None else jnp.where(mask, loads, 0)
+
     def unfinished(loads):
-        return jnp.sum(loads, axis=-1) < lp.kstar
+        return jnp.sum(masked(loads), axis=-1) < kstar
 
     def cond(carry):
         i, _, loads = carry
@@ -170,14 +205,15 @@ def _static_loads_batch(
     def body(carry):
         i, ks, loads = carry
         ks2, us = jax.vmap(draw_one)(ks)
-        new = jnp.where(us < pi_g, lp.ell_g, lp.ell_b).astype(jnp.int32)
+        new = jnp.where(us < pi_g, ell_g, ell_b).astype(jnp.int32)
         redo = unfinished(loads)[:, None]
         return (i + 1, ks2, jnp.where(redo, new, loads))
 
     rounds = keys.shape[0]
     init = (jnp.int32(0), keys, jnp.zeros((rounds,) + pi_g.shape, jnp.int32))
     _, _, loads = jax.lax.while_loop(cond, body, init)
-    return loads, jnp.sum(loads, axis=-1) >= lp.kstar
+    loads = masked(loads)
+    return loads, jnp.sum(loads, axis=-1) >= kstar
 
 
 def _p_good_rows(
@@ -221,7 +257,7 @@ def _rollout_block(
     round_keys: jnp.ndarray,   # (m, 2)
     p_alloc: jnp.ndarray,      # (A, m, n) predicted p_good per allocator strat
     pi_g: jnp.ndarray,         # (n,)
-    lp: LoadParams,
+    load,                      # LoadParams (static) or lea.PoolLoad (traced)
     strategies: tuple[str, ...],
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Loads + feasibility for one block of rounds: (S, m, n), (S, m).
@@ -229,29 +265,44 @@ def _rollout_block(
     Per-round work only (allocator DP rows, static draw chains, scoring are
     all row-independent), so any partition of the M rounds into blocks yields
     bit-identical results — this is what makes the ``round_chunk`` path exact.
+
+    ``load`` selects the engine flavour: a static :class:`LoadParams` takes
+    the classic paths verbatim; a traced :class:`~repro.core.lea.PoolLoad`
+    routes allocator strategies through :func:`lea.allocate_masked` (per-row
+    thresholds, masked pool, explicit feasibility) and zeroes masked
+    workers' static-draw loads.
     """
     m = states.shape[0]
+    kstar, ell_g, ell_b, mask = _load_fields(load)
     alloc_names = allocator_strategies(strategies)
     loads_by: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
     if alloc_names:
-        loads_all, _ = lea_mod.allocate(p_alloc, lp)       # one (A*m, n) DP
-        always = jnp.ones((m,), bool)
-        for j, s in enumerate(alloc_names):
-            loads_by[s] = (loads_all[j], always)
+        if isinstance(load, lea_mod.PoolLoad):
+            loads_all, _, feas = lea_mod.allocate_masked(p_alloc, load)
+            feas_rows = jnp.broadcast_to(feas, loads_all.shape[:2])  # (A, m)
+            for j, s in enumerate(alloc_names):
+                loads_by[s] = (loads_all[j], feas_rows[j])
+        else:
+            loads_all, _ = lea_mod.allocate(p_alloc, load)  # one (A*m, n) DP
+            always = jnp.ones((m,), bool)
+            for j, s in enumerate(alloc_names):
+                loads_by[s] = (loads_all[j], always)
 
     # -- static draws (same round key per strategy, as in the seed) --
     if "static" in strategies:
-        loads_by["static"] = _static_loads_batch(round_keys, pi_g, lp)
+        loads_by["static"] = _static_loads_batch(
+            round_keys, pi_g, kstar, ell_g, ell_b, mask
+        )
     if "static_equal" in strategies:
         loads_by["static_equal"] = _static_loads_batch(
-            round_keys, jnp.full_like(pi_g, 0.5), lp
+            round_keys, jnp.full_like(pi_g, 0.5), kstar, ell_g, ell_b, mask
         )
     if "static_single" in strategies:
         draw = jax.vmap(lambda k: jax.random.uniform(k, pi_g.shape))(round_keys)
-        loads_by["static_single"] = (
-            jnp.where(draw < 0.5, lp.ell_g, lp.ell_b).astype(jnp.int32),
-            jnp.ones((m,), bool),
-        )
+        single = jnp.where(draw < 0.5, ell_g, ell_b).astype(jnp.int32)
+        if mask is not None:
+            single = jnp.where(mask, single, 0)
+        loads_by["static_single"] = (single, jnp.ones((m,), bool))
 
     loads_mat = jnp.stack([loads_by[s][0] for s in strategies])    # (S, m, n)
     feasible = jnp.stack([loads_by[s][1] for s in strategies])     # (S, m)
@@ -292,6 +343,77 @@ def _check_chain_shapes(p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int) -> No
         )
 
 
+def _simulate_impl(
+    key: jax.Array,
+    load,                      # LoadParams (static) or lea.PoolLoad (traced)
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...],
+    round_chunk: int | None,
+) -> jnp.ndarray:
+    """Shared engine body behind :func:`simulate_strategies` (static
+    ``LoadParams``) and :func:`simulate_strategies_pool` (traced
+    ``PoolLoad``).  The two flavours differ only in the value-preserving
+    masking constructs the PoolLoad branch threads through the layers."""
+    _check_strategies(strategies)
+    _check_chain_shapes(p_gg, p_bb, rounds)
+    masked = isinstance(load, lea_mod.PoolLoad)
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(
+        k_traj, p_gg, p_bb, rounds,
+        worker_mask=load.mask if masked else None,
+    )                                                              # (M, n)
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
+    round_keys = jax.random.split(k_rounds, rounds)
+    alloc_names = allocator_strategies(strategies)
+    if alloc_names:
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
+    else:  # keep the block signature uniform; zero-size axis costs nothing
+        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
+    kstar = load.kstar
+
+    def block(states_b, keys_b, p_alloc_b):
+        loads_mat, feasible = _rollout_block(
+            states_b, keys_b, p_alloc_b, pi_g, load, strategies
+        )
+        return _score_block(
+            loads_mat, feasible, states_b, mu_g, mu_b, deadline, kstar
+        )
+
+    if round_chunk is None or round_chunk >= rounds:
+        return block(states, round_keys, p_alloc)
+
+    if round_chunk <= 0:
+        raise ValueError("round_chunk must be positive")
+    pad = (-rounds) % round_chunk
+    n_blocks = (rounds + pad) // round_chunk
+    # pad with edge rounds: real rows are untouched (blocks are independent)
+    # and the pad rows behave like ordinary rounds, so no masked-lane hazards.
+    states_p = jnp.concatenate([states, states[-pad:]]) if pad else states
+    keys_p = jnp.concatenate([round_keys, round_keys[-pad:]]) if pad else round_keys
+    p_alloc_p = (
+        jnp.concatenate([p_alloc, p_alloc[:, -pad:]], axis=1) if pad else p_alloc
+    )
+    succ = jax.lax.map(
+        lambda xs: block(*xs),
+        (
+            states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
+            keys_p.reshape((n_blocks, round_chunk) + round_keys.shape[1:]),
+            jnp.moveaxis(
+                p_alloc_p.reshape(
+                    (p_alloc.shape[0], n_blocks, round_chunk, states.shape[1])
+                ),
+                0, 1,
+            ),
+        ),
+    )  # (n_blocks, round_chunk, S)
+    return succ.reshape((n_blocks * round_chunk,) + succ.shape[2:])[:rounds]
+
+
 @partial(jax.jit, static_argnames=("strategies", "lp", "rounds", "round_chunk"))
 def simulate_strategies(
     key: jax.Array,
@@ -323,54 +445,41 @@ def simulate_strategies(
     all rounds.  Every quantity in a block depends on its own rounds only, so
     chunked results are bit-identical to the unchunked path.
     """
-    _check_strategies(strategies)
-    _check_chain_shapes(p_gg, p_bb, rounds)
-    k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)  # (M, n)
-    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
-    round_keys = jax.random.split(k_rounds, rounds)
-    alloc_names = allocator_strategies(strategies)
-    if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
-    else:  # keep the block signature uniform; zero-size axis costs nothing
-        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
-
-    def block(states_b, keys_b, p_alloc_b):
-        loads_mat, feasible = _rollout_block(
-            states_b, keys_b, p_alloc_b, pi_g, lp, strategies
-        )
-        return _score_block(
-            loads_mat, feasible, states_b, mu_g, mu_b, deadline, lp.kstar
-        )
-
-    if round_chunk is None or round_chunk >= rounds:
-        return block(states, round_keys, p_alloc)
-
-    if round_chunk <= 0:
-        raise ValueError("round_chunk must be positive")
-    pad = (-rounds) % round_chunk
-    n_blocks = (rounds + pad) // round_chunk
-    # pad with edge rounds: real rows are untouched (blocks are independent)
-    # and the pad rows behave like ordinary rounds, so no masked-lane hazards.
-    states_p = jnp.concatenate([states, states[-pad:]]) if pad else states
-    keys_p = jnp.concatenate([round_keys, round_keys[-pad:]]) if pad else round_keys
-    p_alloc_p = (
-        jnp.concatenate([p_alloc, p_alloc[:, -pad:]], axis=1) if pad else p_alloc
+    return _simulate_impl(
+        key, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies,
+        round_chunk,
     )
-    succ = jax.lax.map(
-        lambda xs: block(*xs),
-        (
-            states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
-            keys_p.reshape((n_blocks, round_chunk) + round_keys.shape[1:]),
-            jnp.moveaxis(
-                p_alloc_p.reshape(
-                    (p_alloc.shape[0], n_blocks, round_chunk, states.shape[1])
-                ),
-                0, 1,
-            ),
-        ),
-    )  # (n_blocks, round_chunk, S)
-    return succ.reshape((n_blocks * round_chunk,) + succ.shape[2:])[:rounds]
+
+
+@partial(jax.jit, static_argnames=("strategies", "rounds", "round_chunk"))
+def simulate_strategies_pool(
+    key: jax.Array,
+    pool,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+    round_chunk: int | None = None,
+) -> jnp.ndarray:
+    """:func:`simulate_strategies` with TRACED load parameters.
+
+    ``pool`` is a :class:`repro.core.lea.PoolLoad`: kstar/ell_g/ell_b are
+    traced scalars and ``pool.mask`` (n,) marks real workers in a pool
+    padded to width n — so one compile serves every (K*, ell, pool-size)
+    combination at a given width (the whole point of the shape-polymorphic
+    engine).  A full-width pool (all-True mask) is bit-identical to
+    :func:`simulate_strategies` with the equivalent static ``LoadParams``
+    on the same key (exact on the ref-DP path — see the module docstring
+    for the TPU-kernel caveat, the padded-row PRNG convention and the
+    explicit infeasibility flag).
+    """
+    return _simulate_impl(
+        key, pool, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies,
+        round_chunk,
+    )
 
 
 @partial(jax.jit, static_argnames=("strategies", "lp", "rounds"))
@@ -486,6 +595,41 @@ def sweep(
     return jax.vmap(
         lambda k, pg, pb, mg, mb, d: fn(k, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d)
     )(keys, p_gg, p_bb, mu_g, mu_b, deadline)
+
+
+def sweep_pool(
+    keys: jax.Array,
+    pool,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static", "oracle"),
+    round_chunk: int | None = None,
+) -> jnp.ndarray:
+    """:func:`sweep` with TRACED per-row load parameters.
+
+    ``pool`` is a :class:`repro.core.lea.PoolLoad` whose leaves carry a
+    leading (B,) batch axis (``mask`` is (B, n)): every row may have its own
+    K*, loads and valid pool size, and the whole heterogeneous batch still
+    compiles to ONE XLA computation — the fused path the ``repro.sweeps``
+    executor runs.  Full-width rows are bit-identical to :func:`sweep` with
+    the equivalent static ``LoadParams`` on the same keys.
+    """
+    strategies = tuple(strategies)   # lists would fail jit's static-arg hashing
+    b = p_gg.shape[0]
+    mu_g = jnp.broadcast_to(jnp.asarray(mu_g, jnp.float32), (b,))
+    mu_b = jnp.broadcast_to(jnp.asarray(mu_b, jnp.float32), (b,))
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (b,))
+    fn = partial(simulate_strategies_pool, rounds=rounds, strategies=strategies,
+                 round_chunk=round_chunk)
+    return jax.vmap(
+        lambda k, pl, pg, pb, mg, mb, d: fn(
+            k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
+        )
+    )(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline)
 
 
 def timely_throughput(successes: jnp.ndarray) -> float:

@@ -2,15 +2,12 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.dispatch import default_interpret
 
 from .kernel import coded_gradient_pallas
 from .ref import coded_gradient_ref
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def coded_gradient(
@@ -26,9 +23,9 @@ def coded_gradient(
         y_tilde = y_tilde[..., None]
         w = w[:, None]
         squeeze = True
-    if interpret is None:
-        interpret = _default_interpret()
-    out = coded_gradient_pallas(x_tilde, y_tilde, w, interpret=interpret)
+    out = coded_gradient_pallas(
+        x_tilde, y_tilde, w, interpret=default_interpret(interpret)
+    )
     return out[..., 0] if squeeze else out
 
 

@@ -1,0 +1,85 @@
+"""Shared impl/interpret dispatch for the Pallas kernel packages.
+
+Every kernel package (``poisson_binomial``, ``coded_gradient``,
+``flash_attention``, ``gf``, ``lagrange_encode``) used to carry its own copy
+of the same two decisions:
+
+  * which implementation to run by default — the Pallas kernel on TPU, the
+    XLA path (``ref`` / ``dot``) elsewhere;
+  * whether ``pallas_call`` should run in ``interpret=True`` — yes anywhere
+    but a real TPU, so CPU CI exercises the kernels through the Pallas
+    interpreter.
+
+This module is the single copy.  Two environment variables override the
+defaults globally (useful for CI matrices and for flushing out
+impl-divergence bugs without touching call sites):
+
+  * ``REPRO_KERNEL_IMPL``      — force the impl name for every dispatcher
+    that supports it (a dispatcher whose ``allowed`` set does not contain
+    the forced name raises, loudly, rather than silently falling back);
+  * ``REPRO_KERNEL_INTERPRET`` — "1"/"true" forces ``interpret=True``,
+    "0"/"false" forces ``interpret=False``.
+
+Explicit keyword arguments at a call site always win over the environment.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_IMPL = "REPRO_KERNEL_IMPL"
+ENV_INTERPRET = "REPRO_KERNEL_INTERPRET"
+
+_TRUTHY = ("1", "true", "True", "yes")
+_FALSY = ("0", "false", "False", "no")
+
+
+def on_tpu() -> bool:
+    """Is the default JAX backend a real TPU?"""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret=`` argument: explicit > env > backend default.
+
+    The backend default is ``True`` everywhere but TPU — the Pallas kernels
+    are written for the TPU lowering and run through the interpreter on
+    CPU/GPU (tests, CI containers).
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get(ENV_INTERPRET)
+    if env is not None:
+        if env in _TRUTHY:
+            return True
+        if env in _FALSY:
+            return False
+        raise ValueError(f"{ENV_INTERPRET}={env!r}: expected a boolean flag")
+    return not on_tpu()
+
+
+def resolve_impl(
+    impl: str | None,
+    *,
+    allowed: tuple[str, ...],
+    device_impl: str = "pallas",
+    host_impl: str = "ref",
+) -> str:
+    """Resolve an ``impl=`` argument: explicit > env > backend default.
+
+    ``allowed`` is the dispatcher's implementation set; an explicit or
+    env-forced name outside it raises ``ValueError`` (never a silent
+    fallback).  The backend default is ``device_impl`` on TPU and
+    ``host_impl`` elsewhere.
+    """
+    if impl is None:
+        impl = os.environ.get(ENV_IMPL) or (device_impl if on_tpu() else host_impl)
+    if impl not in allowed:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {allowed}")
+    return impl
+
+
+__all__ = ["ENV_IMPL", "ENV_INTERPRET", "default_interpret", "on_tpu",
+           "resolve_impl"]

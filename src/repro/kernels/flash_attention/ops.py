@@ -2,15 +2,12 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.dispatch import default_interpret
 
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def flash_attention(
@@ -18,10 +15,9 @@ def flash_attention(
     *, causal: bool = True, window: int | None = None,
     scale: float | None = None, interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = _default_interpret()
     return flash_attention_pallas(
-        q, k, v, causal=causal, window=window, scale=scale, interpret=interpret
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=default_interpret(interpret),
     )
 
 

@@ -1,5 +1,6 @@
 from .ops import (  # noqa: F401
     FIELD_P,
+    bmm_gf,
     lagrange_basis_gf,
     matmul_gf,
     matmul_gf_dot,

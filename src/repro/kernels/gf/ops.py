@@ -35,6 +35,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import default_interpret, resolve_impl
+
 from .kernel import matmul_gf_pallas
 from .ref import (FIELD_P, add_gf, lagrange_basis_gf_ref, matmul_gf_ref,
                   rot_gf, to_gf)
@@ -44,9 +46,7 @@ from .ref import (FIELD_P, add_gf, lagrange_basis_gf_ref, matmul_gf_ref,
 _DOT_CHUNK = 256
 _LIMBS = 4          # 31 bits as 8+8+8+7
 
-
-def _default_impl() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "dot"
+_IMPLS = ("pallas", "dot", "ref")
 
 
 def _limbs_f32(x: jnp.ndarray) -> jnp.ndarray:
@@ -102,20 +102,51 @@ def matmul_gf(
     b = to_gf(b)
     if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
         raise ValueError(f"matmul_gf: bad shapes {a.shape} @ {b.shape}")
-    if impl is None:
-        impl = _default_impl()
+    impl = resolve_impl(impl, allowed=_IMPLS, host_impl="dot")
     if impl == "ref":
         return _matmul_gf_ref_jit(a, b)
     if impl == "dot":
         return matmul_gf_dot(a, b)
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return matmul_gf_pallas(a, b, interpret=interpret)
+    return matmul_gf_pallas(a, b, interpret=default_interpret(interpret))
 
 
 _matmul_gf_ref_jit = jax.jit(matmul_gf_ref)
+
+
+def bmm_gf(
+    a,
+    b,
+    *,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Exact batched (..., m, c) @ (..., c, n) mod p — vmapped 2-D matmuls.
+
+    Leading axes must match exactly (no broadcasting — the coded-computing
+    callers batch over worker chunks, which both operands carry).  Same impl
+    set as :func:`matmul_gf`; residues are exact, so all impls agree bit for
+    bit.  2-D inputs fall through to :func:`matmul_gf` unchanged.
+    """
+    a = to_gf(a)
+    b = to_gf(b)
+    if a.ndim < 2 or b.ndim < 2 or a.ndim != b.ndim:
+        raise ValueError(f"bmm_gf: bad ranks {a.shape} @ {b.shape}")
+    if a.shape[:-2] != b.shape[:-2] or a.shape[-1] != b.shape[-2]:
+        raise ValueError(f"bmm_gf: bad shapes {a.shape} @ {b.shape}")
+    if a.ndim == 2:
+        return matmul_gf(a, b, impl=impl, interpret=interpret)
+    impl = resolve_impl(impl, allowed=_IMPLS, host_impl="dot")
+    if impl == "ref":
+        core = _matmul_gf_ref_jit
+    elif impl == "dot":
+        core = matmul_gf_dot
+    else:
+        core = partial(matmul_gf_pallas, interpret=default_interpret(interpret))
+    lead = a.shape[:-2]
+    a3 = a.reshape((-1,) + a.shape[-2:])
+    b3 = b.reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(core)(a3, b3)
+    return out.reshape(lead + out.shape[-2:])
 
 
 @jax.jit
@@ -131,6 +162,6 @@ def lagrange_basis_gf(eval_pts, nodes) -> jnp.ndarray:
 
 
 __all__ = [
-    "FIELD_P", "lagrange_basis_gf", "matmul_gf", "matmul_gf_dot",
+    "FIELD_P", "bmm_gf", "lagrange_basis_gf", "matmul_gf", "matmul_gf_dot",
     "matmul_gf_pallas", "matmul_gf_ref",
 ]

@@ -6,21 +6,16 @@ set ``interpret=False`` (the default flips on backend detection).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.dispatch import default_interpret
 
 from .kernel import encode_matrix_pallas
 from .ref import encode_ref
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def encode_matrix(g: jnp.ndarray, x2d: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
-    if interpret is None:
-        interpret = _default_interpret()
-    return encode_matrix_pallas(g, x2d, interpret=interpret)
+    return encode_matrix_pallas(g, x2d, interpret=default_interpret(interpret))
 
 
 def encode(g: jnp.ndarray, x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:

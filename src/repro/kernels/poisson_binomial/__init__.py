@@ -1,1 +1,6 @@
-from .ops import success_tails, success_tails_pallas, success_tails_ref  # noqa: F401
+from .ops import (  # noqa: F401
+    success_tails,
+    success_tails_pallas,
+    success_tails_pallas_w,
+    success_tails_ref,
+)

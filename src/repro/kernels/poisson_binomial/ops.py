@@ -3,15 +3,18 @@
 ``success_tails`` is the single entry point the allocator uses:
 
   * ``impl="pallas"`` — the VMEM-tiled batch kernel (TPU; ``interpret=True``
-    on CPU for testing).  Requires concrete thresholds (they are baked into
-    the kernel as static constants).
+    on CPU for testing).  Static (tuple / numpy) thresholds are baked into
+    the kernel as trace-time constants; traced threshold ARRAYS ride a VMEM
+    tile through the shape-polymorphic twin kernel instead.
   * ``impl="ref"``    — the seed ``lax.scan`` DP, batched over leading axes.
-    This is the XLA path used on CPU/GPU and the oracle the kernel is tested
-    against.
-  * ``impl=None``     — pallas on TPU, ref elsewhere.
+    This is the XLA path used on CPU/GPU and the oracle the kernels are
+    tested against.  Thresholds may be static or traced ((..., n)-broadcast).
+  * ``impl=None``     — pallas on TPU, ref elsewhere (overridable via
+    ``REPRO_KERNEL_IMPL`` / ``REPRO_KERNEL_INTERPRET`` — see
+    :mod:`repro.kernels.dispatch`).
 
 Any leading batch shape is accepted; rows are flattened to (B, n) for the
-kernel and reshaped back.
+kernels and reshaped back.
 """
 
 from __future__ import annotations
@@ -20,12 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import success_tails_pallas
+from repro.kernels.dispatch import default_interpret, resolve_impl
+
+from .kernel import success_tails_pallas, success_tails_pallas_w
 from .ref import success_tails_ref
-
-
-def _default_impl() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def success_tails(
@@ -35,21 +36,31 @@ def success_tails(
     impl: str | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(..., n) descending-sorted probabilities -> (..., n) prefix tails."""
-    if impl is None:
-        impl = _default_impl()
+    """(..., n) descending-sorted probabilities -> (..., n) prefix tails.
+
+    ``w``: (n,) static thresholds (tuple/list/numpy) shared across rows, or
+    a traced int32 array broadcastable to ``probs`` for per-row thresholds
+    (heterogeneous K*/ell, mask-padded pools).
+    """
+    impl = resolve_impl(impl, allowed=("pallas", "ref"))
     if impl == "ref":
         return success_tails_ref(probs, jnp.asarray(w, jnp.int32))
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    w_static = tuple(int(v) for v in np.asarray(w).reshape(-1))
+    interpret = default_interpret(interpret)
     batch_shape = probs.shape[:-1]
     n = probs.shape[-1]
     flat = probs.reshape((-1, n)) if batch_shape else probs.reshape((1, n))
-    out = success_tails_pallas(flat, w_static, interpret=interpret)
+    if isinstance(w, jax.Array):
+        w_flat = jnp.broadcast_to(
+            jnp.asarray(w, jnp.int32), probs.shape
+        ).reshape(flat.shape)
+        out = success_tails_pallas_w(flat, w_flat, interpret=interpret)
+    else:
+        w_static = tuple(int(v) for v in np.asarray(w).reshape(-1))
+        out = success_tails_pallas(flat, w_static, interpret=interpret)
     return out.reshape(batch_shape + (n,))
 
 
-__all__ = ["success_tails", "success_tails_pallas", "success_tails_ref"]
+__all__ = [
+    "success_tails", "success_tails_pallas", "success_tails_pallas_w",
+    "success_tails_ref",
+]

@@ -6,6 +6,20 @@ worker axis convolves one Bernoulli at a time into the carried pmf, and the
 tail P[count >= w(i~)] is read off after every prefix.  The element-wise float
 operations are identical to the original unbatched scan, so per-row results
 are bit-for-bit equal to the seed allocator.
+
+Shape-polymorphic thresholds: ``w`` may be the classic shared ``(n,)`` vector
+(static ``LoadParams``) or any shape broadcastable to ``probs`` — in
+particular a per-row ``(..., n)`` array of TRACED thresholds, which is what
+lets one compiled DP serve a batch of heterogeneous-K*/ell rows.  A shared
+``(n,)`` w broadcast over the batch multiplies the pmf by the exact same
+elementwise mask as before, so the generalisation is bit-identical to the
+seed path on the same inputs.
+
+Mask-padded pools ride the same generalisation with no extra machinery: a
+padded (invalid) worker contributes success probability 0.0, whose Bernoulli
+convolution is the identity (``pmf * 1.0 + shifted * 0.0``), and its prefix
+threshold is set infeasible (``w > i~``) so the padded prefix scores exactly
+0 — see ``core.lea.allocate_masked``.
 """
 
 from __future__ import annotations
@@ -19,14 +33,16 @@ def success_tails_ref(probs: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
     Args:
       probs: (..., n) success probabilities, each row sorted descending.
-      w: (n,) int32 thresholds w(i~) for prefixes i~ = 1..n; entries with
-         ``w > i~`` are infeasible and score 0, entries ``<= 0`` always succeed.
+      w: int32 thresholds w(i~) for prefixes i~ = 1..n — ``(n,)`` shared or
+         any shape broadcastable to ``probs`` (per-row traced thresholds);
+         entries with ``w > i~`` are infeasible and score 0, entries ``<= 0``
+         always succeed.
 
     Returns:
       (..., n) float32 — P[Poisson-binomial(top i~ of row) >= w(i~)].
     """
     probs = jnp.asarray(probs, jnp.float32)
-    w = jnp.asarray(w, jnp.int32)
+    w = jnp.broadcast_to(jnp.asarray(w, jnp.int32), probs.shape)
     n = probs.shape[-1]
     batch_shape = probs.shape[:-1]
     counts = jnp.arange(n + 1)
@@ -39,12 +55,14 @@ def success_tails_ref(probs: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
         p, w_i = xs
         shifted = jnp.concatenate([jnp.zeros_like(pmf[..., :1]), pmf[..., :-1]], axis=-1)
         new = pmf * (1.0 - p)[..., None] + shifted * p[..., None]
-        tail_mask = counts >= jnp.maximum(w_i, 0)
+        tail_mask = counts >= jnp.maximum(w_i, 0)[..., None]
         tail = jnp.sum(new * tail_mask, axis=-1)
         return new, tail
 
     pmf0 = jnp.zeros(batch_shape + (n + 1,), jnp.float32).at[..., 0].set(1.0)
-    _, tails = jax.lax.scan(body, pmf0, (jnp.moveaxis(probs, -1, 0), w))  # (n, ...)
+    _, tails = jax.lax.scan(
+        body, pmf0, (jnp.moveaxis(probs, -1, 0), jnp.moveaxis(w, -1, 0))
+    )  # (n, ...)
 
     tails = jnp.moveaxis(tails, 0, -1)                              # (..., n)
     i_tilde = jnp.arange(1, n + 1)

@@ -1,10 +1,14 @@
 """Sharded, grouped, chunked execution of scenario batches.
 
 One :class:`~repro.sweeps.registry.SweepGroup` = one compiled computation:
-:func:`_run_group` is the single jitted entry point, with ``(LoadParams,
-rounds, strategies, round_chunk)`` static — so a heterogeneous-K* grid costs
-one compile per K* group regardless of how many scenarios and seeds share it
-(:func:`compile_cache_size` exposes the cache counter the tests assert on).
+:func:`_run_group` is the single jitted entry point, with only ``(rounds,
+strategies, round_chunk)`` static.  Load parameters (K*, ell_g, ell_b) and
+the worker-pool mask are TRACED batch leaves fed to the shape-polymorphic
+engine (:func:`repro.core.throughput.simulate_strategies_pool`), so a
+heterogeneous-K* grid, a deadline/load sweep or an elastic pool ramp is ONE
+compile for the whole family regardless of how many scenarios and seeds it
+spans (:func:`compile_cache_size` exposes the cache counter the tests
+assert on).
 
 Sharding: sweep rows are embarrassingly parallel, so the executor lays the
 flat (scenarios x seeds) batch over the ``"batch"`` axis of a 1-D
@@ -31,12 +35,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import throughput
-from repro.core.lea import LoadParams
+from repro.core.lea import PoolLoad
 
 from .registry import ScenarioBatch, SweepGroup
 
 
-@partial(jax.jit, static_argnames=("lp", "rounds", "strategies", "round_chunk"))
+@partial(jax.jit, static_argnames=("rounds", "strategies", "round_chunk"))
 def _run_group(
     keys: jnp.ndarray,
     p_gg: jnp.ndarray,
@@ -44,22 +48,22 @@ def _run_group(
     mu_g: jnp.ndarray,
     mu_b: jnp.ndarray,
     deadline: jnp.ndarray,
+    pool: PoolLoad,
     *,
-    lp: LoadParams,
     rounds: int,
     strategies: tuple[str, ...],
     round_chunk: int | None,
 ) -> jnp.ndarray:
     """(B,) rows -> (B, rounds, S) success indicators, one XLA computation."""
     fn = partial(
-        throughput.simulate_strategies,
-        lp=lp, rounds=rounds, strategies=strategies, round_chunk=round_chunk,
+        throughput.simulate_strategies_pool,
+        rounds=rounds, strategies=strategies, round_chunk=round_chunk,
     )
     return jax.vmap(
-        lambda k, pg, pb, mg, mb, d: fn(
-            k, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
+        lambda k, pg, pb, mg, mb, d, pl: fn(
+            k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
         )
-    )(keys, p_gg, p_bb, mu_g, mu_b, deadline)
+    )(keys, p_gg, p_bb, mu_g, mu_b, deadline, pool)
 
 
 def compile_cache_size() -> int:
@@ -109,8 +113,8 @@ def run_group(
         batch = _shard_batch(batch, mesh)
     succ = _run_group(
         batch.keys, batch.p_gg, batch.p_bb, batch.mu_g, batch.mu_b,
-        batch.deadline,
-        lp=group.lp, rounds=group.rounds, strategies=group.strategies,
+        batch.deadline, batch.pool,
+        rounds=group.rounds, strategies=group.strategies,
         round_chunk=round_chunk,
     )
     return np.asarray(succ[:b])
@@ -146,7 +150,7 @@ def suggest_round_chunk(
     b = group.batch.rows
     if mesh is not None:
         b = math.ceil(b / mesh.devices.size)
-    n = group.lp.n
+    n = group.n_max
     s = len(group.strategies)
     a = len(throughput.allocator_strategies(group.strategies))
     per_round = 4 * b * (8 * (s + 2) * n)

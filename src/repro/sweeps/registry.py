@@ -10,10 +10,30 @@ grids in :mod:`repro.sweeps.scenarios` (deadline sweeps, bursty chains,
 heterogeneous-K*, elastic worker-pool ramps, straggler-slack grids).
 
 :func:`build_groups` flattens (scenarios x seeds) into :class:`SweepGroup`s:
-one flat :class:`ScenarioBatch` pytree per static ``(LoadParams, rounds,
-strategies)`` signature, so the executor compiles ONE computation per group
-no matter how many scenarios share it (heterogeneous-K* grids compile once
-per K*, not once per scenario).
+one flat :class:`ScenarioBatch` pytree per static ``(rounds, strategies)``
+signature.  Load parameters are NOT part of the signature: ``kstar``/
+``ell_g``/``ell_b`` ride the batch as traced (B,) leaves and pools of
+different sizes are padded to the group's widest scenario with a (B, n_max)
+``worker_mask`` (padded workers carry a frozen always-good chain, receive
+no load and never count toward K*) — so the executor compiles ONE
+computation per group no matter how many K*s, load levels or pool sizes the
+scenarios span (fig4's three K* groups, the whole ``hetero_kstar`` grid,
+every ``deadline_sweep`` load level and the ``elastic_pool`` ramp each fuse
+into a single compile).
+
+Padding convention: rows whose scenario is NARROWER than the group's n_max
+are simulated at width n_max with the extra workers masked.  The mask makes
+the padding inert (full-width rows are bit-identical to the static-
+``LoadParams`` engine), but the PRNG stream geometry is the padded width's
+— pool width has always been part of the stream (a width-10 scenario alone
+and the same scenario padded to width 30 draw different, equally valid
+Monte-Carlo streams).  Corollary: a PADDED row's exact bits depend on the
+group's n_max and hence on which other scenarios share its (rounds,
+strategies) signature — adding a wider scenario to a sweep stream-shifts
+the narrower rows' Monte-Carlo draws (never their distribution).
+Full-width rows are composition-independent.  Group composition itself is
+deterministic (signature + first-seen order), so any fixed scenario list
+reproduces bit-for-bit run to run.
 
 PRNG discipline: a scenario with an explicit ``seed`` uses ``PRNGKey(seed)``
 for its first Monte-Carlo repeat — exactly the key the paper benchmarks
@@ -147,11 +167,13 @@ class Scenario:
     def group_signature(self) -> tuple:
         """The static-arg signature the executor compiles per.
 
+        Load parameters are traced batch leaves, so they do NOT appear here
+        — only ``(rounds, strategies)`` plus the chain-array rank flag.
         Scheduled scenarios (piecewise OR dense) batch as (rounds, n) chain
         arrays — a different input shape — so they group separately from
         stationary ones.
         """
-        return (self.lp, self.rounds, self.strategies, self.scheduled)
+        return (self.rounds, self.strategies, self.scheduled)
 
     def chain_arrays(self) -> tuple[np.ndarray, np.ndarray]:
         """Materialise the chain: (n,) float32 rows, or (rounds, n) when
@@ -175,18 +197,40 @@ class Scenario:
 
 
 class ScenarioBatch(NamedTuple):
-    """Flat (B, ...) pytree of simulation inputs — one row per (scenario, seed)."""
+    """Flat (B, ...) pytree of simulation inputs — one row per (scenario, seed).
 
-    keys: jnp.ndarray       # (B, 2) uint32 PRNG keys
-    p_gg: jnp.ndarray       # (B, n) float32 — or (B, rounds, n) when scheduled
-    p_bb: jnp.ndarray       # (B, n) float32 — or (B, rounds, n)
-    mu_g: jnp.ndarray       # (B,)   float32
-    mu_b: jnp.ndarray       # (B,)   float32
-    deadline: jnp.ndarray   # (B,)   float32
+    Chain arrays and the worker mask are padded to the group's widest
+    scenario (``n_max``); ``kstar``/``ell_g``/``ell_b`` are the TRACED
+    per-row load parameters the shape-polymorphic engine consumes.
+    """
+
+    keys: jnp.ndarray         # (B, 2) uint32 PRNG keys
+    p_gg: jnp.ndarray         # (B, n_max) float32 — or (B, rounds, n_max)
+    p_bb: jnp.ndarray         # (B, n_max) float32 — or (B, rounds, n_max)
+    mu_g: jnp.ndarray         # (B,)   float32
+    mu_b: jnp.ndarray         # (B,)   float32
+    deadline: jnp.ndarray     # (B,)   float32
+    kstar: jnp.ndarray        # (B,)   int32
+    ell_g: jnp.ndarray        # (B,)   int32
+    ell_b: jnp.ndarray        # (B,)   int32
+    worker_mask: jnp.ndarray  # (B, n_max) bool — True = real worker
 
     @property
     def rows(self) -> int:
         return self.p_gg.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        """The group's padded pool width."""
+        return self.worker_mask.shape[-1]
+
+    @property
+    def pool(self):
+        """The batch's load parameters as a batched ``lea.PoolLoad``."""
+        from repro.core.lea import PoolLoad
+
+        return PoolLoad(kstar=self.kstar, ell_g=self.ell_g, ell_b=self.ell_b,
+                        mask=self.worker_mask)
 
 
 class RowMeta(NamedTuple):
@@ -198,14 +242,22 @@ class RowMeta(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SweepGroup:
-    """All rows sharing one static (LoadParams, rounds, strategies) signature."""
+    """All rows sharing one static (rounds, strategies) signature.
 
-    lp: LoadParams
+    Load parameters live in ``batch`` as traced leaves (``batch.pool``);
+    the per-scenario static :class:`~repro.core.lea.LoadParams` remain on
+    the :class:`Scenario` objects for display/manifests.
+    """
+
     rounds: int
     strategies: tuple[str, ...]
     batch: ScenarioBatch
     scenarios: tuple[Scenario, ...]
     rows: tuple[RowMeta, ...]        # aligned with batch rows
+
+    @property
+    def n_max(self) -> int:
+        return self.batch.n_max
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +342,22 @@ def row_key(base: jax.Array, seed_index: int) -> jax.Array:
     return base if seed_index == 0 else jax.random.fold_in(base, seed_index)
 
 
+# chain values padding a narrower scenario's extra workers: a frozen
+# always-good chain (stationary prob exactly 1, stay-good prob exactly 1) —
+# deterministic, inert extras the engine additionally pins via the mask
+_FROZEN_P_GG = 1.0
+_FROZEN_P_BB = 0.0
+
+
+def _pad_chain(arr: np.ndarray, n_max: int, value: float) -> np.ndarray:
+    """Pad the worker (last) axis of an (n,) / (rounds, n) chain array."""
+    pad = n_max - arr.shape[-1]
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * (arr.ndim - 1) + [(0, pad)]
+    return np.pad(arr, widths, constant_values=np.float32(value))
+
+
 def build_groups(
     scenarios: Sequence[Scenario] | Iterable[Scenario],
     *,
@@ -300,6 +368,8 @@ def build_groups(
 
     Groups preserve first-seen scenario order; within a group rows are laid
     out scenario-major ((sc0, seed0), (sc0, seed1), ..., (sc1, seed0), ...).
+    Scenarios narrower than the group's widest pool are mask-padded (see the
+    module docstring for the convention).
     """
     if seeds < 1:
         raise ValueError("seeds must be >= 1")
@@ -309,12 +379,17 @@ def build_groups(
         by_sig.setdefault(sc.group_signature, []).append((pos, sc))
 
     groups = []
-    for (lp, rounds, strategies, _scheduled), entries in by_sig.items():
+    for (rounds, strategies, _scheduled), entries in by_sig.items():
         scs = [sc for _, sc in entries]
+        n_max = max(sc.lp.n for sc in scs)
         keys, p_gg, p_bb, mu_g, mu_b, deadline, rows = [], [], [], [], [], [], []
+        kstar, ell_g, ell_b, wmask = [], [], [], []
         for si, (pos, sc) in enumerate(entries):
             base = scenario_base_key(sc, fallback_seed_base, pos)
             chain_gg, chain_bb = sc.chain_arrays()
+            chain_gg = _pad_chain(chain_gg, n_max, _FROZEN_P_GG)
+            chain_bb = _pad_chain(chain_bb, n_max, _FROZEN_P_BB)
+            mask_row = np.arange(n_max) < sc.lp.n
             for s in range(seeds):
                 keys.append(row_key(base, s))
                 p_gg.append(chain_gg)
@@ -322,6 +397,10 @@ def build_groups(
                 mu_g.append(sc.mu_g)
                 mu_b.append(sc.mu_b)
                 deadline.append(sc.deadline)
+                kstar.append(sc.lp.kstar)
+                ell_g.append(sc.lp.ell_g)
+                ell_b.append(sc.lp.ell_b)
+                wmask.append(mask_row)
                 rows.append(RowMeta(scenario_index=si, seed_index=s))
         batch = ScenarioBatch(
             keys=jnp.stack(keys),
@@ -330,9 +409,13 @@ def build_groups(
             mu_g=jnp.asarray(mu_g, jnp.float32),
             mu_b=jnp.asarray(mu_b, jnp.float32),
             deadline=jnp.asarray(deadline, jnp.float32),
+            kstar=jnp.asarray(kstar, jnp.int32),
+            ell_g=jnp.asarray(ell_g, jnp.int32),
+            ell_b=jnp.asarray(ell_b, jnp.int32),
+            worker_mask=jnp.asarray(np.stack(wmask)),
         )
         groups.append(
-            SweepGroup(lp=lp, rounds=rounds, strategies=strategies, batch=batch,
+            SweepGroup(rounds=rounds, strategies=strategies, batch=batch,
                        scenarios=tuple(scs), rows=tuple(rows))
         )
     return tuple(groups)

@@ -14,12 +14,15 @@ Computing* (arXiv:2206.09399)):
 
   * ``deadline_sweep``  — deadline d grid; loads ell(d) move with d, so K*
                           feasibility and LEA's edge shift along the grid
+                          (traced ell -> the whole grid is ONE compile)
   * ``bursty_chains``   — fixed stationary availability, swept mixing
                           eigenvalue lam = p_gg + p_bb - 1 (iid -> long bursts)
-  * ``hetero_kstar``    — data-size grid k -> heterogeneous K* (one compile
-                          per K* group, the executor's grouping showcase)
+  * ``hetero_kstar``    — data-size grid k -> heterogeneous K* (traced K* ->
+                          the whole grid is ONE compile, the
+                          shape-polymorphic engine's showcase)
   * ``elastic_pool``    — worker-pool ramp n (elastic scale-up/down at fixed
-                          work), preempted-pool regimes
+                          work), preempted-pool regimes; pools mask-padded
+                          to the widest ramp point, again ONE compile
   * ``straggler_slack`` — speed-ratio x deadline grid: how much straggler
                           slack LEA can squeeze vs static
 
@@ -106,7 +109,8 @@ FIG4_P_GG, FIG4_P_BB = 0.85, 0.6
 
 @register("fig4")
 def fig4(rounds: int = 400) -> tuple[Scenario, ...]:
-    """Paper Fig. 4 EC2 replay: 6 scenarios, heterogeneous K* in {120,100,50}.
+    """Paper Fig. 4 EC2 replay: 6 scenarios, heterogeneous K* in {120,100,50}
+    (one fused compile — K* is a traced batch quantity).
 
     The arrival gap is folded into the chain via the exact t-step transition
     probabilities (``markov.t_step_transitions``) so one engine round is one
@@ -235,9 +239,9 @@ def hetero_kstar(
     pi_g: float = 0.6,
     rounds: int = 2_000,
 ) -> tuple[Scenario, ...]:
-    """Data-size grid k -> heterogeneous K*: a (k x burstiness) product grid
-    whose rows span len(ks) LoadParams groups — the executor compiles once
-    per K*, not once per scenario."""
+    """Data-size grid k -> heterogeneous K*: a (k x burstiness) product grid.
+    K* is a traced batch quantity, so the whole grid is ONE compiled
+    computation regardless of how many K*s it spans."""
     scenarios = []
     for k in ks:
         lp = _sim_lp(k=k, deg_f=deg_f)
@@ -265,8 +269,9 @@ def elastic_pool(
 ) -> tuple[Scenario, ...]:
     """Elastic worker-pool ramp: the pool grows/shrinks at fixed work (k, r),
     as when preemptible machines join and leave (cf. Hierarchical Coded
-    Elastic Computing, arXiv:2206.09399).  Every n is its own LoadParams
-    group; K* stays put while the allocator's headroom n*ell_g - K* ramps."""
+    Elastic Computing, arXiv:2206.09399).  The ramp is mask-padded to its
+    widest point and fused into ONE compile; K* stays put while the
+    allocator's headroom n*ell_g - K* ramps."""
     scenarios = []
     for n in ns:
         spec = CodeSpec(n, SIM.r, k, deg_f)
@@ -434,7 +439,7 @@ def straggler_slack(
     """Straggler-slack grid: how slow is a bad worker (mu_g / mu_b) x how much
     deadline slack exists — the adaptive-straggler regime of Slack Squeeze
     Coded Computing (arXiv:1904.07098).  Each cell reshapes (ell_g, ell_b),
-    so groups form along the grid wherever the integer loads coincide."""
+    (ell is traced, so the whole grid still compiles once)."""
     spec = CodeSpec(SIM.n, SIM.r, SIM.k, SIM.deg_f)
     scenarios = []
     for ratio in speed_ratios:

@@ -158,7 +158,9 @@ def test_static_cap_exhaustion_counts_as_failed_round():
     """pi_g = 0 makes every draw all-ell_b (sum < K*): the resampling cap is
     exhausted and the round must be explicitly infeasible and unsuccessful."""
     keys = jax.random.split(jax.random.PRNGKey(0), 16)
-    loads, feasible = throughput._static_loads_batch(keys, jnp.zeros((15,)), LP)
+    loads, feasible = throughput._static_loads_batch(
+        keys, jnp.zeros((15,)), LP.kstar, LP.ell_g, LP.ell_b
+    )
     assert not bool(jnp.any(feasible))
     np.testing.assert_array_equal(np.asarray(loads), np.full((16, 15), LP.ell_b))
     # and end-to-end: a scenario pinned to the bad state never succeeds but

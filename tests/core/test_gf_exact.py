@@ -15,6 +15,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import lagrange as lcc
 from repro.core import throughput
 from repro.core.coded_ops import (ModpDecodeCache, chunk_on_time,
+                                  coded_linear_gradient_modp,
                                   coded_matmul_exact, encode_dataset_modp)
 from repro.core.lea import LoadParams
 
@@ -222,3 +223,96 @@ def test_chunk_on_time_broadcasts_and_prefix_rule():
     mask = np.asarray(chunk_on_time(states, loads, 3.0, 1.0, 1.0, r=3))
     np.testing.assert_array_equal(
         mask[0], [True, True, True, True, False, False, False, False, False])
+
+
+# ---------------------------------------------------------------------------
+# exact deg-2 gradient: coded_linear_gradient_modp vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def _np_gradient_oracle(spec, xt_np, yt_np, w_np, on_time):
+    """Numpy replication: per-chunk X~^T(X~ w - y~), gather, decode, sum."""
+    kstar = spec.recovery_threshold
+    w2 = w_np.reshape(w_np.shape[0], -1)
+    grads = []
+    for v in range(spec.nr):
+        resid = (lcc.matmul_modp(xt_np[v], w2) - yt_np[v][:, None]) % P
+        grads.append(lcc.matmul_modp(xt_np[v].T, resid))
+    grads = np.stack(grads)                               # (nr, cols, d)
+    rec = np.nonzero(on_time)[0][:kstar]
+    d = lcc.decode_matrix_modp(spec, rec)
+    per_chunk = lcc.matmul_modp(d, grads[rec].reshape(kstar, -1)).reshape(
+        (spec.k,) + grads.shape[1:]
+    )
+    total = per_chunk.sum(axis=0) % P
+    return total[:, 0] if w_np.ndim == 1 else total
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(3, 7),
+    r=st.integers(2, 3),
+    rows=st.integers(1, 5),
+    cols=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coded_linear_gradient_modp_bit_equal_numpy(n, r, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    k = max(2, (n * r) // 3)
+    spec = lcc.CodeSpec(n, r, k, deg_f=2)
+    if spec.mode != "lagrange":
+        return
+    x = rng.integers(0, P, size=(k, rows, cols), dtype=np.int64)
+    y = rng.integers(0, P, size=(k, rows), dtype=np.int64)
+    w = rng.integers(0, P, size=(cols,), dtype=np.int64)
+    coded = encode_dataset_modp(spec, jnp.asarray(x, jnp.int32),
+                                jnp.asarray(y, jnp.int32))
+    xt_np = np.asarray(coded.x_tilde, np.int64)
+    yt_np = np.asarray(coded.y_tilde, np.int64)
+    on_time = np.zeros(spec.nr, bool)
+    extra = int(rng.integers(0, spec.nr - spec.recovery_threshold + 1))
+    on_time[rng.choice(spec.nr, spec.recovery_threshold + extra,
+                       replace=False)] = True
+    got, ok = jax.jit(
+        lambda m: coded_linear_gradient_modp(coded, jnp.asarray(w, jnp.int32), m)
+    )(jnp.asarray(on_time))
+    assert bool(ok)
+    want = _np_gradient_oracle(spec, xt_np, yt_np, w, on_time)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_coded_linear_gradient_modp_matrix_targets_and_validation():
+    import pytest
+
+    rng = np.random.default_rng(3)
+    spec = lcc.CodeSpec(5, 3, 4, deg_f=2)
+    x = rng.integers(0, P, size=(4, 3, 2), dtype=np.int64)
+    y = rng.integers(0, P, size=(4, 3), dtype=np.int64)
+    w2 = rng.integers(0, P, size=(2, 3), dtype=np.int64)   # (cols, d) targets
+    coded = encode_dataset_modp(spec, jnp.asarray(x, jnp.int32),
+                                jnp.asarray(y, jnp.int32))
+    on_time = np.ones(spec.nr, bool)
+    got, ok = coded_linear_gradient_modp(coded, jnp.asarray(w2, jnp.int32),
+                                         jnp.asarray(on_time))
+    assert bool(ok) and got.shape == (2, 3)
+    want = _np_gradient_oracle(
+        spec, np.asarray(coded.x_tilde, np.int64),
+        np.asarray(coded.y_tilde, np.int64), w2, on_time,
+    )
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+    # short pattern -> ok False, targetless/odd-degree datasets raise
+    short = np.zeros(spec.nr, bool)
+    short[: spec.recovery_threshold - 1] = True
+    _, ok = coded_linear_gradient_modp(coded, jnp.asarray(w2, jnp.int32),
+                                       jnp.asarray(short))
+    assert not bool(ok)
+    no_targets = encode_dataset_modp(spec, jnp.asarray(x, jnp.int32))
+    with pytest.raises(ValueError, match="without targets"):
+        coded_linear_gradient_modp(no_targets, jnp.asarray(w2, jnp.int32),
+                                   jnp.asarray(on_time))
+    spec1 = lcc.CodeSpec(5, 3, 4, deg_f=1)
+    coded1 = encode_dataset_modp(spec1, jnp.asarray(x, jnp.int32),
+                                 jnp.asarray(y, jnp.int32))
+    with pytest.raises(ValueError, match="degree-2"):
+        coded_linear_gradient_modp(coded1, jnp.asarray(w2, jnp.int32),
+                                   jnp.asarray(on_time))

@@ -1,10 +1,13 @@
 """Subprocess body: the repro.sweeps executor on a forced 8-device CPU host.
 
 Asserts, on a heterogeneous-K* registry grid:
-  * sharded executor output == unsharded ``core.throughput.sweep``, bit-exact
-    (including a batch size that does NOT divide the device count -> padding);
-  * sharded + round-chunked == sharded unchunked, bit-exact;
-  * exactly one executor compile per LoadParams group.
+  * the traced-K* engine fuses the WHOLE grid into one group and one
+    executor compile;
+  * sharded executor output == per-row static-``LoadParams``
+    ``core.throughput.simulate_strategies``, bit-exact (the full-width
+    invariant of the shape-polymorphic engine; the 18-row batch does NOT
+    divide the device count -> exercises mesh padding too);
+  * sharded + round-chunked == sharded unchunked, bit-exact.
 Run by tests/distributed/test_multidevice.py.
 """
 
@@ -14,6 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
@@ -29,30 +33,35 @@ def main():
     assert len(jax.devices()) == 8, jax.devices()
     mesh = make_sweep_mesh()
 
-    # 3 K* groups x 2 chains x 3 seeds = 6 rows per group (pads 6 -> 8)
+    # 3 K*s x 2 chains x 3 seeds = 18 rows, ONE fused group (pads 18 -> 24)
     scenarios = sweeps.expand(
         "hetero_kstar", ks=(50, 80, 99), lams=(0.25, 0.65), rounds=ROUNDS
     )
     groups = sweeps.build_groups(scenarios, seeds=3)
-    assert len(groups) == 3
-    assert all(g.batch.rows == 6 for g in groups)   # forces pad to 8
+    assert len(groups) == 1, len(groups)
+    (group,) = groups
+    assert group.batch.rows == 18                   # forces pad to 24
+    assert sorted(set(int(k) for k in np.asarray(group.batch.kstar))) == [50, 80, 99]
 
     before = sweeps.compile_cache_size()
     sharded = sweeps.run_groups(groups, mesh=mesh)
     compiles = sweeps.compile_cache_size() - before
-    assert compiles == len(groups), (compiles, len(groups))
+    assert compiles == len(groups) == 1, (compiles, len(groups))
 
-    # sharded == unsharded core.throughput.sweep, bit-identical
-    for g, s in zip(groups, sharded):
-        ref = throughput.sweep(
-            g.batch.keys, g.lp, g.batch.p_gg, g.batch.p_bb,
-            g.batch.mu_g, g.batch.mu_b, g.batch.deadline,
-            g.rounds, strategies=g.strategies,
+    # sharded fused == per-row static-LoadParams engine, bit-identical
+    (succ,) = sharded
+    for ri, rm in enumerate(group.rows):
+        sc = group.scenarios[rm.scenario_index]
+        ref = throughput.simulate_strategies(
+            group.batch.keys[ri], sc.lp,
+            jnp.asarray(sc.p_gg), jnp.asarray(sc.p_bb),
+            sc.mu_g, sc.mu_b, sc.deadline, group.rounds,
+            strategies=group.strategies,
         )
-        np.testing.assert_array_equal(s, np.asarray(ref))
+        np.testing.assert_array_equal(succ[ri], np.asarray(ref))
 
-    # sharded + chunked == sharded unchunked, bit-identical (chunk pads 128->?
-    # no: 37 does not divide 128, exercising the round-padding path too)
+    # sharded + chunked == sharded unchunked, bit-identical (37 does not
+    # divide 128, exercising the round-padding path too)
     chunked = sweeps.run_groups(groups, mesh=mesh, round_chunk=37)
     for a, b in zip(sharded, chunked):
         np.testing.assert_array_equal(a, b)

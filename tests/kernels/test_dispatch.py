@@ -1,0 +1,77 @@
+"""The shared kernel dispatch helper: defaults, env overrides, validation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+
+
+def test_defaults_off_tpu(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_IMPL, raising=False)
+    monkeypatch.delenv(dispatch.ENV_INTERPRET, raising=False)
+    # the CI container is CPU: host impl + interpret mode
+    assert not dispatch.on_tpu()
+    assert dispatch.default_interpret(None) is True
+    assert dispatch.resolve_impl(None, allowed=("pallas", "ref")) == "ref"
+    assert dispatch.resolve_impl(
+        None, allowed=("pallas", "dot", "ref"), host_impl="dot"
+    ) == "dot"
+
+
+def test_explicit_arguments_win_over_env(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_IMPL, "pallas")
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "0")
+    assert dispatch.resolve_impl("ref", allowed=("pallas", "ref")) == "ref"
+    assert dispatch.default_interpret(True) is True
+
+
+def test_env_impl_override(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_IMPL, "ref")
+    assert dispatch.resolve_impl(None, allowed=("pallas", "ref")) == "ref"
+    assert dispatch.resolve_impl(
+        None, allowed=("pallas", "dot", "ref"), host_impl="dot"
+    ) == "ref"
+    # a forced name outside the dispatcher's set raises, never falls back
+    monkeypatch.setenv(dispatch.ENV_IMPL, "dot")
+    with pytest.raises(ValueError, match="unknown impl"):
+        dispatch.resolve_impl(None, allowed=("pallas", "ref"))
+
+
+def test_env_interpret_override(monkeypatch):
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "0")
+    assert dispatch.default_interpret(None) is False
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "true")
+    assert dispatch.default_interpret(None) is True
+    monkeypatch.setenv(dispatch.ENV_INTERPRET, "maybe")
+    with pytest.raises(ValueError, match="boolean"):
+        dispatch.default_interpret(None)
+
+
+def test_unknown_explicit_impl_raises():
+    with pytest.raises(ValueError, match="unknown impl"):
+        dispatch.resolve_impl("nope", allowed=("pallas", "ref"))
+
+
+def test_env_override_reaches_migrated_dispatchers(monkeypatch):
+    """REPRO_KERNEL_IMPL flows through the migrated ops call sites."""
+    from repro.kernels.gf import matmul_gf
+    from repro.kernels.poisson_binomial import success_tails
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 1000, (4, 6)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 1000, (6, 3)), jnp.int32)
+    base = np.asarray(matmul_gf(a, b, impl="ref"))
+    monkeypatch.setenv(dispatch.ENV_IMPL, "ref")
+    np.testing.assert_array_equal(np.asarray(matmul_gf(a, b)), base)
+
+    p = jnp.asarray(np.sort(rng.uniform(0, 1, (3, 5)), axis=-1)[:, ::-1].copy(),
+                    jnp.float32)
+    w = np.asarray([1, 1, 2, 3, 4], np.int32)
+    want = np.asarray(success_tails(p, w, impl="ref"))
+    np.testing.assert_array_equal(np.asarray(success_tails(p, w)), want)
+
+    # forcing an impl a dispatcher does not support raises loudly
+    monkeypatch.setenv(dispatch.ENV_IMPL, "dot")
+    with pytest.raises(ValueError, match="unknown impl"):
+        success_tails(p, w)

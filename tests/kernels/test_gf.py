@@ -232,3 +232,72 @@ def test_basis_interpolates_polynomials_exactly():
         np.int64,
     )[:, 0]
     np.testing.assert_array_equal(got, poly(ev))
+
+
+# ---------------------------------------------------------------------------
+# bmm_gf: batched exact matmul (the deg-2 gradient's worker-side op)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 6), m=st.integers(1, 9), c=st.integers(1, 17),
+       n=st.integers(1, 7), seed=st.integers(0, 2**31 - 1))
+def test_bmm_gf_all_impls_bit_equal_numpy(b, m, c, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_residues(rng, (b, m, c))
+    x = _rand_residues(rng, (b, c, n))
+    want = np.stack([
+        (a[i].astype(object) @ x[i].astype(object) % P).astype(np.int64)
+        for i in range(b)
+    ])
+    for impl in ("dot", "ref"):
+        got = np.asarray(
+            gf.bmm_gf(jnp.asarray(a, jnp.int32), jnp.asarray(x, jnp.int32),
+                      impl=impl),
+            np.int64,
+        )
+        np.testing.assert_array_equal(got, want, err_msg=impl)
+
+
+def test_bmm_gf_two_dim_falls_through_and_multi_lead_axes():
+    rng = np.random.default_rng(0)
+    a = _rand_residues(rng, (4, 5))
+    x = _rand_residues(rng, (5, 3))
+    np.testing.assert_array_equal(
+        np.asarray(gf.bmm_gf(jnp.asarray(a, jnp.int32), jnp.asarray(x, jnp.int32))),
+        np.asarray(gf.matmul_gf(jnp.asarray(a, jnp.int32), jnp.asarray(x, jnp.int32))),
+    )
+    a4 = _rand_residues(rng, (2, 3, 4, 5))
+    x4 = _rand_residues(rng, (2, 3, 5, 2))
+    got = np.asarray(gf.bmm_gf(jnp.asarray(a4, jnp.int32), jnp.asarray(x4, jnp.int32)), np.int64)
+    assert got.shape == (2, 3, 4, 2)
+    for i in range(2):
+        for j in range(3):
+            want = (a4[i, j].astype(object) @ x4[i, j].astype(object) % P).astype(np.int64)
+            np.testing.assert_array_equal(got[i, j], want)
+
+
+def test_bmm_gf_rejects_mismatched_shapes():
+    import pytest
+
+    a = jnp.zeros((2, 3, 4), jnp.int32)
+    with pytest.raises(ValueError):
+        gf.bmm_gf(a, jnp.zeros((3, 4, 2), jnp.int32))     # lead mismatch
+    with pytest.raises(ValueError):
+        gf.bmm_gf(a, jnp.zeros((2, 5, 2), jnp.int32))     # contraction mismatch
+    with pytest.raises(ValueError):
+        gf.bmm_gf(a, jnp.zeros((4, 2), jnp.int32))        # rank mismatch
+
+
+def test_bmm_gf_pallas_interpret_bit_equal_dot():
+    """The vmapped-pallas_call branch (TPU default) in interpret mode: same
+    residues as the dot/ref paths, including multi-tile shapes."""
+    rng = np.random.default_rng(7)
+    for b, m, c, n in ((3, 4, 9, 5), (2, 17, 33, 6)):
+        a = _rand_residues(rng, (b, m, c))
+        x = _rand_residues(rng, (b, c, n))
+        pal = np.asarray(gf.bmm_gf(jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(x, jnp.int32),
+                                   impl="pallas", interpret=True))
+        dot = np.asarray(gf.bmm_gf(jnp.asarray(a, jnp.int32),
+                                   jnp.asarray(x, jnp.int32), impl="dot"))
+        np.testing.assert_array_equal(pal, dot)

@@ -52,17 +52,22 @@ def test_scenario_validation():
 def test_build_groups_by_static_signature_and_row_layout():
     scs = sweeps.expand("fig4", rounds=16)
     groups = sweeps.build_groups(scs, seeds=3)
-    # 6 scenarios over K* in {120, 100, 50} -> 3 groups of 2 scenarios
-    assert len(groups) == 3
-    assert sorted(g.lp.kstar for g in groups) == [50, 100, 120]
-    for g in groups:
-        assert len(g.scenarios) == 2
-        assert g.batch.rows == len(g.rows) == 2 * 3
-        assert g.rows == tuple(
-            RowMeta(si, s) for si in range(2) for s in range(3)
-        )
-        assert g.batch.p_gg.shape == (6, g.lp.n)
-        assert g.batch.keys.shape[0] == 6
+    # 6 scenarios over K* in {120, 100, 50}: K* is a traced batch leaf, so
+    # the whole family is ONE group (the signature is (rounds, strategies))
+    assert len(groups) == 1
+    (g,) = groups
+    assert len(g.scenarios) == 6
+    assert g.batch.rows == len(g.rows) == 6 * 3
+    assert g.rows == tuple(
+        RowMeta(si, s) for si in range(6) for s in range(3)
+    )
+    assert g.batch.p_gg.shape == (18, g.n_max)
+    assert g.batch.keys.shape[0] == 18
+    # per-row traced load params follow the scenario layout
+    kstars = np.asarray(g.batch.kstar).reshape(6, 3)
+    assert [int(v) for v in kstars[:, 0]] == [sc.lp.kstar for sc in g.scenarios]
+    assert sorted(set(int(v) for v in kstars[:, 0])) == [50, 100, 120]
+    assert bool(np.all(np.asarray(g.batch.worker_mask)))   # all full-width
 
 
 def test_row_keys_replicate_paper_seed_then_fold_in():
@@ -77,10 +82,26 @@ def test_row_keys_replicate_paper_seed_then_fold_in():
                                       np.asarray(jax.random.fold_in(base, 1)))
 
 
-def test_hetero_kstar_group_count_matches_ks():
+def test_hetero_kstar_grid_fuses_into_one_group():
     scs = sweeps.expand("hetero_kstar", ks=(50, 80, 99), lams=(0.1, 0.5), rounds=8)
     groups = sweeps.build_groups(scs)
-    assert len(groups) == 3 and all(len(g.scenarios) == 2 for g in groups)
+    assert len(groups) == 1 and len(groups[0].scenarios) == 6
+    assert sorted(set(int(v) for v in np.asarray(groups[0].batch.kstar))) == [50, 80, 99]
+
+
+def test_elastic_pool_pads_to_widest_scenario():
+    scs = sweeps.expand("elastic_pool", ns=(10, 15, 30), rounds=8)
+    (g,) = sweeps.build_groups(scs)
+    assert g.n_max == 30
+    mask = np.asarray(g.batch.worker_mask)
+    assert list(mask.sum(axis=1)) == [sc.lp.n for sc in g.scenarios]
+    # prefix-valid convention: padding is a suffix of frozen always-good chains
+    for row, sc in zip(mask, g.scenarios):
+        assert row[: sc.lp.n].all() and not row[sc.lp.n:].any()
+    p_gg = np.asarray(g.batch.p_gg)
+    p_bb = np.asarray(g.batch.p_bb)
+    for ri, sc in enumerate(g.scenarios):
+        assert (p_gg[ri, sc.lp.n:] == 1.0).all() and (p_bb[ri, sc.lp.n:] == 0.0).all()
 
 
 # ---------------------------------------------------------------------------
@@ -131,27 +152,92 @@ def test_executor_matches_core_sweep():
     scs = sweeps.expand("bursty_chains", lams=(0.2, 0.8), rounds=ROUNDS)
     (group,) = sweeps.build_groups(scs, seeds=2)
     got = sweeps.run_group(group)
+    # all bursty scenarios share one LoadParams -> the static engine path is
+    # an exact reference for the executor's traced full-width path
     ref = throughput.sweep(
-        group.batch.keys, group.lp, group.batch.p_gg, group.batch.p_bb,
-        group.batch.mu_g, group.batch.mu_b, group.batch.deadline,
-        group.rounds, strategies=group.strategies,
+        group.batch.keys, group.scenarios[0].lp, group.batch.p_gg,
+        group.batch.p_bb, group.batch.mu_g, group.batch.mu_b,
+        group.batch.deadline, group.rounds, strategies=group.strategies,
     )
     np.testing.assert_array_equal(got, np.asarray(ref))
 
 
-def test_one_compile_per_group_for_hetero_kstar_grid():
+def test_one_compile_for_whole_hetero_kstar_grid():
     # fresh static signature (unique rounds) so cached entries don't mask it
     scs = sweeps.expand("hetero_kstar", ks=(50, 80, 99), lams=(0.15, 0.55, 0.85),
                         rounds=96)
     groups = sweeps.build_groups(scs, seeds=2)
-    assert len(groups) == 3
+    assert len(groups) == 1        # 9 scenarios, 3 K*s, ONE fused computation
     before = sweeps.compile_cache_size()
     sweeps.run_groups(groups)
-    assert sweeps.compile_cache_size() - before == len(groups)
+    assert sweeps.compile_cache_size() - before == 1
     # re-running the same grid compiles nothing new
     before = sweeps.compile_cache_size()
     sweeps.run_groups(groups)
     assert sweeps.compile_cache_size() == before
+
+
+# ---------------------------------------------------------------------------
+# acceptance: every sweep family below = ONE compiled computation, and the
+# fused traced-K*/ell results replicate the static-LoadParams engine exactly
+# ---------------------------------------------------------------------------
+
+def _assert_rows_match_static_engine(group, succ):
+    """Every fused row == the static-LoadParams engine on the same key."""
+    for ri, rm in enumerate(group.rows):
+        sc = group.scenarios[rm.scenario_index]
+        if sc.lp.n != group.n_max:
+            continue       # padded rows define their stream at padded width
+        ref = throughput.simulate_strategies(
+            group.batch.keys[ri], sc.lp,
+            jnp.asarray(sc.p_gg), jnp.asarray(sc.p_bb),
+            sc.mu_g, sc.mu_b, sc.deadline, group.rounds,
+            strategies=group.strategies,
+        )
+        np.testing.assert_array_equal(succ[ri], np.asarray(ref))
+
+
+@pytest.mark.parametrize("family,params,full_width", [
+    ("fig4", {"rounds": 88}, True),
+    ("hetero_kstar", {"ks": (50, 80, 120), "lams": (0.3, 0.6), "rounds": 88}, True),
+    ("deadline_sweep", {"deadlines": (0.7, 1.0, 1.5), "rounds": 88}, True),
+    ("elastic_pool", {"ns": (10, 15, 20), "rounds": 88}, False),
+])
+def test_family_runs_as_one_compile_bit_identical_to_static_engine(
+    family, params, full_width
+):
+    scs = sweeps.expand(family, **params)
+    assert len(scs) > 1, family
+    groups = sweeps.build_groups(scs, seeds=2)
+    assert len(groups) == 1, (family, len(groups))
+    before = sweeps.compile_cache_size()
+    (succ,) = sweeps.run_groups(groups)
+    compiled = sweeps.compile_cache_size() - before
+    assert compiled <= 1, (family, compiled)   # <=: an earlier test may have cached it
+    if full_width:
+        assert all(sc.lp.n == groups[0].n_max for sc in scs)
+    _assert_rows_match_static_engine(groups[0], succ)
+
+
+def test_padded_elastic_rows_match_masked_engine_at_padded_width():
+    """A padded row's semantics: the same scenario run through the masked
+    engine at the group's padded width, bit for bit."""
+    from repro.core import lea as lea_mod
+
+    scs = sweeps.expand("elastic_pool", ns=(10, 20), rounds=72)
+    (group,) = sweeps.build_groups(scs)
+    (succ,) = sweeps.run_groups([group])
+    n_max = group.n_max
+    for ri, rm in enumerate(group.rows):
+        sc = group.scenarios[rm.scenario_index]
+        pool = lea_mod.pool_load(sc.lp, n=n_max)
+        ref = throughput.simulate_strategies_pool(
+            group.batch.keys[ri], pool,
+            group.batch.p_gg[ri], group.batch.p_bb[ri],
+            sc.mu_g, sc.mu_b, sc.deadline, group.rounds,
+            strategies=group.strategies,
+        )
+        np.testing.assert_array_equal(succ[ri], np.asarray(ref))
 
 
 def test_suggest_round_chunk_scales_with_budget():
