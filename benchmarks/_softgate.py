@@ -1,0 +1,86 @@
+"""Shared soft-perf-gate helpers for the BENCH_*.json-writing targets.
+
+The repo's regression convention (established by ``sweep_smoke``, shared by
+``bench_faults``): every perf-ish metric is checked against the COMMITTED
+manifest — ``git show HEAD:BENCH_*.json``, so local refreshes can never
+ratchet the reference down; the working-tree file is only the fallback when
+git is unavailable — and a regression beyond tolerance prints a WARNING to
+stderr and flags the manifest, but never fails the run.  Shared-CI wall
+clocks are too noisy for hard gates; the hard gates are the in-run
+correctness assertions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+# warn (never fail) when a throughput-style metric drops more than this
+# fraction below the committed baseline
+SLOWDOWN_WARN_FRACTION = 0.30
+
+
+def committed_baseline(path: str) -> dict:
+    """The committed manifest at ``path`` (git HEAD), falling back to the
+    on-disk file outside a usable git checkout."""
+    root = os.path.dirname(os.path.abspath(path))
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{os.path.basename(path)}"],
+            capture_output=True, text=True, timeout=30, cwd=root,
+        )
+        if blob.returncode == 0:
+            return json.loads(blob.stdout)
+    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
+        pass
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def warn_slowdown(
+    bench: str,
+    value: float,
+    baseline_value: float | None,
+    *,
+    metric: str = "rows/sec",
+    fraction: float = SLOWDOWN_WARN_FRACTION,
+) -> bool:
+    """Soft throughput check: True (and a stderr WARNING) iff ``value`` fell
+    more than ``fraction`` below the committed ``baseline_value``."""
+    if not baseline_value or value >= (1.0 - fraction) * baseline_value:
+        return False
+    print(
+        f"WARNING: {bench} {metric} regressed "
+        f"{1.0 - value / baseline_value:.0%} vs committed baseline "
+        f"({value:.0f} vs {baseline_value:.0f}); soft check only",
+        file=sys.stderr,
+    )
+    return True
+
+
+def warn_compiles(
+    bench: str,
+    family_compiles: dict[str, int],
+    baseline_compiles: dict[str, int],
+) -> bool:
+    """Soft compile-count check: True (and one stderr WARNING per family)
+    iff any family compiled MORE computations than the committed baseline.
+    Counts are deterministic, but the convention stays soft — the hard gate
+    is each bench's in-run one-compile assertion."""
+    warned = False
+    for fam, count in family_compiles.items():
+        committed = baseline_compiles.get(fam)
+        if committed is not None and count > committed:
+            warned = True
+            print(
+                f"WARNING: {bench} family {fam!r} compiled {count} "
+                f"computations vs {committed} in the committed baseline; "
+                "soft check only",
+                file=sys.stderr,
+            )
+    return warned

@@ -7,14 +7,17 @@ Usage:
   python -m benchmarks.run --list          # print registered targets + blurbs
 
 Exit code 0 is the CI smoke gate: every requested suite must produce its
-rows without raising.  Four targets additionally refresh a manifest at the
+rows without raising.  Five targets additionally refresh a manifest at the
 repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
 ``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
 ``BENCH_sweep.json`` (with a soft rows/sec regression check against the
 committed baseline), ``bench_policies`` -> ``BENCH_policies.json``
-(per-policy throughput, baseline ratio, final regret + CI vs the oracle)
-and ``bench_gf`` -> ``BENCH_gf.json`` (exact GF(p) device-vs-numpy
-speedups, >= 5x acceptance on the exact coded round).
+(per-policy throughput, baseline ratio, final regret + CI vs the oracle),
+``bench_gf`` -> ``BENCH_gf.json`` (exact GF(p) device-vs-numpy speedups,
+>= 5x acceptance on the exact coded round) and ``bench_faults`` ->
+``BENCH_faults.json`` (packet-erasure grid: partial-work-conserving decode
+vs all-or-nothing under shared fault traces, retry/degrade outcome
+accounting).
 """
 
 import sys
@@ -37,6 +40,9 @@ SUITES = [
      "scheduling-policy shoot-out with regret columns; writes BENCH_policies.json"),
     ("bench_gf", "bench_gf",
      "exact GF(p) device path vs numpy modp oracle; writes BENCH_gf.json"),
+    ("bench_faults", "bench_faults",
+     "fault-injection gate: packet erasure grid, conserve vs all-or-nothing, "
+     "retry/degrade accounting; writes BENCH_faults.json"),
     ("bench_kernels", "bench_kernels",
      "Pallas-kernel + XLA-path microbenchmarks"),
     ("bench_allocator", "bench_allocator",

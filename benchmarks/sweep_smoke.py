@@ -31,6 +31,9 @@ import subprocess
 import sys
 import time
 
+from benchmarks._softgate import (SLOWDOWN_WARN_FRACTION, committed_baseline,
+                                  warn_compiles, warn_slowdown)
+
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
 _BASELINE_PATH = os.path.join(_ROOT, "BENCH_sweep.json")
@@ -42,10 +45,6 @@ SEEDS = 2
 KS = (50, 80, 99)
 LAMS = (0.2, 0.7)
 FAMILY = "hetero_kstar"
-
-# soft perf gate: warn (never fail) when warm rows/sec drops more than this
-# fraction below the committed BENCH_sweep.json baseline
-SLOWDOWN_WARN_FRACTION = 0.30
 
 _MARKER = "SWEEP_SMOKE_ROWS "
 
@@ -68,25 +67,6 @@ def run() -> list[dict]:
         if line.startswith(_MARKER):
             return json.loads(line[len(_MARKER):])
     raise RuntimeError(f"sweep_smoke child produced no rows:\n{proc.stdout}")
-
-
-def _committed_baseline() -> dict:
-    """The committed BENCH_sweep.json (git HEAD), falling back to the
-    on-disk file outside a usable git checkout."""
-    try:
-        blob = subprocess.run(
-            ["git", "show", f"HEAD:{os.path.basename(_BASELINE_PATH)}"],
-            capture_output=True, text=True, timeout=30, cwd=_ROOT,
-        )
-        if blob.returncode == 0:
-            return json.loads(blob.stdout)
-    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
-        pass
-    try:
-        with open(_BASELINE_PATH) as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError):
-        return {}
 
 
 def _child_main() -> None:
@@ -136,35 +116,15 @@ def _child_main() -> None:
     total_rows = sum(g.batch.rows for g in groups)
     rows_per_sec = total_rows * ROUNDS / warm_s
 
-    # soft regression checks vs the COMMITTED baseline (git HEAD, so local
-    # refreshes can never ratchet the reference down; the working-tree file
-    # is only the fallback when git is unavailable).  Wall-clock on shared
-    # CI machines is noisy, so a slowdown WARNS — it never fails the gate;
-    # compile counts are deterministic but follow the same soft convention
-    # (the hard in-run assertion above is the real gate).
-    baseline = _committed_baseline()
+    # soft regression checks vs the COMMITTED baseline (benchmarks._softgate:
+    # git HEAD reference, stderr WARNING + manifest flag, never a hard
+    # failure — the hard in-run assertion above is the real gate)
+    baseline = committed_baseline(_BASELINE_PATH)
     baseline_rps = baseline.get("rows_per_sec")
-    slowdown_warned = False
-    if baseline_rps and rows_per_sec < (1.0 - SLOWDOWN_WARN_FRACTION) * baseline_rps:
-        slowdown_warned = True
-        print(
-            f"WARNING: sweep_smoke rows/sec regressed "
-            f"{1.0 - rows_per_sec / baseline_rps:.0%} vs committed baseline "
-            f"({rows_per_sec:.0f} vs {baseline_rps:.0f}); soft check only",
-            file=sys.stderr,
-        )
-    compile_warned = False
-    baseline_compiles = baseline.get("family_compiles", {})
-    for fam, count in family_compiles.items():
-        committed = baseline_compiles.get(fam)
-        if committed is not None and count > committed:
-            compile_warned = True
-            print(
-                f"WARNING: sweep_smoke family {fam!r} compiled {count} "
-                f"computations vs {committed} in the committed baseline; "
-                "soft check only",
-                file=sys.stderr,
-            )
+    slowdown_warned = warn_slowdown("sweep_smoke", rows_per_sec, baseline_rps)
+    compile_warned = warn_compiles(
+        "sweep_smoke", family_compiles, baseline.get("family_compiles", {})
+    )
 
     # per-row allocator time inside one batched allocate (the sweep hot path)
     lp = scenarios[0].lp

@@ -170,16 +170,13 @@ def coded_matmul(
     use :func:`coded_matmul_device` for the fully-jittable path.
     """
     spec = coded.spec
-    on_time = np.asarray(on_time)
-    if int(on_time.sum()) < spec.recovery_threshold:
-        raise TimeoutError(
-            f"round failed: {int(on_time.sum())} < K*={spec.recovery_threshold} on-time results"
-        )
+    # one shared short-pattern gate for every eager path (float eager, float
+    # cache, modp cache): all raise the same TimeoutError before any compute
+    received = _received_or_raise(spec, on_time)
     results = jnp.einsum("vrc,c...->vr...", coded.x_tilde, w)
     if cache is not None:
-        received, d = cache.from_on_time(on_time, results.dtype)
+        d = cache.matrix(received, results.dtype)
     else:
-        received = np.nonzero(on_time)[0][: spec.recovery_threshold]
         d = decode_matrix(spec, received, results.dtype)
     return jnp.tensordot(d, results[jnp.asarray(received)], axes=1)
 
@@ -230,18 +227,13 @@ def coded_linear_gradient(
         raise ValueError("dataset was encoded without targets")
     if spec.deg_f != 2:
         raise ValueError("linear-model gradient is a degree-2 polynomial; spec.deg_f must be 2")
-    on_time = np.asarray(on_time)
-    if int(on_time.sum()) < spec.recovery_threshold:
-        raise TimeoutError(
-            f"round failed: {int(on_time.sum())} < K*={spec.recovery_threshold} on-time results"
-        )
+    received = _received_or_raise(spec, on_time)   # shared TimeoutError gate
     if gradient_fn is None:
         gradient_fn = jax.vmap(chunk_gradient, in_axes=(0, 0, None))
     results = gradient_fn(coded.x_tilde, coded.y_tilde, w)       # (nr, cols)
     if cache is not None:
-        received, d = cache.from_on_time(on_time, results.dtype)
+        d = cache.matrix(received, results.dtype)
     else:
-        received = np.nonzero(on_time)[0][: spec.recovery_threshold]
         d = decode_matrix(spec, received, results.dtype)
     per_chunk = jnp.tensordot(d, results[jnp.asarray(received)], axes=1)  # (k, cols)
     return jnp.sum(per_chunk, axis=0)

@@ -151,18 +151,50 @@ def sample_trajectory(
     out1 = (u < p_step_gg).astype(jnp.int32)
     out0 = (u < (1.0 - p_step_bb)).astype(jnp.int32)
 
-    def compose(f, g):
-        """(g ∘ f): apply the earlier map f first, then the later map g."""
-        f0, f1 = f
-        g0, g1 = g
-        return (jnp.where(f0 == 1, g1, g0), jnp.where(f1 == 1, g1, g0))
-
-    pref0, pref1 = jax.lax.associative_scan(compose, (out0, out1), axis=0)
+    pref0, pref1 = jax.lax.associative_scan(_compose_maps, (out0, out1), axis=0)
     tail = jnp.where(s0[None] == 1, pref1, pref0)
     traj = jnp.concatenate([s0[None], tail], axis=0)
     if worker_mask is None:
         return traj
     return jnp.where(worker_mask, traj, 1)
+
+
+def _compose_maps(f, g):
+    """(g ∘ f) for {0,1} -> {0,1} maps as (f(0), f(1)) value tables."""
+    f0, f1 = f
+    g0, g1 = g
+    return (jnp.where(f0 == 1, g1, g0), jnp.where(f1 == 1, g1, g0))
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def sample_trajectory_from(
+    key: jax.Array,
+    p_stay1: jnp.ndarray,
+    p_stay0: jnp.ndarray,
+    rounds: int,
+    init: jnp.ndarray,
+) -> jnp.ndarray:
+    """(rounds, n) trajectory of a 2-state chain from an EXPLICIT initial state.
+
+    The fault-process twin of :func:`sample_trajectory`: ``init`` (n,) int32
+    IS round 0 (no stationary draw — a fleet starts alive, a channel starts
+    clear), and ``p_stay1``/``p_stay0`` are the stay probabilities
+    P[1 -> 1] / P[0 -> 0], broadcastable against ``init``.  Same
+    parallel-prefix composition as :func:`sample_trajectory` (per-round
+    transition maps composed with ``lax.associative_scan``), so it is
+    equally batched-engine-friendly; the whole key feeds the transition
+    draws (there is no initial-state draw to split it with).
+    """
+    init = jnp.asarray(init, jnp.int32)
+    if rounds == 1:
+        return init[None]
+    keys = jax.random.split(key, rounds - 1)
+    u = jax.vmap(lambda k: jax.random.uniform(k, init.shape))(keys)
+    out1 = (u < p_stay1).astype(jnp.int32)
+    out0 = (u < (1.0 - p_stay0)).astype(jnp.int32)
+    pref0, pref1 = jax.lax.associative_scan(_compose_maps, (out0, out1), axis=0)
+    tail = jnp.where(init[None] == 1, pref1, pref0)
+    return jnp.concatenate([init[None], tail], axis=0)
 
 
 def speeds_from_states(states: jnp.ndarray, mu_g: float, mu_b: float) -> jnp.ndarray:

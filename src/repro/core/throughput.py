@@ -482,6 +482,36 @@ def simulate_strategies_pool(
     )
 
 
+def _rollout_impl(
+    key: jax.Array,
+    load,                      # LoadParams (static) or lea.PoolLoad (traced)
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    strategies: tuple[str, ...],
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared body of :func:`rollout` / :func:`rollout_pool`."""
+    _check_strategies(strategies)
+    _check_chain_shapes(p_gg, p_bb, rounds)
+    masked = isinstance(load, lea_mod.PoolLoad)
+    k_traj, k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(
+        k_traj, p_gg, p_bb, rounds,
+        worker_mask=load.mask if masked else None,
+    )
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
+    round_keys = jax.random.split(k_rounds, rounds)
+    alloc_names = allocator_strategies(strategies)
+    if alloc_names:
+        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)
+    else:
+        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
+    loads_mat, feasible = _rollout_block(
+        states, round_keys, p_alloc, pi_g, load, strategies
+    )
+    return states, loads_mat, feasible
+
+
 @partial(jax.jit, static_argnames=("strategies", "lp", "rounds"))
 def rollout(
     key: jax.Array,
@@ -499,21 +529,29 @@ def rollout(
     batched engine's allocations bit-for-bit instead of re-implementing the
     seed-era per-round estimator/allocate loop.
     """
-    _check_strategies(strategies)
-    _check_chain_shapes(p_gg, p_bb, rounds)
-    k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(k_traj, p_gg, p_bb, rounds)
-    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
-    round_keys = jax.random.split(k_rounds, rounds)
-    alloc_names = allocator_strategies(strategies)
-    if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)
-    else:
-        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
-    loads_mat, feasible = _rollout_block(
-        states, round_keys, p_alloc, pi_g, lp, strategies
-    )
-    return states, loads_mat, feasible
+    return _rollout_impl(key, lp, p_gg, p_bb, rounds, strategies)
+
+
+@partial(jax.jit, static_argnames=("strategies", "rounds"))
+def rollout_pool(
+    key: jax.Array,
+    pool,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static"),
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`rollout` with TRACED load parameters (a ``lea.PoolLoad``).
+
+    The shape-polymorphic twin: traced kstar/ell and a mask-padded pool, so
+    consumers that post-process the loads themselves (the fault engine's
+    packet-level scoring in :mod:`repro.faults.engine`) fuse a whole
+    heterogeneous batch into one compile exactly like
+    :func:`simulate_strategies_pool`.  Full-width rows are bit-identical
+    to :func:`rollout` with the equivalent static ``LoadParams`` on the
+    same key (same invariant, same ref-DP scope).
+    """
+    return _rollout_impl(key, pool, p_gg, p_bb, rounds, strategies)
 
 
 def score_rollout(

@@ -1,0 +1,255 @@
+"""Composable fault processes over engine trajectories.
+
+A fault process consumes the base "everything arrives" trace of a batch of
+rounds and degrades it.  Every injector is a NamedTuple pytree — traced
+array parameters, static structure — with an ``apply(key, trace)`` method
+that is a pure function of its key, so
+
+  * a *channel* (tuple of injectors) composes by folding the trace through
+    each injector with a ``fold_in``-derived subkey;
+  * vmapping the engine over a batch of channels with the SAME structure
+    but different (traced) parameters fuses a whole fault-parameter grid
+    into one compiled computation (the ``repro.sweeps`` convention);
+  * the same key always reproduces the same faults, so two decode modes
+    scored "under the same fault traces" literally share the trace.
+
+The trace (:class:`FaultTrace`) separates the two physical failure axes:
+
+  ``t_cut``  (rounds, n) float32 — the time at which worker i's round-m
+             compute is CUT OFF (crash, preemption).  Work finishing after
+             ``t_cut`` is lost; the base value is the deadline itself.
+  ``keep``   (rounds, n, r, packets) bool — per-packet NETWORK delivery:
+             packet q of stored chunk j either traverses the channel or is
+             erased (Bernoulli, Gilbert-Elliott bursts, correlated events).
+
+Injectors are MONOTONE by construction — ``t_cut`` only decreases and
+``keep`` only loses packets — so applying a channel can never manufacture
+work, and the all-or-nothing/conserving decode containment proved in
+:mod:`repro.faults.packets` survives any channel.
+
+Registry: injectors register under a name (:func:`register_injector`) and
+are constructible from config dictionaries via :func:`make_injector` /
+:func:`make_channel`, which is how sweep-family metadata turns into traced
+channel parameters in ``benchmarks/bench_faults.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.markov import sample_trajectory_from
+
+# fold_in tag separating the fault-process PRNG stream from the engine's
+# trajectory / round-key / policy streams (cf. throughput._POLICY_KEY_TAG)
+_FAULT_KEY_TAG = 0x7F4A7C15 % (2**31)
+
+
+def fault_key(key: jax.Array) -> jax.Array:
+    """The fault-process stream root for a simulation key.
+
+    Derived by ``fold_in`` with a dedicated tag so fault draws never collide
+    with the trajectory, round-draw or policy streams split from the same
+    simulation key — and so every decode mode scored on one simulation key
+    sees the SAME faults.
+    """
+    return jax.random.fold_in(key, _FAULT_KEY_TAG)
+
+
+class FaultTrace(NamedTuple):
+    """One batch of rounds' fault realisation (see module docstring)."""
+
+    t_cut: jnp.ndarray   # (rounds, n) float32 — compute cutoff time
+    keep: jnp.ndarray    # (rounds, n, r, packets) bool — network delivery
+
+    @property
+    def rounds(self) -> int:
+        return self.t_cut.shape[0]
+
+
+def base_trace(rounds: int, n: int, r: int, packets: int, deadline) -> FaultTrace:
+    """The no-fault trace: full deadline to compute, every packet delivered."""
+    return FaultTrace(
+        t_cut=jnp.full((rounds, n), deadline, jnp.float32),
+        keep=jnp.ones((rounds, n, r, packets), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_INJECTORS: dict[str, type] = {}
+
+
+def register_injector(name: str):
+    """Decorator: register an injector class under ``name``."""
+
+    def deco(cls):
+        if name in _INJECTORS:
+            raise ValueError(f"fault injector {name!r} already registered")
+        _INJECTORS[name] = cls
+        cls.injector_name = name
+        return cls
+
+    return deco
+
+
+def injector_names() -> tuple[str, ...]:
+    return tuple(sorted(_INJECTORS))
+
+
+def make_injector(name: str, **params):
+    """Build a registered injector from keyword parameters."""
+    if name not in _INJECTORS:
+        raise KeyError(
+            f"unknown fault injector {name!r}; available: "
+            f"{', '.join(injector_names())}"
+        )
+    return _INJECTORS[name](**params)
+
+
+def make_channel(spec: Sequence[tuple[str, dict]]) -> tuple:
+    """((name, params), ...) -> a channel: an ordered tuple of injectors."""
+    return tuple(make_injector(name, **params) for name, params in spec)
+
+
+def apply_channel(key: jax.Array, channel: Sequence, trace: FaultTrace) -> FaultTrace:
+    """Fold the trace through every injector, each on its own subkey.
+
+    Subkeys are ``fold_in(key, position)``, so a channel realisation depends
+    on the injector ORDER as well as the key — two channels sharing a prefix
+    share that prefix's faults exactly.
+    """
+    for i, inj in enumerate(channel):
+        trace = inj.apply(jax.random.fold_in(key, i), trace)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# built-in injectors
+# ---------------------------------------------------------------------------
+
+
+@register_injector("crash_restart")
+class CrashRestart(NamedTuple):
+    """Worker crash/restart: a persistent alive/crashed chain per worker.
+
+    Every worker runs an independent 2-state chain over rounds, starting
+    ALIVE: an alive worker crashes with probability ``p_crash`` per round
+    and a crashed one restarts with probability ``p_restart``.  A crashed
+    worker's round produces nothing (``t_cut`` -> 0); its stored chunks
+    survive the restart (the executor's ``mark_dead`` models the permanent
+    variant).
+    """
+
+    p_crash: jnp.ndarray
+    p_restart: jnp.ndarray
+
+    def apply(self, key: jax.Array, trace: FaultTrace) -> FaultTrace:
+        rounds, n = trace.t_cut.shape
+        alive = sample_trajectory_from(
+            key,
+            1.0 - jnp.asarray(self.p_crash, jnp.float32),
+            1.0 - jnp.asarray(self.p_restart, jnp.float32),
+            rounds,
+            jnp.ones((n,), jnp.int32),
+        )                                                      # (rounds, n)
+        return trace._replace(
+            t_cut=jnp.where(alive == 1, trace.t_cut, 0.0)
+        )
+
+
+@register_injector("preempt")
+class Preempt(NamedTuple):
+    """Preemption ramp: a hit worker keeps only a fraction of its round.
+
+    With probability ``p_preempt`` per (round, worker), the worker is
+    reclaimed mid-round at a uniform fraction in [``min_frac``, 1) of its
+    remaining cutoff: ``t_cut -> frac * t_cut``.  Work finished before the
+    preemption point survives — exactly the partial results the conserving
+    decode (and the hierarchical layer) exist to harvest.
+    """
+
+    p_preempt: jnp.ndarray
+    min_frac: jnp.ndarray = 0.0
+
+    def apply(self, key: jax.Array, trace: FaultTrace) -> FaultTrace:
+        k_hit, k_frac = jax.random.split(key)
+        shape = trace.t_cut.shape
+        hit = jax.random.uniform(k_hit, shape) < self.p_preempt
+        min_frac = jnp.asarray(self.min_frac, jnp.float32)
+        frac = min_frac + (1.0 - min_frac) * jax.random.uniform(k_frac, shape)
+        return trace._replace(
+            t_cut=jnp.where(hit, frac * trace.t_cut, trace.t_cut)
+        )
+
+
+@register_injector("packet_bernoulli")
+class PacketBernoulli(NamedTuple):
+    """iid per-packet erasure: every packet is dropped with prob ``p_drop``."""
+
+    p_drop: jnp.ndarray
+
+    def apply(self, key: jax.Array, trace: FaultTrace) -> FaultTrace:
+        u = jax.random.uniform(key, trace.keep.shape)
+        return trace._replace(keep=trace.keep & (u >= self.p_drop))
+
+
+@register_injector("gilbert_elliott")
+class GilbertElliott(NamedTuple):
+    """Gilbert-Elliott bursty packet loss: a 2-state channel per worker link.
+
+    Each worker's link runs a good/bad channel chain over rounds (starting
+    good): good -> bad with ``p_gb``, bad -> good with ``p_bg``; packets
+    drop with ``drop_good`` in the good state and ``drop_bad`` in the bad
+    one — the classic bursty-erasure model of the packet-erasure-channel
+    literature (arXiv 1901.03610).
+    """
+
+    p_gb: jnp.ndarray
+    p_bg: jnp.ndarray
+    drop_good: jnp.ndarray = 0.0
+    drop_bad: jnp.ndarray = 0.5
+
+    def apply(self, key: jax.Array, trace: FaultTrace) -> FaultTrace:
+        rounds, n = trace.t_cut.shape
+        k_chain, k_drop = jax.random.split(key)
+        good = sample_trajectory_from(
+            k_chain,
+            1.0 - jnp.asarray(self.p_gb, jnp.float32),
+            1.0 - jnp.asarray(self.p_bg, jnp.float32),
+            rounds,
+            jnp.ones((n,), jnp.int32),
+        )                                                      # (rounds, n)
+        p = jnp.where(good == 1, self.drop_good, self.drop_bad)
+        u = jax.random.uniform(k_drop, trace.keep.shape)
+        return trace._replace(keep=trace.keep & (u >= p[..., None, None]))
+
+
+@register_injector("burst")
+class Burst(NamedTuple):
+    """Correlated burst loss: one shared event wipes a packet-tail fleet-wide.
+
+    With probability ``p_event`` per round, EVERY worker loses its last
+    ``frac`` fraction of packet indices that round (a shared network event —
+    switch congestion, a rack brown-out) — the correlated-loss regime where
+    per-worker redundancy cannot help but per-packet position can.
+    """
+
+    p_event: jnp.ndarray
+    frac: jnp.ndarray = 0.5
+
+    def apply(self, key: jax.Array, trace: FaultTrace) -> FaultTrace:
+        rounds = trace.keep.shape[0]
+        packets = trace.keep.shape[-1]
+        hit = jax.random.uniform(key, (rounds,)) < self.p_event  # (rounds,)
+        # packet index q survives a burst iff q/packets < 1 - frac
+        pos = jnp.arange(packets, dtype=jnp.float32) / packets   # (packets,)
+        survive = pos < (1.0 - jnp.asarray(self.frac, jnp.float32))
+        keep = trace.keep & (
+            survive[None, None, None, :] | ~hit[:, None, None, None]
+        )
+        return trace._replace(keep=keep)

@@ -1,0 +1,170 @@
+"""Batched fault-sweep engine: score decode modes under shared fault traces.
+
+One compiled computation per batch: rolls out the shape-polymorphic engine
+(:func:`repro.core.throughput.rollout_pool` semantics — traced K*/ell,
+mask-padded pools), realises the fault channel ONCE per row from the
+dedicated fault key, and scores every strategy's every round under three
+decode modes on the SAME trajectory and the SAME faults:
+
+  ``full_aon``       — all-or-nothing packet rule meets K* at every packet
+                       index (the classic ``chunk_on_time`` model);
+  ``full_conserve``  — partial-work-conserving rule meets K* at every
+                       packet index (preempted workers' finished packets
+                       count).  AON ⊆ conserve pointwise, so
+                       ``full_aon => full_conserve`` round by round;
+  ``partial``        — full decode infeasible but the hierarchical layer-1
+                       code (threshold ``k1star`` over the first ``p1``
+                       packet indices) decodes — the degraded serving mode.
+
+Channel parameters are TRACED pytree leaves: :func:`sweep_faults` vmaps the
+whole thing over (B,) rows — keys, chains, pool, channel parameters — so a
+fault-parameter grid compiles ONCE per (rounds, strategies, geometry)
+signature, exactly the ``repro.sweeps`` convention
+(:func:`fault_compile_cache_size` exposes the cache counter the benchmark
+and tests assert on).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import throughput
+
+from .channels import apply_channel, base_trace, fault_key
+from .packets import layer1_recovery, packet_counts, packet_on_time
+
+
+class FaultOutcomes(NamedTuple):
+    """Per-round, per-strategy decode outcomes ((rounds, S) bool each).
+
+    ``partial`` is exclusive of ``full_conserve`` (layer-1 only); a round's
+    conserving-mode disposition is full_conserve / partial / neither.
+    """
+
+    full_aon: jnp.ndarray
+    full_conserve: jnp.ndarray
+    partial: jnp.ndarray
+
+
+def _simulate_faults_impl(
+    key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
+    rounds, strategies, r, packets, p1,
+) -> FaultOutcomes:
+    states, loads, feasible = throughput._rollout_impl(
+        key, pool, p_gg, p_bb, rounds, strategies
+    )                                   # (M, n), (S, M, n), (S, M)
+    n = states.shape[-1]
+    trace = base_trace(rounds, n, r, packets, deadline)
+    trace = apply_channel(fault_key(key), channel, trace)
+
+    mask_aon = packet_on_time(states, loads, mu_g, mu_b, deadline, r, packets,
+                              trace=trace, conserve=False)   # (S, M, nr, P)
+    mask_con = packet_on_time(states, loads, mu_g, mu_b, deadline, r, packets,
+                              trace=trace, conserve=True)
+    counts_aon = packet_counts(mask_aon)                     # (S, M, P)
+    counts_con = packet_counts(mask_con)
+
+    kstar = pool.kstar
+    full_aon = feasible & jnp.all(counts_aon >= kstar, axis=-1)
+    full_con = feasible & jnp.all(counts_con >= kstar, axis=-1)
+    l1 = feasible & layer1_recovery(counts_con, k1star, p1)
+    to_ms = lambda x: jnp.moveaxis(x, 0, 1)                  # (S, M) -> (M, S)
+    return FaultOutcomes(
+        full_aon=to_ms(full_aon),
+        full_conserve=to_ms(full_con),
+        partial=to_ms(l1 & ~full_con),
+    )
+
+
+@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets", "p1"))
+def simulate_faults(
+    key: jax.Array,
+    pool,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    channel: tuple,
+    k1star,
+    *,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static"),
+    r: int,
+    packets: int,
+    p1: int = 1,
+) -> FaultOutcomes:
+    """One row's fault-scored simulation (see module docstring).
+
+    ``pool`` is a :class:`repro.core.lea.PoolLoad` (traced K*/ell + mask);
+    ``channel`` a tuple of injectors from :mod:`repro.faults.channels`;
+    ``k1star`` the hierarchical layer-1 threshold (traced scalar); ``r`` /
+    ``packets`` / ``p1`` the static packet geometry.  With an empty channel
+    the conserving mode still differs from AON (prefix credit for slow
+    workers); with an empty channel AND ``packets=1`` the ``full_aon``
+    column reproduces :func:`repro.core.throughput.simulate_strategies_pool`
+    success indicators exactly (the same loads, the same on-time rule).
+    """
+    return _simulate_faults_impl(
+        key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
+        rounds, strategies, r, packets, p1,
+    )
+
+
+@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets", "p1"))
+def _run_fault_group(
+    keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
+    *, rounds, strategies, r, packets, p1,
+) -> FaultOutcomes:
+    """(B,) rows -> (B, rounds, S) outcomes, one XLA computation."""
+    return jax.vmap(
+        lambda k, pl, pg, pb, mg, mb, d, ch, k1: _simulate_faults_impl(
+            k, pl, pg, pb, mg, mb, d, ch, k1,
+            rounds, strategies, r, packets, p1,
+        )
+    )(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star)
+
+
+def fault_compile_cache_size() -> int:
+    """Distinct fault-group computations compiled so far (test hook)."""
+    return _run_fault_group._cache_size()
+
+
+def sweep_faults(
+    keys: jnp.ndarray,
+    pool,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    mu_g,
+    mu_b,
+    deadline,
+    channel: tuple,
+    k1star,
+    *,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea", "static"),
+    r: int,
+    packets: int,
+    p1: int = 1,
+) -> FaultOutcomes:
+    """Batched :func:`simulate_faults`: every leaf carries a leading (B,) axis.
+
+    ``channel`` injector parameters are (B,) traced leaves (same structure
+    per row), so a whole fault-parameter grid — different drop rates,
+    preemption probabilities, burst rates per row — fuses into ONE compile
+    per static (rounds, strategies, r, packets, p1) signature.  Returns
+    :class:`FaultOutcomes` of (B, rounds, S) arrays.
+    """
+    strategies = tuple(strategies)
+    b = p_gg.shape[0]
+    as_b = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,))
+    channel = jax.tree.map(as_b, channel)   # scalar params ride every row
+    return _run_fault_group(
+        keys, pool, p_gg, p_bb, as_b(mu_g), as_b(mu_b), as_b(deadline),
+        channel, jnp.broadcast_to(jnp.asarray(k1star, jnp.int32), (b,)),
+        rounds=rounds, strategies=strategies, r=r, packets=packets, p1=p1,
+    )

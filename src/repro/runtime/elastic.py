@@ -9,6 +9,7 @@ from the pooled average (a better prior than the 0.5 cold start).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lea
@@ -25,8 +26,6 @@ def reshard_state(state, shardings):
 def remap_estimator(est: lea.EstimatorState, old_n: int, new_n: int,
                     survivors: list[int] | None = None) -> lea.EstimatorState:
     """Carry LEA counts across an elastic resize."""
-    import jax.numpy as jnp
-
     counts = np.asarray(est.counts)
     prev = np.asarray(est.prev_state)
     if survivors is None:

@@ -9,11 +9,35 @@ This is the paper's scheduling layer embedded in the trainer:
   * per round, the EA algorithm allocates ``ell_g``/``ell_b`` shard
     evaluations per worker from the estimated Markov state — exactly
     Sec. 3.2, with K* = nr - floor(nr/k) + 1;
-  * a round SUCCEEDS iff >= K* shard evaluations land by the deadline, which
-    (repetition bound) guarantees every shard has an on-time copy; the master
-    averages one copy of each shard into the step gradient;
+  * a round SUCCEEDS iff every shard has an on-time copy (repetition-branch
+    coverage); the master averages one copy of each shard into the step
+    gradient;
   * permanently-dead workers shrink the pool; when ``n_live * r < k`` decode
     becomes infeasible and the manager signals restart-from-checkpoint.
+
+Graceful degradation (the ``repro.faults`` integration)
+-------------------------------------------------------
+Each shard-copy's result streams out as ``packets`` packet blocks scored by
+the partial-work-conserving rule of :func:`repro.faults.packets.packet_on_time`
+under an optional fault channel (crash/preempt/erasure injectors from
+:mod:`repro.faults.channels`), and shard coverage is per PACKET: shard j's
+packet q is covered iff ANY stored copy of j delivered packet q — partial
+work from different preempted copies composes into a full shard.
+
+A round that misses coverage is RETRIED up to ``max_retries`` times with
+exponential backoff (each retry first lets the worker chains advance
+``backoff_base * 2^(attempt-1)`` extra Markov steps — waiting out a bad
+spell — then re-plans loads from the updated estimator).  Coverage
+accumulates across attempts, so retries only add packets.  Every round ends
+in exactly ONE of four dispositions, counted in ``outcomes`` (the
+never-silently-drop invariant: the counts always sum to ``rounds``):
+
+  ``on_time``  — full coverage on the first attempt;
+  ``late``     — full coverage after >= 1 retry;
+  ``partial``  — still short after retries, but every shard's first ``p1``
+                 packet indices are covered and ``allow_partial`` is set:
+                 the round is served degraded (hierarchical layer-1);
+  ``dropped``  — none of the above; the round returns ``None``.
 
 Worker speeds follow the paper's two-state Markov model.  In this container
 they are simulated (CPU has no real host telemetry); on a real cluster the
@@ -24,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +57,11 @@ import numpy as np
 from repro.core import lea
 from repro.core.lagrange import CodeSpec
 from repro.core.markov import step_states, initial_states
+from repro.faults.channels import apply_channel, base_trace
+from repro.faults.packets import packet_on_time
+from repro.runtime.elastic import remap_estimator
+
+OUTCOMES = ("on_time", "late", "partial", "dropped")
 
 
 @partial(jax.jit, static_argnames=("lp",))
@@ -60,6 +89,12 @@ class CodedDPConfig:
     mu_b: float = 3.0
     p_gg: float = 0.8          # simulation-only: true (unknown) dynamics
     p_bb: float = 0.7
+    # --- graceful degradation (repro.faults) ---
+    packets: int = 1           # packet blocks per shard-copy result
+    max_retries: int = 0       # extra attempts for an uncovered round
+    backoff_base: int = 1      # Markov steps waited before retry 1 (then x2)
+    allow_partial: bool = False  # serve layer-1-covered rounds degraded
+    p1: int = 1                # layer-1 packet-prefix length (see faults.packets)
 
     @property
     def spec(self) -> CodeSpec:
@@ -81,12 +116,17 @@ class CodedDataParallelExecutor:
 
     ``grad_fn(params, shard_batch) -> grads``; the executor owns shard
     assignment, per-round allocation, completion simulation/observation,
-    estimator updates, and shard-copy decoding.
+    estimator updates, shard-copy decoding, retry/degrade dispositioning
+    and elastic pool resizes.  ``channel`` is an optional tuple of fault
+    injectors (:mod:`repro.faults.channels`) applied to every attempt's
+    completion times and packet deliveries.
     """
 
-    def __init__(self, cfg: CodedDPConfig, grad_fn: Callable, *, seed: int = 0):
+    def __init__(self, cfg: CodedDPConfig, grad_fn: Callable, *, seed: int = 0,
+                 channel: Sequence = ()):
         self.cfg = cfg
         self.grad_fn = grad_fn
+        self.channel = tuple(channel)
         self.est = lea.init_estimator(cfg.n_workers)
         self.key = jax.random.PRNGKey(seed)
         self.key, k0 = jax.random.split(self.key)
@@ -97,6 +137,7 @@ class CodedDataParallelExecutor:
         self.live = np.ones(cfg.n_workers, bool)
         self.rounds = 0
         self.successes = 0
+        self.outcomes = {name: 0 for name in OUTCOMES}
 
     # -- estimator state round-trips through checkpoints (DESIGN §7) --------
     def state_dict(self) -> dict:
@@ -107,6 +148,7 @@ class CodedDataParallelExecutor:
             "live": self.live.tolist(),
             "rounds": self.rounds,
             "successes": self.successes,
+            "outcomes": dict(self.outcomes),
         }
 
     def load_state_dict(self, d: dict) -> None:
@@ -118,6 +160,9 @@ class CodedDataParallelExecutor:
         self.live = np.asarray(d["live"], bool)
         self.rounds = int(d["rounds"])
         self.successes = int(d["successes"])
+        self.outcomes = {
+            name: int(d.get("outcomes", {}).get(name, 0)) for name in OUTCOMES
+        }
 
     def mark_dead(self, worker: int) -> None:
         """Permanent host failure.  Infeasibility triggers restart upstream."""
@@ -127,63 +172,152 @@ class CodedDataParallelExecutor:
     def decode_feasible(self) -> bool:
         return int(self.live.sum()) * self.cfg.r >= self.cfg.k
 
-    def _advance_network(self):
-        cfg = self.cfg
-        self.key, k = jax.random.split(self.key)
-        self._true_states = step_states(
-            k, self._true_states,
-            jnp.full((cfg.n_workers,), cfg.p_gg), jnp.full((cfg.n_workers,), cfg.p_bb),
-        )
+    def resize(self, new_n: int, survivors: list[int] | None = None) -> None:
+        """Elastic pool resize: carry estimator history across grow/shrink.
 
-    def round(self, params, batch) -> tuple[dict | None, dict]:
-        """One LEA round.  Returns (mean gradient | None on miss, info)."""
+        ``survivors`` maps old worker indices onto the first slots of the
+        new pool (default: the identity prefix); newcomers start live with
+        the pooled estimator prior (:func:`repro.runtime.elastic.remap_estimator`)
+        and a fresh stationary state draw.
+        """
+        cfg = self.cfg
+        old_n = cfg.n_workers
+        if survivors is None:
+            survivors = list(range(min(old_n, new_n)))
+        self.est = remap_estimator(self.est, old_n, new_n, survivors)
+        self.cfg = dataclasses.replace(cfg, n_workers=new_n)
+        self.key, k_new = jax.random.split(self.key)
+        fresh = initial_states(
+            k_new, jnp.full((new_n,), cfg.p_gg), jnp.full((new_n,), cfg.p_bb)
+        )
+        states = np.asarray(fresh).copy()
+        live = np.ones(new_n, bool)
+        old_states = np.asarray(self._true_states)
+        for i, s in enumerate(survivors[:new_n]):
+            states[i] = old_states[s]
+            live[i] = self.live[s]
+        self._true_states = jnp.asarray(states)
+        self.live = live
+
+    def _advance_network(self, steps: int = 1):
+        cfg = self.cfg
+        for _ in range(steps):
+            self.key, k = jax.random.split(self.key)
+            self._true_states = step_states(
+                k, self._true_states,
+                jnp.full((cfg.n_workers,), cfg.p_gg),
+                jnp.full((cfg.n_workers,), cfg.p_bb),
+            )
+
+    def _attempt(self) -> tuple[np.ndarray, np.ndarray, dict]:
+        """One delivery attempt: plan, simulate completion, observe.
+
+        Returns ``(packet mask (n*r, packets), loads, attempt info)``.
+        """
         cfg = self.cfg
         lp = cfg.load_params
-        self.rounds += 1
-        self._advance_network()
-
-        # (1) Load assignment from estimated state (dead workers forced bad);
-        # one jitted call — predicted p_good + batched allocate fused.
         loads_dev, _ = _plan_round(self.est, jnp.asarray(self.live), lp)
         loads = np.array(loads_dev)      # writable host copy
-
-        # (2) Local computation + (3) observation: deterministic speeds
         states = np.asarray(self._true_states)
-        speeds = np.where(states == 1, cfg.mu_g, cfg.mu_b)
-        on_time = (loads / np.maximum(speeds, 1e-9)) <= cfg.deadline + 1e-9
-        on_time &= self.live
 
-        # which encoded shard-copies arrived: worker i's copies i*r..i*r+l-1
-        arrived = np.zeros(cfg.spec.nr, bool)
-        for i in range(cfg.n_workers):
-            if on_time[i] and loads[i] > 0:
-                arrived[i * cfg.r: i * cfg.r + loads[i]] = True
-        shard_covered = np.zeros(cfg.k, bool)
-        shard_covered[np.unique(arrived.nonzero()[0] % cfg.k)] = True
-        success = bool(shard_covered.all())
+        trace = base_trace(1, cfg.n_workers, cfg.r, cfg.packets, cfg.deadline)
+        if self.channel:
+            self.key, k_fault = jax.random.split(self.key)
+            trace = apply_channel(k_fault, self.channel, trace)
+        mask = np.array(packet_on_time(
+            jnp.asarray(states), jnp.asarray(loads[None]),
+            cfg.mu_g, cfg.mu_b, cfg.deadline, cfg.r, cfg.packets,
+            trace=trace, conserve=True,
+        ))[0]                                            # (n*r, packets)
+        mask &= np.repeat(self.live, cfg.r)[:, None]
 
         # (4) estimator update — completion times reveal the round's states
         self.est = _update_estimator(self.est, jnp.asarray(states))
 
-        info = {
-            "success": success,
-            "on_time_workers": int(on_time.sum()),
-            "arrived_copies": int(arrived.sum()),
-            "kstar": lp.kstar,
-            "loads": loads.tolist(),
-        }
-        if not success:
-            return None, info
-        self.successes += 1
+        speeds = np.where(states == 1, cfg.mu_g, cfg.mu_b)
+        on_time_workers = int(
+            (((loads / np.maximum(speeds, 1e-9)) <= cfg.deadline + 1e-9)
+             & self.live).sum()
+        )
+        info = {"on_time_workers": on_time_workers, "loads": loads.tolist()}
+        return mask, loads, info
 
-        # master decodes: first on-time copy of each shard, average grads
+    def _coverage(self, mask: np.ndarray) -> np.ndarray:
+        """(n*r, packets) arrivals -> (k, packets) shard-packet coverage.
+
+        Repetition code: shard j's packet q is covered iff ANY stored copy
+        v (v mod k == j) delivered packet q — partial work from different
+        copies composes.
+        """
+        cfg = self.cfg
+        covered = np.zeros((cfg.k, cfg.packets), bool)
+        for j in range(cfg.k):
+            covered[j] = mask[j::cfg.k].any(axis=0)
+        return covered
+
+    def round(self, params, batch) -> tuple[dict | None, dict]:
+        """One LEA round (with bounded retry + degrade — module docstring).
+
+        Returns ``(gradient | None, info)``; ``info["outcome"]`` is one of
+        ``OUTCOMES`` and the running ``outcomes`` counts always sum to
+        ``rounds``.
+        """
+        cfg = self.cfg
+        lp = cfg.load_params
+        self.rounds += 1
+
+        covered = np.zeros((cfg.k, cfg.packets), bool)
+        attempts = 0
+        first_info: dict = {}
+        arrived_copies = 0
+        for attempt in range(cfg.max_retries + 1):
+            # attempt 0 advances one round; retries wait out an exponentially
+            # growing backoff of extra Markov steps before redelivering
+            steps = 1 if attempt == 0 else cfg.backoff_base * (2 ** (attempt - 1))
+            self._advance_network(steps)
+            mask, loads, info = self._attempt()
+            if attempt == 0:
+                first_info = info
+            attempts = attempt + 1
+            arrived_copies = int(mask.all(axis=-1).sum())
+            covered |= self._coverage(mask)
+            if covered.all():
+                break
+
+        full = bool(covered.all())
+        layer1 = bool(covered[:, : cfg.p1].all())
+        if full:
+            outcome = "on_time" if attempts == 1 else "late"
+        elif cfg.allow_partial and layer1:
+            outcome = "partial"
+        else:
+            outcome = "dropped"
+        self.outcomes[outcome] += 1
+
+        info = {
+            "success": full and attempts == 1,
+            "outcome": outcome,
+            "attempts": attempts,
+            "on_time_workers": first_info.get("on_time_workers", 0),
+            "arrived_copies": arrived_copies,
+            "covered_packets": int(covered.sum()),
+            "kstar": lp.kstar,
+            "loads": first_info.get("loads", []),
+        }
+        if outcome == "dropped":
+            return None, info
+        if full:
+            self.successes += 1
+
+        # master decodes: one on-time copy of each shard, average grads.
+        # Degraded (partial) rounds serve the layer-1 prefix of every shard;
+        # the gradient estimate still averages over all k shards (coverage
+        # guaranteed the layer-1 packets of each), flagged by the outcome.
         shards = _split_batch(batch, cfg.k)
         grads = None
         for j in range(cfg.k):
-            copies = np.nonzero(arrived & (np.arange(cfg.spec.nr) % cfg.k == j))[0]
             g = self.grad_fn(params, shards[j])          # computed by copy owner
             grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
-            del copies
         grads = jax.tree.map(lambda a: a / cfg.k, grads)
         return grads, info
 

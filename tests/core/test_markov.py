@@ -98,3 +98,45 @@ def test_rollout_scoring_equals_simulate_strategies():
         key, LP, p_gg, p_bb, 10.0, 3.0, 1.0, 100, strategies=strategies
     )
     np.testing.assert_array_equal(np.asarray(succ), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    rounds=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+    init_good=st.booleans(),
+)
+def test_explicit_init_trajectory_matches_sequential_reference(
+    n, rounds, seed, init_good
+):
+    """sample_trajectory_from (the fault-process sampler): explicit round-0
+    state, same parallel-prefix composition — must equal the sequential
+    step_states recurrence bit-for-bit on the same key."""
+    key = jax.random.PRNGKey(seed)
+    p_stay1 = jnp.asarray(np.random.default_rng(seed).uniform(0.05, 0.95, n),
+                          jnp.float32)
+    p_stay0 = jnp.asarray(np.random.default_rng(seed + 1).uniform(0.05, 0.95, n),
+                          jnp.float32)
+    init = jnp.full((n,), int(init_good), jnp.int32)
+    got = markov.sample_trajectory_from(key, p_stay1, p_stay0, rounds, init)
+    assert got.shape == (rounds, n)
+    # sequential reference: the same per-step uniforms in the same order
+    ref = [np.asarray(init)]
+    if rounds > 1:
+        keys = jax.random.split(key, rounds - 1)
+        for k in keys:
+            # step_states is the (stay1, stay0) recurrence with p_gg=p_stay1,
+            # p_bb=p_stay0 (state 1 stays with p_stay1, state 0 with p_stay0)
+            ref.append(np.asarray(
+                markov.step_states(k, jnp.asarray(ref[-1]), p_stay1, p_stay0)
+            ))
+    np.testing.assert_array_equal(np.asarray(got), np.stack(ref))
+
+
+def test_explicit_init_round0_is_the_init():
+    init = jnp.asarray([1, 0, 1, 0], jnp.int32)
+    traj = markov.sample_trajectory_from(
+        jax.random.PRNGKey(0), 0.5, 0.5, 10, init
+    )
+    np.testing.assert_array_equal(np.asarray(traj[0]), np.asarray(init))

@@ -1,0 +1,84 @@
+"""The shared short-round convention: every EAGER decode entry point raises
+the same ``TimeoutError`` (same message shape) through the one
+``_received_or_raise`` gate, float and exact alike — the jitted device paths
+return ``ok=False`` instead (they cannot raise data-dependently)."""
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coded_ops import (CodeSpec, DecodeCache, ModpDecodeCache,
+                                  _received_or_raise, coded_linear_gradient,
+                                  coded_matmul, encode_dataset,
+                                  encode_dataset_modp)
+
+_MSG = r"round failed: \d+ < K\*=\d+ on-time results"
+
+
+def _short_mask(spec):
+    on_time = np.zeros(spec.nr, bool)
+    on_time[: spec.recovery_threshold - 1] = True
+    return on_time
+
+
+def test_received_or_raise_message_and_success_path():
+    spec = CodeSpec(n=5, r=3, k=6, deg_f=1)
+    with pytest.raises(TimeoutError, match=_MSG):
+        _received_or_raise(spec, _short_mask(spec))
+    full = np.ones(spec.nr, bool)
+    received = _received_or_raise(spec, full)
+    np.testing.assert_array_equal(received,
+                                  np.arange(spec.recovery_threshold))
+
+
+def test_float_eager_paths_share_the_gate():
+    rng = np.random.default_rng(0)
+    spec = CodeSpec(n=5, r=3, k=6, deg_f=2)
+    x = rng.normal(size=(spec.k, 2, 3)).astype(np.float32)
+    y = rng.normal(size=(spec.k, 2)).astype(np.float32)
+    coded = encode_dataset(spec, jnp.asarray(x), jnp.asarray(y))
+    w = jnp.ones((3,), jnp.float32)
+    short = _short_mask(spec)
+    for call in (
+        lambda: coded_matmul(coded, w, short),
+        lambda: coded_matmul(coded, w, short, cache=DecodeCache(spec)),
+        lambda: coded_linear_gradient(coded, w, short),
+        lambda: coded_linear_gradient(coded, w, short, cache=DecodeCache(spec)),
+        lambda: DecodeCache(spec).from_on_time(short),
+    ):
+        with pytest.raises(TimeoutError, match=_MSG):
+            call()
+
+
+def test_exact_path_shares_the_gate():
+    rng = np.random.default_rng(0)
+    spec = CodeSpec(n=5, r=3, k=6, deg_f=1)
+    coded = encode_dataset_modp(
+        spec, rng.integers(0, 997, size=(spec.k, 2, 3)).astype(np.int64)
+    )
+    with pytest.raises(TimeoutError, match=_MSG):
+        ModpDecodeCache(coded.spec).from_on_time(_short_mask(spec))
+
+
+def test_float_and_exact_messages_are_identical_in_shape():
+    spec = CodeSpec(n=5, r=3, k=6, deg_f=1)
+    short = _short_mask(spec)
+    msgs = []
+    for cache in (DecodeCache(spec), ModpDecodeCache(spec)):
+        with pytest.raises(TimeoutError) as ei:
+            cache.from_on_time(short)
+        msgs.append(str(ei.value))
+    assert msgs[0] == msgs[1]
+    assert re.fullmatch(_MSG, msgs[0])
+
+
+def test_cache_never_pays_a_miss_on_a_short_round():
+    """The gate fires BEFORE any decode-matrix build: a short round must not
+    pollute the cache or its hit/miss counters."""
+    spec = CodeSpec(n=5, r=3, k=6, deg_f=1)
+    cache = DecodeCache(spec)
+    with pytest.raises(TimeoutError):
+        cache.from_on_time(_short_mask(spec))
+    assert len(cache) == 0 and cache.misses == 0 and cache.hits == 0

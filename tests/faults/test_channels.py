@@ -1,0 +1,132 @@
+"""Fault-injector registry, monotonicity and determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.faults.channels import _FAULT_KEY_TAG
+
+ROUNDS, N, R, P = 16, 5, 3, 4
+DEADLINE = 1.0
+
+ALL_CHANNELS = [
+    ("crash_restart", {"p_crash": 0.3, "p_restart": 0.5}),
+    ("preempt", {"p_preempt": 0.5, "min_frac": 0.2}),
+    ("packet_bernoulli", {"p_drop": 0.3}),
+    ("gilbert_elliott", {"p_gb": 0.3, "p_bg": 0.4, "drop_bad": 0.8}),
+    ("burst", {"p_event": 0.4, "frac": 0.5}),
+]
+
+
+def _base():
+    return faults.base_trace(ROUNDS, N, R, P, DEADLINE)
+
+
+def test_registry_lists_all_builtin_injectors():
+    assert faults.injector_names() == (
+        "burst", "crash_restart", "gilbert_elliott", "packet_bernoulli",
+        "preempt",
+    )
+
+
+def test_make_injector_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="packet_bernoulli"):
+        faults.make_injector("no_such_fault")
+
+
+def test_make_channel_builds_named_injectors_in_order():
+    ch = faults.make_channel(ALL_CHANNELS)
+    assert [inj.injector_name for inj in ch] == [n for n, _ in ALL_CHANNELS]
+
+
+def test_base_trace_is_no_fault():
+    tr = _base()
+    assert tr.rounds == ROUNDS
+    np.testing.assert_array_equal(np.asarray(tr.t_cut),
+                                  np.full((ROUNDS, N), DEADLINE, np.float32))
+    assert bool(jnp.all(tr.keep))
+
+
+@pytest.mark.parametrize("name,params", ALL_CHANNELS)
+def test_every_injector_is_monotone(name, params):
+    """t_cut only decreases, keep only loses packets — injectors can never
+    manufacture work, on any key."""
+    inj = faults.make_injector(name, **params)
+    tr = _base()
+    for seed in range(3):
+        out = inj.apply(jax.random.PRNGKey(seed), tr)
+        assert out.t_cut.shape == tr.t_cut.shape
+        assert out.keep.shape == tr.keep.shape
+        assert bool(jnp.all(out.t_cut <= tr.t_cut))
+        assert bool(jnp.all(out.keep <= tr.keep))
+
+
+@pytest.mark.parametrize("name,params", ALL_CHANNELS)
+def test_every_injector_actually_degrades(name, params):
+    """At these rates, some fault fires within 16 rounds (not a no-op)."""
+    inj = faults.make_injector(name, **params)
+    out = inj.apply(jax.random.PRNGKey(0), _base())
+    degraded = (not bool(jnp.all(out.t_cut == DEADLINE))) or (
+        not bool(jnp.all(out.keep))
+    )
+    assert degraded
+
+
+def test_apply_channel_is_deterministic_in_key():
+    ch = faults.make_channel(ALL_CHANNELS)
+    key = jax.random.PRNGKey(7)
+    a = faults.apply_channel(key, ch, _base())
+    b = faults.apply_channel(key, ch, _base())
+    np.testing.assert_array_equal(np.asarray(a.t_cut), np.asarray(b.t_cut))
+    np.testing.assert_array_equal(np.asarray(a.keep), np.asarray(b.keep))
+    c = faults.apply_channel(jax.random.PRNGKey(8), ch, _base())
+    assert not (np.array_equal(np.asarray(a.t_cut), np.asarray(c.t_cut))
+                and np.array_equal(np.asarray(a.keep), np.asarray(c.keep)))
+
+
+def test_channel_prefix_shares_faults_exactly():
+    """Per-injector subkeys are fold_in(key, position): two channels sharing
+    a prefix realise that prefix's faults identically."""
+    key = jax.random.PRNGKey(3)
+    short = faults.make_channel(ALL_CHANNELS[:2])
+    long = faults.make_channel(ALL_CHANNELS)
+    a = faults.apply_channel(key, short, _base())
+    b = faults.apply_channel(key, long, _base())
+    # the long channel's extra injectors only REMOVE work from the prefix
+    assert bool(jnp.all(b.t_cut <= a.t_cut))
+    assert bool(jnp.all(b.keep <= a.keep))
+    # and the t_cut-only prefix (crash+preempt) is bit-identical: the keep
+    # injectors that follow never touch t_cut
+    np.testing.assert_array_equal(np.asarray(a.t_cut), np.asarray(b.t_cut))
+
+
+def test_fault_key_is_a_distinct_stream():
+    key = jax.random.PRNGKey(0)
+    fk = faults.fault_key(key)
+    assert not np.array_equal(np.asarray(fk), np.asarray(key))
+    np.testing.assert_array_equal(
+        np.asarray(fk), np.asarray(jax.random.fold_in(key, _FAULT_KEY_TAG))
+    )
+
+
+def test_crash_restart_zeroes_crashed_rounds():
+    inj = faults.make_injector("crash_restart", p_crash=0.5, p_restart=0.3)
+    out = inj.apply(jax.random.PRNGKey(1), _base())
+    t = np.asarray(out.t_cut)
+    # a crashed round contributes nothing; an alive one keeps the deadline
+    assert set(np.unique(t)).issubset({0.0, np.float32(DEADLINE)})
+    assert (t == 0.0).any()
+    # round 0 starts alive for every worker
+    np.testing.assert_array_equal(t[0], np.full(N, DEADLINE, np.float32))
+
+
+def test_burst_wipes_packet_tail_fleet_wide():
+    inj = faults.make_injector("burst", p_event=1.0, frac=0.5)
+    out = inj.apply(jax.random.PRNGKey(0), _base())
+    keep = np.asarray(out.keep)
+    # every round is hit: last half of packet indices gone everywhere,
+    # first half untouched
+    assert not keep[..., P // 2:].any()
+    assert keep[..., : P // 2].all()

@@ -1,0 +1,265 @@
+"""Packet-level scoring and decode: bit-identity, containment, dominance.
+
+The acceptance properties of the partial-work-conservation tentpole:
+
+  * at ``packets=1`` with no faults, the packet path IS the existing
+    all-or-nothing path bit-for-bit — masks vs ``chunk_on_time``, float
+    decode vs ``coded_matmul_device``, exact GF(p) decode vs
+    ``coded_matmul_exact`` (property-tested over random instances);
+  * AON ⊆ conserve pointwise on ANY trace, so a conserving decode never
+    loses a round the all-or-nothing decode recovers;
+  * under injected preemption the conserving/hierarchical decode recovers
+    STRICTLY more rounds than all-or-nothing on the same PRNG keys;
+  * the batched fault engine compiles ONCE per static signature across a
+    whole channel-parameter grid.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import lea
+from repro.core.coded_ops import (CodeSpec, chunk_on_time, coded_matmul_device,
+                                  coded_matmul_exact, encode_dataset,
+                                  encode_dataset_modp)
+from repro.faults.packets import (coded_matmul_exact_packets,
+                                  coded_matmul_packets, layer1_recovery,
+                                  packet_counts, packet_on_time)
+
+MU_G, MU_B, DEADLINE = 10.0, 3.0, 1.0
+
+
+def _states_loads(seed, m, n, r):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    states = jax.random.bernoulli(k0, 0.6, (m, n)).astype(jnp.int32)
+    loads = jax.random.randint(k1, (m, n), 0, r + 1)
+    return states, loads
+
+
+# ---------------------------------------------------------------------------
+# bit-identity at packets=1, no faults
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_p1_aon_mask_is_chunk_on_time_bitwise(seed):
+    n, r = 7, 4
+    states, loads = _states_loads(seed, 6, n, r)
+    ref = chunk_on_time(states, loads, MU_G, MU_B, DEADLINE, r)
+    m = packet_on_time(states, loads, MU_G, MU_B, DEADLINE, r, 1,
+                       trace=None, conserve=False)
+    assert m.shape == (6, n * r, 1)
+    np.testing.assert_array_equal(np.asarray(m[..., 0]), np.asarray(ref))
+    # conserve=True at packets=1 is chunk-level work conservation: a strict
+    # SUPERSET of the all-or-nothing mask (chunks that individually meet the
+    # deadline count even when the worker's whole load does not)
+    con = packet_on_time(states, loads, MU_G, MU_B, DEADLINE, r, 1,
+                         trace=None, conserve=True)
+    assert bool(jnp.all(~m | con))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_p1_float_decode_is_coded_matmul_device_bitwise(seed):
+    rng = np.random.default_rng(seed)
+    spec = CodeSpec(n=6, r=2, k=4, deg_f=1)
+    coded = encode_dataset(
+        spec, rng.normal(size=(4, 8, 3)).astype(np.float32)
+    )
+    w = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    on_time = jnp.asarray(rng.random(spec.n * spec.r) < 0.75)
+    ref, ok_ref = coded_matmul_device(coded, w, on_time)
+    out, ok = coded_matmul_packets(coded, w, on_time[:, None])
+    assert ok.shape == (1,)
+    assert bool(ok[0]) == bool(ok_ref)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_p1_exact_gf_decode_is_coded_matmul_exact_bitwise(seed):
+    rng = np.random.default_rng(seed)
+    spec = CodeSpec(n=6, r=2, k=4, deg_f=1)
+    coded = encode_dataset_modp(
+        spec, rng.integers(0, 997, size=(4, 8, 3)).astype(np.int64)
+    )
+    w = rng.integers(0, 997, size=(3,)).astype(np.int64)
+    on_time = jnp.asarray(rng.random(spec.n * spec.r) < 0.75)
+    ref, ok_ref = coded_matmul_exact(coded, w, on_time)
+    out, ok = coded_matmul_exact_packets(coded, w, on_time[:, None])
+    assert bool(ok[0]) == bool(ok_ref)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_per_packet_blocks_match_single_mask_decodes():
+    """Each decodable packet block equals the same rows of a full decode run
+    with that packet's mask — packets decouple row-wise."""
+    rng = np.random.default_rng(0)
+    spec = CodeSpec(n=6, r=2, k=4, deg_f=1)
+    rows, P = 8, 4
+    coded = encode_dataset(
+        spec, rng.normal(size=(4, rows, 3)).astype(np.float32)
+    )
+    w = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    pm = jnp.asarray(rng.random((spec.n * spec.r, P)) < 0.8)
+    out, ok = coded_matmul_packets(coded, w, pm)
+    rp = rows // P
+    for q in range(P):
+        ref_q, ok_q = coded_matmul_device(coded, w, pm[:, q])
+        assert bool(ok[q]) == bool(ok_q)
+        if bool(ok_q):
+            np.testing.assert_array_equal(
+                np.asarray(out[:, q * rp:(q + 1) * rp]),
+                np.asarray(ref_q[:, q * rp:(q + 1) * rp]),
+            )
+
+
+def test_rows_must_divide_into_packets():
+    rng = np.random.default_rng(0)
+    spec = CodeSpec(n=6, r=2, k=4, deg_f=1)
+    coded = encode_dataset(
+        spec, rng.normal(size=(4, 8, 3)).astype(np.float32)
+    )
+    w = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    pm = jnp.ones((spec.n * spec.r, 3), bool)
+    with pytest.raises(ValueError, match="divide"):
+        coded_matmul_packets(coded, w, pm)
+
+
+# ---------------------------------------------------------------------------
+# containment + dominance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_aon_mask_subset_of_conserve_on_any_trace(seed):
+    n, r, P = 7, 4, 4
+    states, loads = _states_loads(seed, 10, n, r)
+    trace = faults.base_trace(10, n, r, P, DEADLINE)
+    trace = faults.apply_channel(
+        jax.random.PRNGKey(seed),
+        faults.make_channel([
+            ("preempt", {"p_preempt": 0.5}),
+            ("packet_bernoulli", {"p_drop": 0.2}),
+        ]),
+        trace,
+    )
+    for tr in (None, trace):
+        aon = packet_on_time(states, loads, MU_G, MU_B, DEADLINE, r, P,
+                             trace=tr, conserve=False)
+        con = packet_on_time(states, loads, MU_G, MU_B, DEADLINE, r, P,
+                             trace=tr, conserve=True)
+        assert bool(jnp.all(~aon | con)), "AON packet missing from conserve"
+
+
+def test_preempted_work_counts_only_under_conserve():
+    """One worker, load 4, preempted at half its round: AON loses everything,
+    conserve keeps the packets finished before the cut."""
+    n, r, P = 1, 4, 4
+    states = jnp.ones((1, n), jnp.int32)
+    loads = jnp.full((1, n), 4)
+    mu = 4.0  # exactly clears 4 chunks by the deadline
+    trace = faults.base_trace(1, n, r, P, DEADLINE)
+    trace = trace._replace(t_cut=jnp.full((1, n), 0.5, jnp.float32))
+    aon = packet_on_time(states, loads, mu, mu, DEADLINE, r, P,
+                         trace=trace, conserve=False)
+    con = packet_on_time(states, loads, mu, mu, DEADLINE, r, P,
+                         trace=trace, conserve=True)
+    assert int(aon.sum()) == 0
+    # chunks 0 and 1 finish by t=0.5: 8 packets survive the preemption
+    assert int(con.sum()) == 8
+
+
+def test_counts_and_layer1():
+    masks = jnp.asarray([[True, False], [True, True], [False, False]])
+    np.testing.assert_array_equal(np.asarray(packet_counts(masks)), [2, 1])
+    counts = jnp.asarray([[3, 1], [2, 2], [1, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(layer1_recovery(counts, 2, 1)), [True, True, False]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(layer1_recovery(counts, 2, 2)), [False, True, False]
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine: dominance under preemption + one compile per signature
+# ---------------------------------------------------------------------------
+
+def _pool(b, n, kstar, ell_g, ell_b):
+    return lea.PoolLoad(
+        kstar=jnp.full((b,), kstar, jnp.int32),
+        ell_g=jnp.full((b,), ell_g, jnp.int32),
+        ell_b=jnp.full((b,), ell_b, jnp.int32),
+        mask=jnp.ones((b, n), bool),
+    )
+
+
+def test_conserve_recovers_strictly_more_rounds_under_preemption():
+    n, r, P, b = 8, 6, 4, 4
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    channel = faults.make_channel([
+        ("preempt", {"p_preempt": jnp.asarray([0.2, 0.3, 0.4, 0.5])}),
+    ])
+    out = faults.sweep_faults(
+        keys, _pool(b, n, 30, 6, 2),
+        jnp.full((b, n), 0.8), jnp.full((b, n), 0.7),
+        MU_G, MU_B, DEADLINE, channel, 15,
+        rounds=128, strategies=("lea", "static"), r=r, packets=P, p1=1,
+    )
+    aon = np.asarray(out.full_aon)
+    con = np.asarray(out.full_conserve)
+    part = np.asarray(out.partial)
+    assert not (aon & ~con).any()
+    assert not (part & con).any()
+    # strict dominance on the same keys, the same traces
+    assert con.sum() > aon.sum()
+    # the hierarchical layer serves additional rounds beyond full decode
+    assert part.sum() > 0
+
+
+def test_fault_grid_compiles_once_per_signature():
+    n, r, P, b = 8, 6, 4, 3
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    kwargs = dict(rounds=32, strategies=("lea",), r=r, packets=P, p1=1)
+
+    def go(p_pre, p_drop, kstar):
+        channel = faults.make_channel([
+            ("preempt", {"p_preempt": jnp.asarray(p_pre)}),
+            ("packet_bernoulli", {"p_drop": jnp.asarray(p_drop)}),
+        ])
+        return faults.sweep_faults(
+            keys, _pool(b, n, kstar, 6, 2),
+            jnp.full((b, n), 0.8), jnp.full((b, n), 0.7),
+            MU_G, MU_B, DEADLINE, channel, 15, **kwargs,
+        )
+
+    c0 = faults.fault_compile_cache_size()
+    go([0.1, 0.2, 0.3], [0.0, 0.1, 0.2], 30)
+    after_first = faults.fault_compile_cache_size() - c0
+    # different channel params, different traced K*: same compile
+    go([0.5, 0.6, 0.7], [0.3, 0.0, 0.4], 25)
+    assert faults.fault_compile_cache_size() - c0 == after_first == 1
+
+
+def test_empty_channel_packets1_aon_matches_throughput_engine():
+    """The fault engine's AON column degenerates to the existing batched
+    engine's success indicators: same loads, same on-time rule."""
+    from repro.core import throughput
+
+    n, r, b = 8, 6, 3
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    pool = _pool(b, n, 30, 6, 2)
+    p_gg = jnp.full((b, n), 0.8)
+    p_bb = jnp.full((b, n), 0.7)
+    out = faults.sweep_faults(
+        keys, pool, p_gg, p_bb, MU_G, MU_B, DEADLINE, (), 15,
+        rounds=64, strategies=("lea", "static"), r=r, packets=1, p1=1,
+    )
+    ref = jax.vmap(
+        lambda k, pl, pg, pb: throughput.simulate_strategies_pool(
+            k, pl, pg, pb, MU_G, MU_B, DEADLINE, 64,
+            strategies=("lea", "static"),
+        )
+    )(keys, pool, p_gg, p_bb)
+    np.testing.assert_array_equal(
+        np.asarray(out.full_aon), np.asarray(ref).astype(bool)
+    )

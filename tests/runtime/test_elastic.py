@@ -1,0 +1,89 @@
+"""Elastic resharding utilities: ``reshard_state`` and ``remap_estimator``
+across grow/shrink/survivor-selection resizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lea
+from repro.runtime.elastic import remap_estimator, reshard_state
+
+
+def _estimator(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return lea.EstimatorState(
+        counts=jnp.asarray(rng.uniform(0, 10, (n, 4)), jnp.float32),
+        prev_state=jnp.asarray(rng.integers(0, 2, n), jnp.int32),
+        seen_prev=jnp.asarray(True),
+    )
+
+
+def test_reshard_state_round_trips_values():
+    state = {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "step": jnp.asarray(7),
+    }
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = jax.tree.map(lambda _: sharding, state)
+    out = reshard_state(state, shardings)
+    assert jax.tree.structure(out) == jax.tree.structure(state)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.sharding == sharding
+
+
+def test_remap_identity_resize_is_a_no_op():
+    est = _estimator(6)
+    out = remap_estimator(est, 6, 6)
+    np.testing.assert_array_equal(np.asarray(out.counts), np.asarray(est.counts))
+    np.testing.assert_array_equal(np.asarray(out.prev_state),
+                                  np.asarray(est.prev_state))
+    assert bool(out.seen_prev) == bool(est.seen_prev)
+
+
+def test_remap_grow_newcomers_get_pooled_prior():
+    est = _estimator(4)
+    out = remap_estimator(est, 4, 7)
+    counts = np.asarray(est.counts)
+    new = np.asarray(out.counts)
+    np.testing.assert_array_equal(new[:4], counts)           # survivors keep history
+    pooled = counts.mean(axis=0)
+    for i in range(4, 7):
+        np.testing.assert_allclose(new[i], pooled, rtol=1e-6)
+        assert int(out.prev_state[i]) == 1                   # newcomers start good
+    np.testing.assert_array_equal(np.asarray(out.prev_state)[:4],
+                                  np.asarray(est.prev_state))
+
+
+def test_remap_shrink_keeps_the_prefix():
+    est = _estimator(8)
+    out = remap_estimator(est, 8, 3)
+    np.testing.assert_array_equal(np.asarray(out.counts),
+                                  np.asarray(est.counts)[:3])
+    np.testing.assert_array_equal(np.asarray(out.prev_state),
+                                  np.asarray(est.prev_state)[:3])
+
+
+def test_remap_with_explicit_survivors_permutes_history():
+    est = _estimator(6)
+    survivors = [5, 0, 3]
+    out = remap_estimator(est, 6, 5, survivors=survivors)
+    counts = np.asarray(est.counts)
+    new = np.asarray(out.counts)
+    np.testing.assert_array_equal(new[:3], counts[survivors])
+    pooled = counts[survivors].mean(axis=0)   # prior pools over SURVIVORS
+    for i in range(3, 5):
+        np.testing.assert_allclose(new[i], pooled, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out.prev_state)[:3],
+                                  np.asarray(est.prev_state)[survivors])
+
+
+def test_remapped_estimator_drives_the_predictor():
+    """The remapped state is a working EstimatorState: predicted_good_prob
+    runs at the new width and survivors keep their predictions."""
+    est = _estimator(5)
+    before = np.asarray(lea.predicted_good_prob(est))
+    out = remap_estimator(est, 5, 8)
+    after = np.asarray(lea.predicted_good_prob(out))
+    assert after.shape == (8,)
+    np.testing.assert_allclose(after[:5], before, rtol=1e-6)

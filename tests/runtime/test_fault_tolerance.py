@@ -1,0 +1,188 @@
+"""Retry/degrade executor: outcome accounting, retries, partial serving,
+elastic resize and checkpoint round-trips (the graceful-degradation layer
+of ``repro.runtime.fault_tolerance``)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.runtime.fault_tolerance import (OUTCOMES, CodedDataParallelExecutor,
+                                           CodedDPConfig)
+
+
+def _grad_fn(params, shard_batch):
+    return {"w": jnp.mean(shard_batch["x"], axis=0)}
+
+
+def _batch(k=16, d=4):
+    return {"x": jnp.arange(k * d, dtype=jnp.float32).reshape(k, d)}
+
+
+PARAMS = {"w": jnp.zeros(4)}
+
+
+def test_every_round_gets_exactly_one_outcome():
+    """The never-silently-drop invariant: outcome counts sum to rounds, and
+    a round returns None iff it was dropped."""
+    cfg = CodedDPConfig(p_gg=0.6, p_bb=0.8, packets=4, max_retries=1,
+                        allow_partial=True)
+    ex = CodedDataParallelExecutor(
+        cfg, _grad_fn, seed=3,
+        channel=faults.make_channel([("preempt", {"p_preempt": 0.4})]),
+    )
+    for _ in range(40):
+        grads, info = ex.round(PARAMS, _batch())
+        assert info["outcome"] in OUTCOMES
+        assert (grads is None) == (info["outcome"] == "dropped")
+    assert ex.rounds == 40
+    assert sum(ex.outcomes.values()) == ex.rounds
+    assert all(v >= 0 for v in ex.outcomes.values())
+
+
+def test_defaults_reproduce_all_or_nothing_executor():
+    """packets=1, no retries, no channel, no partial: the legacy contract —
+    outcomes can only be on_time or dropped, successes counts on_time."""
+    cfg = CodedDPConfig(p_gg=0.7, p_bb=0.7)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    for _ in range(30):
+        ex.round(PARAMS, _batch())
+    assert ex.outcomes["late"] == 0 and ex.outcomes["partial"] == 0
+    assert ex.outcomes["on_time"] + ex.outcomes["dropped"] == 30
+    assert ex.successes == ex.outcomes["on_time"]
+    assert ex.timely_throughput == ex.successes / 30
+
+
+def test_retries_turn_failures_into_late_rounds():
+    """Same seed, same chain: adding retries can only move dropped rounds to
+    late — it never costs an on-time round (coverage accumulates)."""
+    cfg0 = CodedDPConfig(p_gg=0.5, p_bb=0.85)
+    ex0 = CodedDataParallelExecutor(cfg0, _grad_fn, seed=1)
+    for _ in range(30):
+        ex0.round(PARAMS, _batch())
+    cfg1 = CodedDPConfig(p_gg=0.5, p_bb=0.85, max_retries=3, backoff_base=2)
+    ex1 = CodedDataParallelExecutor(cfg1, _grad_fn, seed=1)
+    for _ in range(30):
+        _, info = ex1.round(PARAMS, _batch())
+        if info["outcome"] == "late":
+            assert info["attempts"] > 1
+    assert ex0.outcomes["dropped"] > 0      # the chain is genuinely bad
+    served0 = ex0.outcomes["on_time"]
+    served1 = ex1.outcomes["on_time"] + ex1.outcomes["late"]
+    assert ex1.outcomes["late"] > 0
+    assert served1 > served0
+
+
+def test_partial_serving_requires_allow_partial():
+    """A burst event wipes the packet TAIL fleet-wide: full decode becomes
+    impossible that round while the layer-1 packet prefix still arrives —
+    exactly the rounds allow_partial serves degraded instead of dropping."""
+    kwargs = dict(p_gg=0.9, p_bb=0.3, packets=4, p1=1)
+    ch = faults.make_channel([("burst", {"p_event": 0.3, "frac": 0.5})])
+    ex_no = CodedDataParallelExecutor(
+        CodedDPConfig(**kwargs), _grad_fn, seed=2, channel=ch)
+    ex_yes = CodedDataParallelExecutor(
+        CodedDPConfig(allow_partial=True, **kwargs), _grad_fn, seed=2,
+        channel=ch)
+    for _ in range(40):
+        ex_no.round(PARAMS, _batch())
+        g, info = ex_yes.round(PARAMS, _batch())
+        if info["outcome"] == "partial":
+            assert g is not None
+    assert ex_no.outcomes["partial"] == 0
+    assert ex_yes.outcomes["partial"] > 0
+    # partial rounds are exactly the dropped rounds the layer-1 code saves:
+    # same seed => same faults, and the other dispositions are untouched
+    assert ex_yes.outcomes["on_time"] == ex_no.outcomes["on_time"]
+    assert ex_yes.outcomes["partial"] + ex_yes.outcomes["dropped"] == (
+        ex_no.outcomes["dropped"]
+    )
+
+
+def test_gradient_value_matches_uncoded_mean_whenever_served():
+    cfg = CodedDPConfig(p_gg=0.95, p_bb=0.3)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    batch = _batch()
+    want = np.asarray(jnp.mean(batch["x"].reshape(cfg.k, -1, 4), axis=(0, 1)))
+    for _ in range(10):
+        grads, info = ex.round(PARAMS, batch)
+        if grads is not None:
+            np.testing.assert_allclose(np.asarray(grads["w"]), want, rtol=1e-6)
+
+
+def test_state_dict_roundtrips_outcomes():
+    cfg = CodedDPConfig(p_gg=0.6, p_bb=0.8, packets=2, max_retries=1,
+                        allow_partial=True)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=5)
+    for _ in range(12):
+        ex.round(PARAMS, _batch())
+    d = ex.state_dict()
+    ex2 = CodedDataParallelExecutor(cfg, _grad_fn, seed=99)
+    ex2.load_state_dict(d)
+    assert ex2.outcomes == ex.outcomes
+    assert ex2.rounds == ex.rounds and ex2.successes == ex.successes
+    np.testing.assert_array_equal(np.asarray(ex2.est.counts),
+                                  np.asarray(ex.est.counts))
+
+
+def test_load_state_dict_tolerates_legacy_checkpoints():
+    """Checkpoints written before the outcomes field load with zero counts."""
+    cfg = CodedDPConfig()
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    d = ex.state_dict()
+    del d["outcomes"]
+    ex2 = CodedDataParallelExecutor(cfg, _grad_fn, seed=1)
+    ex2.load_state_dict(d)
+    assert ex2.outcomes == {name: 0 for name in OUTCOMES}
+
+
+def test_mark_dead_feasibility_boundary():
+    cfg = CodedDPConfig(n_workers=5, r=4, k=16)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    assert ex.decode_feasible
+    ex.mark_dead(0)
+    assert ex.decode_feasible          # 4*4 = 16 >= 16
+    ex.mark_dead(1)
+    assert not ex.decode_feasible      # 3*4 = 12 < 16
+
+
+def test_dead_workers_contribute_no_packets():
+    cfg = CodedDPConfig(n_workers=5, r=4, k=16, p_gg=0.99, p_bb=0.01)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    ex.mark_dead(2)
+    mask, loads, _ = ex._attempt()
+    assert not mask[2 * cfg.r:(2 + 1) * cfg.r].any()
+    assert loads[2] == 0
+
+
+def test_resize_grow_keeps_history_and_liveness():
+    cfg = CodedDPConfig(n_workers=5, r=4, k=16)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    for _ in range(5):
+        ex.round(PARAMS, _batch())
+    ex.mark_dead(1)
+    old_counts = np.asarray(ex.est.counts)
+    ex.resize(8)
+    assert ex.cfg.n_workers == 8
+    assert ex.live.shape == (8,)
+    assert not ex.live[1] and ex.live[5:].all()   # newcomers start live
+    np.testing.assert_array_equal(np.asarray(ex.est.counts)[:5], old_counts)
+    g, info = ex.round(PARAMS, _batch())          # still runs after resize
+    assert info["outcome"] in OUTCOMES
+
+
+def test_resize_shrink_with_survivor_selection():
+    cfg = CodedDPConfig(n_workers=8, r=4, k=16)
+    ex = CodedDataParallelExecutor(cfg, _grad_fn, seed=0)
+    for _ in range(5):
+        ex.round(PARAMS, _batch())
+    counts = np.asarray(ex.est.counts)
+    survivors = [6, 2, 4, 0, 7]
+    ex.resize(5, survivors=survivors)
+    assert ex.cfg.n_workers == 5
+    np.testing.assert_array_equal(np.asarray(ex.est.counts),
+                                  counts[survivors])
+    g, info = ex.round(PARAMS, _batch())
+    assert info["outcome"] in OUTCOMES
+    assert sum(ex.outcomes.values()) == ex.rounds

@@ -69,6 +69,7 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
         "sweep_smoke": "BENCH_sweep.json",
         "bench_policies": "BENCH_policies.json",
         "bench_gf": "BENCH_gf.json",
+        "bench_faults": "BENCH_faults.json",
     }
     for name, _, desc in SUITES:
         named = re.findall(r"BENCH_\w+\.json", desc)
@@ -77,6 +78,43 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
             assert os.path.exists(os.path.join(_ROOT, writers[name])), name
         else:
             assert not named, f"{name} blurb names a manifest it never writes"
+
+
+def test_bench_faults_is_a_registered_target_and_listed():
+    from benchmarks.run import SUITES
+
+    names = [name for name, _, _ in SUITES]
+    assert "bench_faults" in names
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    assert "bench_faults" in proc.stdout and "BENCH_faults.json" in proc.stdout
+
+
+def test_committed_bench_faults_manifest_shape_and_invariants():
+    """BENCH_faults.json is a committed artifact: the decode-mode dominance
+    and executor-accounting acceptance results must hold in the committed
+    numbers, not just in a fresh run.  rows/sec is machine-dependent and
+    follows the soft-gate convention, so only its presence is pinned."""
+    import json
+
+    with open(os.path.join(_ROOT, "BENCH_faults.json")) as f:
+        doc = json.load(f)
+    assert doc["bench"] == "bench_faults"
+    assert doc["family"] == "packet_erasure"
+    assert doc["conserve_contains_aon"] is True
+    assert doc["conserve_gain_rounds"] > 0
+    # the whole fault grid fuses into one compiled computation
+    assert doc["family_compiles"] == {"packet_erasure": 1}
+    assert doc["rows_per_sec"] > 0
+    # executor accounting: every round in exactly one disposition
+    outcomes = doc["executor_outcomes"]
+    assert set(outcomes) == {"on_time", "late", "partial", "dropped"}
+    assert sum(outcomes.values()) == doc["executor_rounds"]
+    assert doc["executor_outcomes_sum_ok"] is True
+    for cell in doc["results"]:
+        # containment, cell by cell, in the committed rates
+        assert cell["recovered_conserve"] >= cell["recovered_aon"]
+        assert 0.0 <= cell["served_any"] <= 1.0
 
 
 def test_committed_bench_gf_manifest_shape_and_flags():
