@@ -7,7 +7,7 @@ Usage:
   python -m benchmarks.run --list          # print registered targets + blurbs
 
 Exit code 0 is the CI smoke gate: every requested suite must produce its
-rows without raising.  Five targets additionally refresh a manifest at the
+rows without raising.  Six targets additionally refresh a manifest at the
 repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
 ``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
 ``BENCH_sweep.json`` (with a soft rows/sec regression check against the
@@ -17,7 +17,9 @@ committed baseline), ``bench_policies`` -> ``BENCH_policies.json``
 >= 5x acceptance on the exact coded round) and ``bench_faults`` ->
 ``BENCH_faults.json`` (packet-erasure grid: partial-work-conserving decode
 vs all-or-nothing under shared fault traces, retry/degrade outcome
-accounting).
+accounting) and ``bench_serving`` -> ``BENCH_serving.json`` (streaming
+serving grid: latency percentiles, served-requests/sec and the
+admission-control-vs-admit-all gain at overload).
 """
 
 import sys
@@ -43,6 +45,9 @@ SUITES = [
     ("bench_faults", "bench_faults",
      "fault-injection gate: packet erasure grid, conserve vs all-or-nothing, "
      "retry/degrade accounting; writes BENCH_faults.json"),
+    ("bench_serving", "bench_serving",
+     "streaming serving gate: arrival grid, latency percentiles, admission "
+     "control vs admit-all at overload; writes BENCH_serving.json"),
     ("bench_kernels", "bench_kernels",
      "Pallas-kernel + XLA-path microbenchmarks"),
     ("bench_allocator", "bench_allocator",

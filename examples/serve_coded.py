@@ -1,27 +1,44 @@
 """Online coded-computation service (the paper's EC2 workload, Sec. 6.2):
-linear requests f_m(X_j) = X_j^T B_m arrive with shift-exponential gaps and a
+linear requests f_m(X_j) = X_j^T b_m arrive with shift-exponential gaps and a
 hard per-round deadline; the service uses LEA to allocate worker loads and
 decodes each round from the K* fastest results.
 
     PYTHONPATH=src python examples/serve_coded.py
+
+Two stages, both on the batched engine (the seed-era per-round host loop —
+eager estimator updates, a hand-built on-time chunk mask — is gone):
+
+  1. OFFLINE: one ``throughput.rollout`` samples the trajectory and every
+     round's LEA loads, ``chunk_on_time`` derives every round's erasure
+     pattern in one vectorised call, and a few served rounds are decoded
+     EXACTLY over GF(2^31 - 1) with ``coded_matmul_exact`` and checked
+     against the numpy mod-p oracle bit for bit (k = 50 is far beyond
+     float-decode conditioning — the paper's protocol is finite-field).
+  2. STREAMING: ``repro.serving.simulate_serving`` runs the same pool as an
+     online service — shift-exponential arrivals feed a device-resident
+     request queue, EDF water-filling splits the workers across in-flight
+     requests, and admission control sheds requests the pool would miss —
+     one compiled ``lax.scan``, full per-request accounting.
+
+Smoke knob: REPRO_EXAMPLE_ROUNDS overrides the round count (CI gate).
 """
 
-import time
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CodeSpec, LoadParams, allocate, coded_matmul,
-                        encode_dataset, init_estimator, predicted_good_prob,
-                        round_success, update_estimator)
-from repro.core.markov import initial_states, step_states
+from repro import serving
+from repro.core import (FIELD_P, CodeSpec, LoadParams, chunk_on_time,
+                        coded_matmul_exact, encode_dataset_modp, matmul_modp)
+from repro.core import throughput
 
 N, R, K = 15, 10, 50              # paper Sec. 6.2, scenario 5/6 scale (k=50)
 MU_G, MU_B, D = 10.0, 1.0, 6.0    # 10x credit gap (Fig. 1), d=6s
 P_GG, P_BB = 0.85, 0.6
-ROUNDS = 40
-T_C, LAM = 0.0, 0.02              # arrival gap (scaled down for the demo)
+ROUNDS = int(os.environ.get("REPRO_EXAMPLE_ROUNDS", "200"))
+T_C, MEAN = 0.2, 0.8              # shift-exp arrival gaps, in round units
 
 spec = CodeSpec(N, R, K, deg_f=1)
 lp = LoadParams(n=N, kstar=spec.recovery_threshold,
@@ -29,37 +46,65 @@ lp = LoadParams(n=N, kstar=spec.recovery_threshold,
 print(f"service: n={N} workers, K*={lp.kstar}, loads ({lp.ell_g}/{lp.ell_b})")
 
 rng = np.random.default_rng(0)
-x_chunks = jnp.asarray(rng.normal(size=(K, 6, 32)), jnp.float32)
-coded = encode_dataset(spec, x_chunks)
+x_int = rng.integers(0, FIELD_P, size=(K, 6, 32), dtype=np.int64)
+coded = encode_dataset_modp(spec, jnp.asarray(x_int, jnp.int32))
 
-key = jax.random.PRNGKey(0)
-key, k0 = jax.random.split(key)
-states = initial_states(k0, jnp.full((N,), P_GG), jnp.full((N,), P_BB))
-est = init_estimator(N)
-served = 0
-t_start = time.time()
+# -- 1. offline: one rollout, every round's loads + erasure patterns --------
+p_gg, p_bb = jnp.full((N,), P_GG), jnp.full((N,), P_BB)
+states, loads, feasible = throughput.rollout(
+    jax.random.PRNGKey(0), lp, p_gg, p_bb, ROUNDS, strategies=("lea",),
+)
+success = throughput.score_rollout(states, loads, feasible, lp,
+                                   MU_G, MU_B, D)               # (M, 1)
+on_time = np.asarray(chunk_on_time(states, loads, MU_G, MU_B, D, R))
+served = int(np.asarray(success)[:, 0].sum())
+
+# decode a few served rounds exactly and check the numpy mod-p oracle
+exact_jit = jax.jit(lambda b, m: coded_matmul_exact(coded, b, m))
+checked = 0
 for m in range(ROUNDS):
-    time.sleep(min(T_C + rng.exponential(LAM), 0.1))      # request arrival
-    b_m = jnp.asarray(rng.normal(size=(32,)), jnp.float32)  # round input
-    key, k1 = jax.random.split(key)
-    states = step_states(k1, states, jnp.full((N,), P_GG), jnp.full((N,), P_BB))
-    p_good = jnp.where(est.seen_prev, predicted_good_prob(est), jnp.full((N,), 0.5))
-    loads, _ = allocate(p_good, lp)
-    if bool(round_success(loads, states, lp, MU_G, MU_B, D)):
-        ln, st = np.asarray(loads), np.asarray(states)
-        on_time = np.zeros(spec.nr, bool)
-        for i in range(N):
-            done = ln[i] if (st[i] == 1 or ln[i] <= lp.ell_b) else 0
-            on_time[i * R: i * R + done] = True
-        out = coded_matmul(coded, b_m, on_time)
-        served += 1
-        status = "served"
-    else:
-        status = "MISSED DEADLINE"
-    est = update_estimator(est, states)
-    if m < 5 or m % 10 == 0:
-        print(f"round {m:3d}: {status}")
+    if not bool(success[m, 0]):
+        continue
+    b_int = rng.integers(0, FIELD_P, size=(32,), dtype=np.int64)
+    out, ok = exact_jit(jnp.asarray(b_int, jnp.int32),
+                        jnp.asarray(on_time[0, m]))
+    want = np.stack([matmul_modp(x_int[j], b_int.reshape(-1, 1))[:, 0]
+                     for j in range(K)])
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), want)
+    checked += 1
+    if checked >= 4:
+        break
+print(f"decode : {checked} served rounds decoded from K*={lp.kstar} "
+      f"fastest results over GF(p), bit-exact vs the numpy oracle")
 print(f"timely computation throughput: {served/ROUNDS:.3f} "
-      f"({served}/{ROUNDS} rounds, {time.time()-t_start:.1f}s wall)")
+      f"({served}/{ROUNDS} rounds)")
 assert served / ROUNDS > 0.5
+
+# -- 2. streaming: the same pool as an online service -----------------------
+process = serving.make_process("shift_exp", t_const=T_C, mean=MEAN)
+req = serving.RequestSpec(
+    kstar=lp.kstar, ell_g=lp.ell_g, ell_b=lp.ell_b,
+    deadline_rel=1,            # finish by the round after arrival
+    admit_threshold=0.5, reserve_cap=1.0,
+)
+out = serving.simulate_serving(
+    jax.random.PRNGKey(0), jnp.ones((N,), bool), p_gg, p_bb,
+    MU_G, MU_B, D, req, process,
+    rounds=ROUNDS, strategies=("lea",), capacity=4,
+)
+arr = int(out.arrivals[0])
+adm = int(out.admitted[0])
+on_t = int(out.served_on_time[0])
+lat = np.asarray(out.sojourn)[0][np.asarray(out.events)[0] != 0]
+print(f"stream : {arr} arrivals (shift-exp gaps {T_C}+Exp({MEAN}) rounds), "
+      f"{adm} admitted, {on_t} served on time, "
+      f"{int(out.rejected[0])} shed by admission")
+print(f"stream : service throughput {on_t/max(arr, 1):.3f}, "
+      f"median sojourn {np.median(lat) if lat.size else 0:.0f} round(s)")
+# every request ends in exactly one disposition
+assert arr == adm + int(out.rejected[0])
+assert adm == (on_t + int(out.served_late[0]) + int(out.expired[0])
+               + int(out.in_flight[0]))
+assert on_t > 0
 print("OK")

@@ -355,6 +355,105 @@ def allocate_masked(
     return loads, i_star, jnp.broadcast_to(feasible, i_star.shape)
 
 
+def allocate_queue(
+    p_good: jnp.ndarray,
+    pool_mask: jnp.ndarray,
+    active: jnp.ndarray,
+    kstar: jnp.ndarray,
+    ell_g: jnp.ndarray,
+    ell_b: jnp.ndarray,
+    order: jnp.ndarray,
+    *,
+    impl: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Split ONE worker pool across the active slots of a request queue.
+
+    The multi-job extension of :func:`allocate_masked` (repro.serving):
+    greedy EDF water-filling over the pool's descending-p_good ranks.  Each
+    active slot j has its own traced (kstar, ell_g, ell_b); ``order`` is a
+    (Q,) slot permutation in priority (EDF) order.  Walking slots in that
+    order, slot j is handed a contiguous SEGMENT of the rank-sorted pool:
+    at least its minimal feasible worker count ``m_j = ceil(kstar_j /
+    ell_g_j)``, plus every worker not reserved by the minimal demands of
+    the lower-priority slots behind it — so the most urgent slot absorbs
+    all surplus redundancy and each segment then gets its own
+    :func:`allocate_masked` two-level assignment (ONE batched DP over the
+    Q segments).
+
+    Args:
+      p_good: (n,) predicted good probabilities (raw, not demoted).
+      pool_mask: (n,) bool — True = real worker (padding excluded).
+      active: (Q,) bool — which queue slots hold a live request.
+      kstar/ell_g/ell_b: (Q,) int32 per-slot traced load parameters.
+      order: (Q,) int32 permutation of slots, highest priority first.
+        Inactive slots may appear anywhere (they demand and receive
+        nothing).
+
+    Returns ``(loads, i_star, feasible)``, all in ORIGINAL slot order:
+
+      * ``loads`` (Q, n) int32 — per-slot worker assignment; segments are
+        disjoint, zero outside a slot's segment and for inactive slots;
+      * ``i_star`` (Q,) — each segment's argmax prefix (1-based);
+      * ``feasible`` (Q,) bool — False where a slot's segment cannot reach
+        its kstar (``kstar > segment_size * ell_g``: the pool is
+        oversubscribed and the shortfall is EXPLICIT, never silent).
+        Inactive slots read False (their empty segment is the degenerate
+        all-masked row).
+
+    With ONE active slot the segment is the entire valid pool, so the
+    result is bit-identical to :func:`allocate_masked` on the full pool —
+    the degenerate case that reduces the serving engine to the single-job
+    engine.
+    """
+    n = p_good.shape[-1]
+    q = active.shape[-1]
+    # worker ranks over the FULL pool, exactly allocate_masked's demotion
+    p_eff = jnp.where(pool_mask, p_good, -1.0)
+    if n <= _PAIRWISE_RANK_MAX_N:
+        ranks = _ranks_descending(p_eff)
+    else:
+        ranks = jnp.argsort(jnp.argsort(-p_eff, axis=-1), axis=-1)
+    n_valid = jnp.sum(pool_mask.astype(jnp.int32), axis=-1)
+
+    # per-slot quantities in priority order
+    act_e = jnp.take(active, order)
+    ks_e = jnp.take(kstar, order).astype(jnp.int32)
+    eg_e = jnp.take(ell_g, order).astype(jnp.int32)
+    eb_e = jnp.take(ell_b, order).astype(jnp.int32)
+    m_e = jnp.where(act_e, -((-ks_e) // jnp.maximum(eg_e, 1)), 0)  # ceil-div
+    # minimal demand of the slots BEHIND priority position j
+    reserve_after = jnp.flip(jnp.cumsum(jnp.flip(m_e))) - m_e
+
+    starts, sizes = [], []
+    remaining = n_valid
+    for j in range(q):
+        want = jnp.maximum(m_e[j], remaining - reserve_after[j])
+        size = jnp.where(act_e[j], jnp.clip(want, 0, remaining), 0)
+        starts.append(n_valid - remaining)
+        sizes.append(size)
+        remaining = remaining - size
+    starts_e = jnp.stack(starts)                                   # (Q,)
+    sizes_e = jnp.stack(sizes)
+
+    seg = (
+        (ranks[None, :] >= starts_e[:, None])
+        & (ranks[None, :] < (starts_e + sizes_e)[:, None])
+        & pool_mask[None, :]
+        & act_e[:, None]
+    )                                                              # (Q, n)
+    loads_e, i_star_e, feas_e = allocate_masked(
+        jnp.broadcast_to(p_good, (q, n)),
+        PoolLoad(kstar=ks_e, ell_g=eg_e, ell_b=eb_e, mask=seg),
+        impl=impl,
+    )
+    inv = jnp.argsort(order)                                       # unpermute
+    return (
+        jnp.take(loads_e, inv, axis=0),
+        jnp.take(i_star_e, inv),
+        jnp.take(feas_e, inv),
+    )
+
+
 def success_prob_bruteforce(p_good_sorted: jnp.ndarray, lp: LoadParams, i_tilde: int) -> float:
     """Reference implementation of eq. (8) by exponential enumeration (tests)."""
     import itertools

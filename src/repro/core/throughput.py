@@ -554,6 +554,48 @@ def rollout_pool(
     return _rollout_impl(key, pool, p_gg, p_bb, rounds, strategies)
 
 
+@partial(jax.jit, static_argnames=("strategies", "rounds"))
+def serve_rollout(
+    key: jax.Array,
+    mask: jnp.ndarray,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    strategies: tuple[str, ...] = ("lea",),
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Trajectory + per-policy predicted p_good rows for ``repro.serving``.
+
+    The serving layer allocates per QUEUE SLOT (its own traced K*/ell per
+    request), so unlike :func:`rollout_pool` there is no single pool-wide
+    load allocation to return — just the engine preamble: ``(states (M, n),
+    p_alloc (A, M, n))`` on exactly the PRNG discipline of the offline
+    engine (same ``split(key)``, same masked trajectory, same policy-stream
+    ``fold_in``), so a degenerate one-job-per-round serving run replays
+    :func:`simulate_strategies_pool` bit-for-bit.
+
+    ``strategies`` must be registered POLICY names, unique: the serving
+    loop allocates from predictions every round, so the static draw
+    strategies (which never produce a p_good trajectory) are rejected
+    explicitly rather than silently served a default.
+    """
+    _check_strategies(strategies)
+    if tuple(strategies) != allocator_strategies(strategies):
+        raise ValueError(
+            f"serve_rollout strategies must be unique policy names (no "
+            f"static draws {STATIC_STRATEGIES}): got {strategies!r}"
+        )
+    _check_chain_shapes(p_gg, p_bb, rounds)
+    # split exactly like _simulate_impl: k_rounds feeds the static-draw
+    # chains there and is deliberately unused here, which keeps k_traj (and
+    # therefore the trajectory) identical to the offline engine's
+    k_traj, _k_rounds = jax.random.split(key)
+    states = markov.sample_trajectory(
+        k_traj, p_gg, p_bb, rounds, worker_mask=mask
+    )
+    p_alloc = _p_good_rows(states, p_gg, p_bb, tuple(strategies), key)
+    return states, p_alloc
+
+
 def score_rollout(
     states: jnp.ndarray,
     loads: jnp.ndarray,

@@ -1,0 +1,44 @@
+"""repro.serving — streaming coded-serving over the batched engine.
+
+The paper maximizes timely throughput for a SINGLE job on a fixed grid of
+rounds; this package turns that offline engine into an online service
+simulator: a continuous arrival process of requests — each with its own
+recovery threshold, loads and deadline — competes for one worker pool
+(cf. *Stream Distributed Coded Computing*, arXiv 2103.01921, and the
+load-adaptive redundancy of *Slack Squeeze Coded Computing*, arXiv
+1904.07098):
+
+  * :mod:`~repro.serving.arrivals`  — registered arrival processes
+    (Poisson, shift-exponential — the paper Sec. 6.2 model, MMPP bursts,
+    constant) sampled as batched device-resident count streams on a
+    dedicated PRNG tag;
+  * :mod:`~repro.serving.queue`     — a fixed-capacity mask-padded
+    :class:`RequestQueue` pytree with EDF/FIFO ordering and slot
+    recycling as pure ``lax`` updates;
+  * :mod:`~repro.serving.admission` — predicted-feasibility and
+    capacity-reservation admission gates (both traced, so admit-all and
+    controlled runs share one compile);
+  * :mod:`~repro.serving.engine`    — the compiled ``lax.scan`` serving
+    loop: multi-job EDF water-filling allocation
+    (:func:`repro.core.lea.allocate_queue`), engine-rule scoring,
+    optional time-axis fault channels, and full per-request accounting
+    (:class:`ServingOutcomes` + sojourn streams for latency percentiles).
+"""
+
+from .admission import admission_room, minimal_demand, predicted_success
+from .arrivals import (arrival_key, make_process, process_names,
+                       register_process, sample_arrivals)
+from .engine import (EVENT_EXPIRED, EVENT_LATE, EVENT_NONE, EVENT_ON_TIME,
+                     ServingOutcomes, serving_compile_cache_size,
+                     simulate_serving, sweep_serving)
+from .queue import (ADMIT_ALL_CAP, RequestQueue, RequestSpec, admit,
+                    edf_order, empty_queue, release)
+
+__all__ = [
+    "ADMIT_ALL_CAP", "EVENT_EXPIRED", "EVENT_LATE", "EVENT_NONE",
+    "EVENT_ON_TIME", "RequestQueue", "RequestSpec", "ServingOutcomes",
+    "admission_room", "admit", "arrival_key", "edf_order", "empty_queue",
+    "make_process", "minimal_demand", "predicted_success", "process_names",
+    "register_process", "release", "sample_arrivals",
+    "serving_compile_cache_size", "simulate_serving", "sweep_serving",
+]

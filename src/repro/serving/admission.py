@@ -1,0 +1,97 @@
+"""Admission control: shed load the service would miss anyway.
+
+Two traced gates, both riding in :class:`repro.serving.queue.RequestSpec`
+so an admit-all run and a controlled run share ONE compiled computation:
+
+  * the PREDICTION gate — :func:`predicted_success` evaluates the policy's
+    p_good row through the same best-prefix Poisson-binomial machinery the
+    allocator uses (``success_prob_all_prefixes`` over the full pool), and
+    a request is admitted only when that predicted feasibility clears
+    ``admit_threshold``;
+  * the CAPACITY gate — :func:`admission_room` bounds how many newcomers
+    fit before the queue's summed minimal worker demand (each slot's
+    ``ceil(kstar / ell_g)``) exceeds ``reserve_cap * n_valid`` workers,
+    so doomed requests never steal the minimal segments that feasible
+    ones need (the EDF water-filling hands every active slot its minimal
+    demand first — see :func:`repro.core.lea.allocate_queue`).
+
+Both gates are precomputable outside the serving scan (the prediction
+gate) or one cheap reduction inside it (the capacity gate); neither
+branches, so admit-all (threshold 0, cap huge) pays nothing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lea as lea_mod
+
+
+def predicted_success(
+    p_alloc: jnp.ndarray,
+    pool_mask: jnp.ndarray,
+    kstar,
+    ell_g,
+    ell_b,
+    *,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """Best-prefix predicted success probability of a fresh request.
+
+    ``p_alloc`` is (..., n) predicted p_good (any leading batch axes — the
+    engine passes (A, M, n) policy rows); ``pool_mask`` (n,) bool; the
+    request's ``kstar``/``ell_g``/``ell_b`` broadcast against the leading
+    axes.  Returns (...,) = max over prefixes of the Poisson-binomial
+    success probability on the FULL pool — i.e. the probability the
+    allocator's own objective assigns to the request if it were granted
+    the whole pool, ONE batched DP for every (policy, round) row.
+    """
+    n = p_alloc.shape[-1]
+    mask = jnp.broadcast_to(pool_mask, p_alloc.shape)
+    # demote padding exactly like allocate_masked, sort, pad the DP with
+    # identity Bernoullis past the valid pool
+    p_eff = jnp.where(mask, p_alloc, -1.0)
+    if n <= lea_mod._PAIRWISE_RANK_MAX_N:
+        ranks = lea_mod._ranks_descending(p_eff)
+        p_sorted = lea_mod._take_by_rank(p_eff, ranks)
+    else:
+        p_sorted = jnp.take_along_axis(
+            p_eff, jnp.argsort(-p_eff, axis=-1), axis=-1
+        )
+    n_valid = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    pos = jnp.arange(n)
+    p_dp = jnp.where(pos < n_valid[..., None], p_sorted, 0.0)
+    w = lea_mod.prefix_thresholds_traced(kstar, ell_g, ell_b, n_valid, n)
+    from repro.kernels.poisson_binomial import success_tails
+
+    probs = success_tails(p_dp, jnp.broadcast_to(w, p_dp.shape), impl=impl)
+    return jnp.max(probs, axis=-1)
+
+
+def minimal_demand(occupied, kstar, ell_g) -> jnp.ndarray:
+    """Summed minimal worker demand of the occupied slots: sum of
+    ``ceil(kstar / ell_g)`` (exact int32 ceil-div, 0 for free slots)."""
+    occupied = jnp.asarray(occupied)
+    ks = jnp.asarray(kstar, jnp.int32)
+    eg = jnp.maximum(jnp.asarray(ell_g, jnp.int32), 1)
+    return jnp.sum(jnp.where(occupied, -((-ks) // eg), 0), axis=-1)
+
+
+def admission_room(
+    m_active: jnp.ndarray,
+    m_new: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    reserve_cap: jnp.ndarray,
+) -> jnp.ndarray:
+    """How many newcomers (minimal demand ``m_new`` each) the capacity gate
+    admits on top of ``m_active`` already-reserved workers.
+
+    The worker budget is ``floor(reserve_cap * n_valid)``, clipped so a
+    disabled gate (``reserve_cap`` huge) never overflows int32.
+    """
+    budget = jnp.clip(
+        jnp.asarray(reserve_cap, jnp.float32) * n_valid, 0.0, 2.0**30
+    ).astype(jnp.int32)
+    return jnp.maximum(budget - m_active, 0) // jnp.maximum(
+        jnp.asarray(m_new, jnp.int32), 1
+    )

@@ -1,0 +1,194 @@
+"""Registered arrival processes: batched device-resident request streams.
+
+An arrival process turns one PRNG key into a ``(rounds,) int32`` vector of
+per-round request counts.  Every process is a NamedTuple pytree — TRACED
+array parameters, static structure — with a ``sample(key, rounds)`` method
+that is a pure function of its key, mirroring the ``repro.faults`` injector
+convention:
+
+  * vmapping the serving engine over a batch of processes with the SAME
+    structure but different (traced) rates fuses a whole arrival-rate grid
+    into one compiled computation (the ``repro.sweeps`` convention);
+  * the arrival stream is keyed off :func:`arrival_key` — a dedicated
+    ``fold_in`` tag on the simulation key — so arrival randomness never
+    perturbs the trajectory / round-draw / policy streams the offline
+    engine derives from the same key.  A zero-arrival serving run is
+    therefore bit-identical to the idle engine (property-tested in
+    tests/serving/).
+
+Built-ins:
+
+  ``constant``   — exactly ``per_round`` requests every round (consumes no
+                   randomness; the degenerate one-job-per-round stream).
+  ``poisson``    — iid Poisson(rate) counts per round.
+  ``shift_exp``  — shift-exponential inter-arrival gaps, the paper's
+                   Sec. 6.2 request model: gap = t_const + Exp(mean) in
+                   round units, event times binned into rounds.
+  ``mmpp``       — Markov-modulated Poisson (bursty): a 2-state calm/burst
+                   chain modulates the per-round Poisson rate.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.markov import sample_trajectory_from
+
+# fold_in tag separating the arrival-process PRNG stream from the engine's
+# trajectory / round-key / policy / fault streams (cf. faults._FAULT_KEY_TAG)
+_ARRIVAL_KEY_TAG = 0x5BD1E995 % (2**31)
+
+# shift_exp materialises at most this many events per simulated round; a
+# stream denser than this (mean gap << 1/density rounds) is truncated
+_SHIFT_EXP_DENSITY = 8
+
+
+def arrival_key(key: jax.Array) -> jax.Array:
+    """The arrival-stream root for a simulation key.
+
+    Derived by ``fold_in`` with a dedicated tag so request arrivals never
+    collide with the trajectory, round-draw, policy or fault streams split
+    from the same simulation key.
+    """
+    return jax.random.fold_in(key, _ARRIVAL_KEY_TAG)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_PROCESSES: dict[str, type] = {}
+
+
+def register_process(name: str):
+    """Decorator: register an arrival-process class under ``name``."""
+
+    def deco(cls):
+        if name in _PROCESSES:
+            raise ValueError(f"arrival process {name!r} already registered")
+        _PROCESSES[name] = cls
+        cls.process_name = name
+        return cls
+
+    return deco
+
+
+def process_names() -> tuple[str, ...]:
+    return tuple(sorted(_PROCESSES))
+
+
+def make_process(name: str, **params):
+    """Build a registered arrival process from keyword parameters."""
+    if name not in _PROCESSES:
+        raise KeyError(
+            f"unknown arrival process {name!r}; available: "
+            f"{', '.join(process_names())}"
+        )
+    return _PROCESSES[name](**params)
+
+
+def sample_arrivals(key: jax.Array, process, rounds: int) -> jnp.ndarray:
+    """(rounds,) int32 per-round request counts on the dedicated stream.
+
+    ``key`` is the SIMULATION key — the dedicated :func:`arrival_key`
+    stream is derived here, so callers never thread a separate key.
+    """
+    return process.sample(arrival_key(key), rounds).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# built-in processes
+# ---------------------------------------------------------------------------
+
+
+@register_process("constant")
+class Constant(NamedTuple):
+    """Exactly ``per_round`` requests every round (no randomness consumed).
+
+    ``per_round = 1`` is the degenerate stream that reduces the serving
+    engine to the offline single-job engine; ``per_round = 0`` is the idle
+    stream of the zero-arrival bit-identity property.
+    """
+
+    per_round: jnp.ndarray = 1
+
+    def sample(self, key: jax.Array, rounds: int) -> jnp.ndarray:
+        del key
+        return jnp.broadcast_to(
+            jnp.asarray(self.per_round, jnp.int32), (rounds,)
+        )
+
+
+@register_process("poisson")
+class Poisson(NamedTuple):
+    """iid Poisson(rate) request counts per round."""
+
+    rate: jnp.ndarray
+
+    def sample(self, key: jax.Array, rounds: int) -> jnp.ndarray:
+        lam = jnp.asarray(self.rate, jnp.float32)
+        return jax.random.poisson(key, lam, (rounds,)).astype(jnp.int32)
+
+
+@register_process("shift_exp")
+class ShiftExp(NamedTuple):
+    """Shift-exponential inter-arrival gaps (paper Sec. 6.2's model).
+
+    Successive gaps are ``t_const + Exp(mean)`` in ROUND units; the event
+    times (their running sum) are binned into rounds.  A static budget of
+    ``_SHIFT_EXP_DENSITY * rounds`` events is materialised — streams denser
+    than that (mean rate above ~8 requests/round) are truncated, which is
+    far past any serviceable load for the pools this repo simulates.
+    """
+
+    t_const: jnp.ndarray = 0.0
+    mean: jnp.ndarray = 1.0
+
+    def sample(self, key: jax.Array, rounds: int) -> jnp.ndarray:
+        max_events = _SHIFT_EXP_DENSITY * rounds
+        t_c = jnp.asarray(self.t_const, jnp.float32)
+        mean = jnp.asarray(self.mean, jnp.float32)
+        gaps = t_c + mean * jax.random.exponential(key, (max_events,))
+        times = jnp.cumsum(gaps)
+        idx = jnp.floor(times).astype(jnp.int32)
+        valid = idx < rounds
+        counts = jnp.zeros((rounds,), jnp.int32)
+        return counts.at[jnp.clip(idx, 0, rounds - 1)].add(
+            valid.astype(jnp.int32)
+        )
+
+
+@register_process("mmpp")
+class MMPP(NamedTuple):
+    """Markov-modulated Poisson process: bursty arrivals.
+
+    A 2-state calm/burst chain (starting calm) modulates the per-round
+    Poisson rate between ``rate_lo`` and ``rate_hi`` — the bursty-traffic
+    regime where admission control earns its keep.  ``p_stay_lo`` /
+    ``p_stay_hi`` are the chain's self-transition probabilities.
+    """
+
+    rate_lo: jnp.ndarray
+    rate_hi: jnp.ndarray
+    p_stay_lo: jnp.ndarray = 0.9
+    p_stay_hi: jnp.ndarray = 0.7
+
+    def sample(self, key: jax.Array, rounds: int) -> jnp.ndarray:
+        k_chain, k_counts = jax.random.split(key)
+        # reuse the worker-chain sampler with n=1: state 1 = calm
+        calm = sample_trajectory_from(
+            k_chain,
+            jnp.asarray(self.p_stay_lo, jnp.float32),
+            jnp.asarray(self.p_stay_hi, jnp.float32),
+            rounds,
+            jnp.ones((1,), jnp.int32),
+        )[:, 0]                                            # (rounds,)
+        lam = jnp.where(
+            calm == 1,
+            jnp.asarray(self.rate_lo, jnp.float32),
+            jnp.asarray(self.rate_hi, jnp.float32),
+        )
+        return jax.random.poisson(k_counts, lam).astype(jnp.int32)

@@ -1,0 +1,133 @@
+"""Fixed-capacity, mask-padded, device-resident request queue.
+
+The queue is a NamedTuple pytree of (Q,) arrays — per-slot traced load
+parameters, absolute deadline, arrival round and a validity (``occupied``)
+mask — and every operation (admit, EDF ordering, slot recycling) is a pure
+``jnp``/``lax`` update, so the whole serving loop stays inside one compiled
+``lax.scan`` (:mod:`repro.serving.engine`).  The conventions mirror the
+PR-5 mask-padded pools: a free slot is padding — it demands nothing,
+receives nothing, and its parameter entries are ignored.
+
+Ordering is EDF with FIFO tie-breaks: earliest absolute deadline first,
+ties by arrival round, remaining ties by slot index (two stable argsorts —
+``jnp.argsort`` is always stable).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# sort key for empty slots: past any reachable deadline / arrival round
+_EMPTY_SLOT_KEY = jnp.int32(2**30)
+
+
+class RequestSpec(NamedTuple):
+    """Per-round request parameters (traced; scalars broadcast over rounds).
+
+    Every arrival in round t enters the queue with round t's row of these:
+
+      * ``kstar`` / ``ell_g`` / ``ell_b`` — the request's own recovery
+        threshold and two-level loads (a queue slot is a PR-5 row);
+      * ``deadline_rel``     — lifetime in rounds: a request arriving in
+        round t is on time iff it completes by round t + deadline_rel;
+      * ``admit_threshold``  — admission control: admit only when the
+        policy's predicted best-prefix success probability for this spec
+        on the full pool is at least this (0.0 = no prediction gate);
+      * ``reserve_cap``      — admission control: admit only while the
+        summed minimal worker demand of the queue (incl. the newcomer)
+        stays within ``reserve_cap * n_valid`` workers (huge = no
+        capacity gate).  :data:`ADMIT_ALL` disables both gates.
+    """
+
+    kstar: jnp.ndarray
+    ell_g: jnp.ndarray
+    ell_b: jnp.ndarray
+    deadline_rel: jnp.ndarray = 0
+    admit_threshold: jnp.ndarray = 0.0
+    reserve_cap: jnp.ndarray = 2.0**20
+
+
+# reserve_cap value that disables the capacity gate for any reachable pool
+ADMIT_ALL_CAP = 2.0**20
+
+
+class RequestQueue(NamedTuple):
+    """One round's queue state: (Q,) per-slot arrays, ``occupied`` the mask."""
+
+    occupied: jnp.ndarray      # (Q,) bool — True = live request
+    kstar: jnp.ndarray         # (Q,) int32
+    ell_g: jnp.ndarray         # (Q,) int32
+    ell_b: jnp.ndarray         # (Q,) int32
+    deadline_abs: jnp.ndarray  # (Q,) int32 — last on-time completion round
+    arrival: jnp.ndarray       # (Q,) int32 — admission round
+
+    @property
+    def capacity(self) -> int:
+        """The static queue capacity Q (it is a shape)."""
+        return self.occupied.shape[-1]
+
+
+def empty_queue(capacity: int) -> RequestQueue:
+    """An all-free queue of ``capacity`` slots."""
+    z = jnp.zeros((capacity,), jnp.int32)
+    return RequestQueue(
+        occupied=jnp.zeros((capacity,), bool),
+        kstar=z, ell_g=z, ell_b=z, deadline_abs=z, arrival=z,
+    )
+
+
+def admit(
+    queue: RequestQueue,
+    t,
+    count,
+    kstar,
+    ell_g,
+    ell_b,
+    deadline_rel,
+) -> tuple[RequestQueue, jnp.ndarray]:
+    """Admit up to ``count`` copies of round t's request spec.
+
+    Newcomers fill the lowest-index free slots (slot index never encodes
+    priority — ordering is :func:`edf_order`'s job), each stamped with
+    ``deadline_abs = t + deadline_rel`` and ``arrival = t``.  Returns the
+    updated queue and the number actually admitted (``min(count,
+    free slots)``); the caller accounts the remainder as rejected.
+    """
+    free = ~queue.occupied
+    n_admit = jnp.minimum(
+        jnp.asarray(count, jnp.int32), jnp.sum(free.astype(jnp.int32))
+    )
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1     # rank among free
+    take = free & (free_rank < n_admit)
+    as_i32 = lambda v: jnp.asarray(v, jnp.int32)
+    return RequestQueue(
+        occupied=queue.occupied | take,
+        kstar=jnp.where(take, as_i32(kstar), queue.kstar),
+        ell_g=jnp.where(take, as_i32(ell_g), queue.ell_g),
+        ell_b=jnp.where(take, as_i32(ell_b), queue.ell_b),
+        deadline_abs=jnp.where(
+            take, as_i32(t) + as_i32(deadline_rel), queue.deadline_abs
+        ),
+        arrival=jnp.where(take, as_i32(t), queue.arrival),
+    ), n_admit
+
+
+def edf_order(queue: RequestQueue) -> jnp.ndarray:
+    """(Q,) slot indices, most urgent first (EDF, FIFO + slot tie-breaks).
+
+    Free slots sort last.  Two stable argsorts compose a lexicographic
+    (deadline_abs, arrival, slot index) order without wide integer keys.
+    """
+    arr = jnp.where(queue.occupied, queue.arrival, _EMPTY_SLOT_KEY)
+    dl = jnp.where(queue.occupied, queue.deadline_abs, _EMPTY_SLOT_KEY)
+    by_arrival = jnp.argsort(arr)                          # FIFO, idx ties
+    by_deadline = jnp.argsort(jnp.take(dl, by_arrival))    # stable: keeps FIFO
+    return jnp.take(by_arrival, by_deadline)
+
+
+def release(queue: RequestQueue, done: jnp.ndarray) -> RequestQueue:
+    """Recycle ``done`` (Q,) slots: freed in place, parameters left stale
+    (a free slot's entries are padding by convention and never read)."""
+    return queue._replace(occupied=queue.occupied & ~done)

@@ -469,6 +469,50 @@ def packet_erasure(
     return tuple(scenarios)
 
 
+@register("arrival_grid")
+def arrival_grid(
+    rates: tuple[float, ...] = (0.6, 1.2, 2.4),
+    deadline_rels: tuple[int, ...] = (1, 3),
+    k: int = 50,
+    deg_f: int = 1,
+    capacity: int = 6,
+    admit_threshold: float = 0.5,
+    reserve_cap: float = 0.7,
+    rounds: int = 2_000,
+) -> tuple[Scenario, ...]:
+    """Serving grid for ``repro.serving``: arrival rate x request deadline.
+
+    Poisson requests (``rate`` per round) on the Sec. 6.2 worker pool
+    (K*=50 at deg f=1, so each request's minimal segment is 5 workers —
+    2-3 concurrent jobs saturate the 15-worker pool, and the top rate is a
+    genuine overload).  Each cell's arrival process, request lifetime
+    ``deadline_rel``, queue ``capacity`` and admission-control settings
+    (``admit_threshold``/``reserve_cap`` — the settings the controlled run
+    uses; admit-all is the same compile with the gates disabled) ride in
+    ``meta``: ``benchmarks/bench_serving.py`` turns the meta columns into
+    TRACED :class:`~repro.serving.queue.RequestSpec` / arrival-process
+    parameters and the whole grid — admit-all and controlled variants
+    included — fuses into ONE compile via
+    :func:`repro.serving.sweep_serving`.  Run offline (``sweeps.run``)
+    the scenarios measure the pool's single-job ceiling on the same chain.
+    """
+    lp = _sim_lp(k=k, deg_f=deg_f)
+    scenarios = []
+    for rate in rates:
+        for dl in deadline_rels:
+            scenarios.append(Scenario(
+                name=f"arrive_r{rate:g}_dl{dl}", family="arrival_grid",
+                lp=lp, p_gg=_const(SIM.n, 0.8), p_bb=_const(SIM.n, 0.7),
+                mu_g=SIM.mu_g, mu_b=SIM.mu_b, deadline=SIM.deadline,
+                rounds=rounds, strategies=("lea",), baseline="lea",
+                meta=(("process", "poisson"), ("rate", rate),
+                      ("deadline_rel", dl), ("capacity", capacity),
+                      ("grace", 0), ("admit_threshold", admit_threshold),
+                      ("reserve_cap", reserve_cap), ("kstar", lp.kstar)),
+            ))
+    return tuple(scenarios)
+
+
 @register("straggler_slack")
 def straggler_slack(
     speed_ratios: tuple[float, ...] = (2.0, 3.3, 5.0, 10.0),

@@ -1,0 +1,92 @@
+"""Arrival processes: registry contract, exactness, determinism, stream keys.
+
+The arrival stream is engine input, so the properties that matter are the
+engine's: registered-by-name construction, bit-determinism per key, int32
+counts, and a DEDICATED key tag (arrival randomness must never perturb the
+trajectory / policy / fault streams — the idle-stream bit-identity test in
+test_engine.py is the end-to-end check of that).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.serving import arrivals
+
+
+def test_registry_names_and_unknown_process():
+    names = serving.process_names()
+    for name in ("constant", "mmpp", "poisson", "shift_exp"):
+        assert name in names
+    with pytest.raises(KeyError, match="shift_exp"):
+        serving.make_process("no_such_process")
+
+
+def test_constant_is_exact_and_consumes_no_randomness():
+    p = serving.make_process("constant", per_round=3)
+    a = serving.sample_arrivals(jax.random.PRNGKey(0), p, 7)
+    b = serving.sample_arrivals(jax.random.PRNGKey(99), p, 7)
+    assert a.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(a), np.full(7, 3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_poisson_deterministic_per_key_and_mean():
+    p = serving.make_process("poisson", rate=1.5)
+    a = serving.sample_arrivals(jax.random.PRNGKey(1), p, 4000)
+    b = serving.sample_arrivals(jax.random.PRNGKey(1), p, 4000)
+    c = serving.sample_arrivals(jax.random.PRNGKey(2), p, 4000)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert a.dtype == jnp.int32 and (np.asarray(a) >= 0).all()
+    assert abs(float(jnp.mean(a.astype(jnp.float32))) - 1.5) < 0.1
+
+
+def test_shift_exp_binning_and_rate():
+    # mean gap t_c + mean = 0.5 rounds -> ~2 arrivals per round
+    p = serving.make_process("shift_exp", t_const=0.1, mean=0.4)
+    a = serving.sample_arrivals(jax.random.PRNGKey(3), p, 2000)
+    b = serving.sample_arrivals(jax.random.PRNGKey(3), p, 2000)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) >= 0).all()
+    rate = float(jnp.mean(a.astype(jnp.float32)))
+    assert abs(rate - 2.0) < 0.25
+    # a pure-constant gap of exactly 1 round: one arrival per round from
+    # round 1 on (the first event fires at t = 1.0)
+    p1 = serving.make_process("shift_exp", t_const=1.0, mean=0.0)
+    a1 = np.asarray(serving.sample_arrivals(jax.random.PRNGKey(4), p1, 50))
+    assert a1[0] == 0 and (a1[1:] == 1).all()
+
+
+def test_mmpp_modulates_between_the_two_rates():
+    p = serving.make_process("mmpp", rate_lo=0.2, rate_hi=4.0,
+                             p_stay_lo=0.9, p_stay_hi=0.7)
+    a = np.asarray(serving.sample_arrivals(jax.random.PRNGKey(5), p, 4000))
+    assert (a >= 0).all()
+    assert 0.2 < a.mean() < 4.0
+
+
+def test_arrival_key_is_a_dedicated_stream():
+    key = jax.random.PRNGKey(0)
+    ak = serving.arrival_key(key)
+    assert not np.array_equal(np.asarray(ak), np.asarray(key))
+    from repro.faults.channels import fault_key
+
+    assert not np.array_equal(np.asarray(ak), np.asarray(fault_key(key)))
+    # deterministic: same key, same derived stream
+    np.testing.assert_array_equal(
+        np.asarray(ak), np.asarray(serving.arrival_key(jax.random.PRNGKey(0)))
+    )
+
+
+def test_sample_arrivals_derives_the_tag_itself():
+    """sample_arrivals consumes arrival_key(key), not key — two processes on
+    the same base key see independent tagged streams, and feeding the raw
+    key elsewhere cannot collide with arrivals."""
+    p = serving.make_process("poisson", rate=1.0)
+    key = jax.random.PRNGKey(7)
+    via_api = serving.sample_arrivals(key, p, 100)
+    direct = p.sample(arrivals.arrival_key(key), 100)
+    np.testing.assert_array_equal(np.asarray(via_api), np.asarray(direct))

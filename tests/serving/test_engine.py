@@ -1,0 +1,195 @@
+"""Serving engine acceptance: bit-identity, idle identity, conservation,
+compile-once, fault composition.
+
+The contract that makes repro.serving an EXTENSION of the offline engine
+rather than a second engine:
+
+  * a single-slot queue fed exactly one always-admitted request per round
+    with ``deadline_rel = 0`` reproduces the single-job engine
+    (``simulate_strategies_pool``) BIT-IDENTICALLY on the same key;
+  * a zero-arrival run is the idle engine: every counter and event is
+    zero, and the engine streams are untouched (``serve_rollout`` states
+    == ``rollout_pool`` states, bit for bit);
+  * every request ends in exactly one disposition (conservation), under
+    load and under admission control;
+  * a whole arrival-rate x deadline x admission grid is ONE compile
+    (``serving_compile_cache_size``), and each sweep row equals the
+    unbatched ``simulate_serving`` on its own key;
+  * fault channels compose on the time axis only — packet-axis injectors
+    are rejected loudly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, serving
+from repro.core import lea, throughput
+
+N = 15
+MU_G, MU_B, D = 10.0, 3.0, 1.0
+P_GG, P_BB = 0.8, 0.7
+KS, EG, EB = 50, 10, 3
+ROUNDS = 120
+
+_MASK = jnp.ones((N,), bool)
+_PGG = jnp.full((N,), P_GG)
+_PBB = jnp.full((N,), P_BB)
+
+
+def _admit_all_spec(deadline_rel=0):
+    return serving.RequestSpec(
+        kstar=KS, ell_g=EG, ell_b=EB, deadline_rel=deadline_rel,
+        admit_threshold=0.0, reserve_cap=serving.ADMIT_ALL_CAP,
+    )
+
+
+def test_degenerate_single_slot_is_the_offline_engine_bitwise():
+    key = jax.random.PRNGKey(7)
+    out = serving.simulate_serving(
+        key, _MASK, _PGG, _PBB, MU_G, MU_B, D, _admit_all_spec(),
+        serving.make_process("constant", per_round=1),
+        rounds=ROUNDS, strategies=("lea",), capacity=1,
+    )
+    pool = lea.PoolLoad(kstar=jnp.int32(KS), ell_g=jnp.int32(EG),
+                        ell_b=jnp.int32(EB), mask=_MASK)
+    succ = throughput.simulate_strategies_pool(
+        key, pool, _PGG, _PBB, MU_G, MU_B, D, ROUNDS, strategies=("lea",)
+    )
+    succ_col = np.asarray(succ)[:, 0].astype(bool)
+    served = np.asarray(out.events)[0, :, 0] == serving.EVENT_ON_TIME
+    np.testing.assert_array_equal(served, succ_col)
+    assert int(out.served_on_time[0]) == int(succ_col.sum())
+    # deadline_rel=0 + grace=0: the round's miss expires the same round
+    expired = np.asarray(out.events)[0, :, 0] == serving.EVENT_EXPIRED
+    np.testing.assert_array_equal(expired, ~succ_col)
+    assert int(out.arrivals[0]) == int(out.admitted[0]) == ROUNDS
+    assert int(out.rejected[0]) == int(out.in_flight[0]) == 0
+    # every served request took exactly one round
+    sojourn = np.asarray(out.sojourn)[0, :, 0]
+    np.testing.assert_array_equal(sojourn[served], 1)
+
+
+def test_zero_arrivals_is_the_idle_engine():
+    key = jax.random.PRNGKey(3)
+    out = serving.simulate_serving(
+        key, _MASK, _PGG, _PBB, MU_G, MU_B, D, _admit_all_spec(),
+        serving.make_process("constant", per_round=0),
+        rounds=ROUNDS, strategies=("lea",), capacity=4,
+    )
+    for field in ("arrivals", "admitted", "served_on_time", "served_late",
+                  "rejected", "expired", "in_flight"):
+        assert int(getattr(out, field)[0]) == 0, field
+    assert not np.asarray(out.events).any()
+    assert not np.asarray(out.sojourn).any()
+    # and the engine streams were untouched by the serving machinery
+    states_s, _ = throughput.serve_rollout(
+        key, _MASK, _PGG, _PBB, ROUNDS, ("lea",)
+    )
+    pool = lea.PoolLoad(kstar=jnp.int32(KS), ell_g=jnp.int32(EG),
+                        ell_b=jnp.int32(EB), mask=_MASK)
+    states_r, _, _ = throughput.rollout_pool(
+        key, pool, _PGG, _PBB, ROUNDS, strategies=("lea",)
+    )
+    np.testing.assert_array_equal(np.asarray(states_s), np.asarray(states_r))
+
+
+def test_conservation_under_overload_and_admission_control():
+    key = jax.random.PRNGKey(11)
+    for thr, cap in ((0.0, serving.ADMIT_ALL_CAP), (0.5, 0.7)):
+        out = serving.simulate_serving(
+            key, _MASK, _PGG, _PBB, MU_G, MU_B, D,
+            serving.RequestSpec(kstar=KS, ell_g=EG, ell_b=EB,
+                                deadline_rel=2, admit_threshold=thr,
+                                reserve_cap=cap),
+            serving.make_process("poisson", rate=3.0),
+            rounds=ROUNDS, strategies=("lea",), capacity=5,
+        )
+        arr = int(out.arrivals[0])
+        assert arr == int(out.admitted[0]) + int(out.rejected[0])
+        assert int(out.admitted[0]) == (
+            int(out.served_on_time[0]) + int(out.served_late[0])
+            + int(out.expired[0]) + int(out.in_flight[0])
+        )
+        # per-slot events reconcile with the counters
+        ev = np.asarray(out.events)[0]
+        assert (ev == serving.EVENT_ON_TIME).sum() == int(out.served_on_time[0])
+        assert (ev == serving.EVENT_EXPIRED).sum() == int(out.expired[0])
+
+
+def test_sweep_serving_compiles_once_and_matches_unbatched_rows():
+    b = 3
+    keys = jax.vmap(lambda i: jax.random.PRNGKey(100 + i))(jnp.arange(b))
+    pool_mask = jnp.ones((b, N), bool)
+    p_gg = jnp.broadcast_to(_PGG, (b, N))
+    p_bb = jnp.broadcast_to(_PBB, (b, N))
+    rates = jnp.asarray([0.5, 1.5, 3.0], jnp.float32)
+    spec = serving.RequestSpec(
+        kstar=KS, ell_g=EG, ell_b=EB,
+        deadline_rel=jnp.asarray([1, 2, 3], jnp.int32),
+        admit_threshold=0.4, reserve_cap=0.8,
+    )
+    kwargs = dict(rounds=64, strategies=("lea",), capacity=3)
+    c0 = serving.serving_compile_cache_size()
+    out = serving.sweep_serving(
+        keys, pool_mask, p_gg, p_bb, MU_G, MU_B, D, spec,
+        serving.make_process("poisson", rate=rates), **kwargs,
+    )
+    # a second grid with DIFFERENT traced parameters: same compile
+    serving.sweep_serving(
+        keys, pool_mask, p_gg, p_bb, MU_G, MU_B, D,
+        spec._replace(admit_threshold=0.0,
+                      reserve_cap=serving.ADMIT_ALL_CAP),
+        serving.make_process("poisson", rate=rates * 0.5), **kwargs,
+    )
+    assert serving.serving_compile_cache_size() - c0 == 1
+    # row i == the unbatched engine on row i's key and parameters
+    for i in range(b):
+        single = serving.simulate_serving(
+            keys[i], pool_mask[i], p_gg[i], p_bb[i], MU_G, MU_B, D,
+            serving.RequestSpec(
+                kstar=KS, ell_g=EG, ell_b=EB,
+                deadline_rel=spec.deadline_rel[i],
+                admit_threshold=0.4, reserve_cap=0.8,
+            ),
+            serving.make_process("poisson", rate=rates[i]), **kwargs,
+        )
+        for field in ("arrivals", "admitted", "served_on_time",
+                      "rejected", "expired", "in_flight"):
+            assert int(getattr(out, field)[i, 0]) == int(
+                getattr(single, field)[0]
+            ), (field, i)
+
+
+def test_time_axis_channel_composes_and_packet_axis_is_rejected():
+    key = jax.random.PRNGKey(5)
+    base = serving.simulate_serving(
+        key, _MASK, _PGG, _PBB, MU_G, MU_B, D, _admit_all_spec(2),
+        serving.make_process("constant", per_round=1),
+        rounds=ROUNDS, strategies=("lea",), capacity=2,
+    )
+    faulted = serving.simulate_serving(
+        key, _MASK, _PGG, _PBB, MU_G, MU_B, D, _admit_all_spec(2),
+        serving.make_process("constant", per_round=1),
+        rounds=ROUNDS, strategies=("lea",), capacity=2,
+        channel=faults.make_channel([("preempt", {"p_preempt": 0.4})]),
+    )
+    # preemption only shrinks the compute window: never more served
+    assert int(faulted.served_on_time[0]) <= int(base.served_on_time[0])
+    with pytest.raises(ValueError, match="packet"):
+        serving.simulate_serving(
+            key, _MASK, _PGG, _PBB, MU_G, MU_B, D, _admit_all_spec(),
+            serving.make_process("constant", per_round=1),
+            rounds=8, strategies=("lea",), capacity=1,
+            channel=faults.make_channel(
+                [("packet_bernoulli", {"p_drop": 0.1})]
+            ),
+        )
+
+
+def test_static_strategies_are_rejected_by_serve_rollout():
+    with pytest.raises(ValueError):
+        throughput.serve_rollout(
+            jax.random.PRNGKey(0), _MASK, _PGG, _PBB, 8, ("static",)
+        )

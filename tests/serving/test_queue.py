@@ -1,0 +1,74 @@
+"""RequestQueue invariants: admit placement, clipping, EDF order, recycling.
+
+All operations are pure jnp updates on a (Q,) pytree; these tests pin the
+conventions the serving scan relies on: newcomers fill the lowest-index
+free slots, admission clips at capacity (the remainder is the caller's
+rejected count), ordering is lexicographic (deadline, arrival, slot index)
+with free slots last, and released slots are immediately reusable.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import queue as rqueue
+
+
+def _admit(q, t, count, kstar=10, ell_g=2, ell_b=1, deadline_rel=3):
+    return rqueue.admit(q, t, count, kstar, ell_g, ell_b, deadline_rel)
+
+
+def test_admit_fills_lowest_index_free_slots_and_stamps():
+    q = rqueue.empty_queue(4)
+    q, n = _admit(q, t=5, count=2, kstar=12, ell_g=3, deadline_rel=2)
+    assert int(n) == 2
+    np.testing.assert_array_equal(
+        np.asarray(q.occupied), [True, True, False, False]
+    )
+    np.testing.assert_array_equal(np.asarray(q.kstar)[:2], [12, 12])
+    np.testing.assert_array_equal(np.asarray(q.deadline_abs)[:2], [7, 7])
+    np.testing.assert_array_equal(np.asarray(q.arrival)[:2], [5, 5])
+    # a newcomer lands in the hole, not after the tail
+    q = rqueue.release(q, jnp.asarray([True, False, False, False]))
+    q, n = _admit(q, t=6, count=1)
+    assert int(n) == 1
+    np.testing.assert_array_equal(
+        np.asarray(q.occupied), [True, True, False, False]
+    )
+    assert int(q.arrival[0]) == 6 and int(q.arrival[1]) == 5
+
+
+def test_admit_clips_at_free_capacity():
+    q = rqueue.empty_queue(3)
+    q, n = _admit(q, t=0, count=5)
+    assert int(n) == 3                      # 2 are the caller's rejects
+    assert bool(q.occupied.all())
+    q, n = _admit(q, t=1, count=4)
+    assert int(n) == 0
+
+
+def test_edf_order_deadline_then_fifo_then_slot_index():
+    q = rqueue.empty_queue(5)
+    # slot 0: dl 9 arr 2 | slot 1: dl 4 arr 3 | slot 2: dl 4 arr 1
+    # slot 3: free       | slot 4: dl 4 arr 1 (slot-index tie with 2)
+    q = rqueue.RequestQueue(
+        occupied=jnp.asarray([True, True, True, False, True]),
+        kstar=q.kstar, ell_g=q.ell_g, ell_b=q.ell_b,
+        deadline_abs=jnp.asarray([9, 4, 4, 0, 4], jnp.int32),
+        arrival=jnp.asarray([2, 3, 1, 0, 1], jnp.int32),
+    )
+    order = np.asarray(rqueue.edf_order(q))
+    # dl 4 before dl 9; among dl 4: arrival 1 (slots 2, 4 in index order)
+    # before arrival 3 (slot 1); free slot last
+    np.testing.assert_array_equal(order, [2, 4, 1, 0, 3])
+
+
+def test_release_recycles_and_is_a_pure_mask_update():
+    q = rqueue.empty_queue(2)
+    q, _ = _admit(q, t=0, count=2)
+    q2 = rqueue.release(q, jnp.asarray([False, True]))
+    np.testing.assert_array_equal(np.asarray(q2.occupied), [True, False])
+    # parameters are left stale on purpose: free slots are padding
+    np.testing.assert_array_equal(np.asarray(q2.kstar), np.asarray(q.kstar))
+    q3, n = _admit(q2, t=4, count=2)
+    assert int(n) == 1 and bool(q3.occupied.all())
+    assert int(q3.arrival[1]) == 4

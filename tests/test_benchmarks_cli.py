@@ -70,6 +70,7 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
         "bench_policies": "BENCH_policies.json",
         "bench_gf": "BENCH_gf.json",
         "bench_faults": "BENCH_faults.json",
+        "bench_serving": "BENCH_serving.json",
     }
     for name, _, desc in SUITES:
         named = re.findall(r"BENCH_\w+\.json", desc)
@@ -115,6 +116,55 @@ def test_committed_bench_faults_manifest_shape_and_invariants():
         # containment, cell by cell, in the committed rates
         assert cell["recovered_conserve"] >= cell["recovered_aon"]
         assert 0.0 <= cell["served_any"] <= 1.0
+
+
+def test_bench_serving_is_a_registered_target_and_listed():
+    from benchmarks.run import SUITES
+
+    names = [name for name, _, _ in SUITES]
+    assert "bench_serving" in names
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    assert "bench_serving" in proc.stdout
+    assert "BENCH_serving.json" in proc.stdout
+
+
+def test_committed_bench_serving_manifest_shape_and_invariants():
+    """BENCH_serving.json is a committed artifact: the admission-beats-
+    admit-all acceptance result, the one-compile contract and the
+    conservation flag must hold in the committed numbers, not just in a
+    fresh run.  rows/sec is machine-dependent and follows the soft-gate
+    convention, so only its presence is pinned."""
+    import json
+
+    with open(os.path.join(_ROOT, "BENCH_serving.json")) as f:
+        doc = json.load(f)
+    assert doc["bench"] == "bench_serving"
+    assert doc["family"] == "arrival_grid"
+    assert doc["conservation_ok"] is True
+    # the acceptance criterion: controlled admission strictly beats
+    # admit-all timely throughput on the overloaded cells
+    assert doc["admission_beats_admit_all"] is True
+    assert doc["admission_gain_requests"] > 0
+    # the whole grid, admit-all AND controlled, is one compiled computation
+    assert doc["family_compiles"] == {"arrival_grid": 1}
+    assert doc["rows_per_sec"] > 0
+    rates = set()
+    overloaded_gain = 0
+    for cell in doc["results"]:
+        rates.add(cell["rate"])
+        assert cell["served_on_time_controlled"] > 0
+        assert cell["served_req_per_sec"] > 0
+        # percentiles are real and ordered
+        assert (cell["latency_p50_rounds"] <= cell["latency_p95_rounds"]
+                <= cell["latency_p99_rounds"])
+        assert cell["latency_p50_rounds"] >= 1.0
+        if cell["overloaded"]:
+            overloaded_gain += (cell["served_on_time_controlled"]
+                                - cell["served_on_time_admit_all"])
+    # latency + req/sec at >= 3 arrival rates, at least one overloaded
+    assert len(rates) >= 3
+    assert overloaded_gain == doc["admission_gain_requests"]
 
 
 def test_committed_bench_gf_manifest_shape_and_flags():

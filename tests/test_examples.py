@@ -31,3 +31,9 @@ def test_quickstart_example():
 def test_coded_regression_example():
     out = _run_example("coded_regression.py", {"REPRO_EXAMPLE_ROUNDS": "80"})
     assert "timely throughput" in out
+
+
+def test_serve_coded_example():
+    out = _run_example("serve_coded.py", {"REPRO_EXAMPLE_ROUNDS": "60"})
+    assert "timely computation throughput" in out
+    assert "served on time" in out
