@@ -8,6 +8,15 @@ git is unavailable — and a regression beyond tolerance prints a WARNING to
 stderr and flags the manifest, but never fails the run.  Shared-CI wall
 clocks are too noisy for hard gates; the hard gates are the in-run
 correctness assertions.
+
+Each check returns a STRUCTURED warning record (or ``None`` / an empty
+list when the check passes) so benches can append it to their manifest's
+``warnings`` list and ``benchmarks/run.py obs_report`` can surface every
+soft regression across all committed manifests in one place.  A record is
+a flat JSON-able dict: ``{"kind", "bench", "metric", "value", "baseline",
+"message", ...}``; truthiness is preserved (record dict / non-empty list
+iff the old booleans were True), so ``bool(...)`` recovers the legacy
+manifest flags.
 """
 
 from __future__ import annotations
@@ -42,6 +51,11 @@ def committed_baseline(path: str) -> dict:
         return {}
 
 
+def _emit(record: dict) -> dict:
+    print(f"WARNING: {record['message']}", file=sys.stderr)
+    return record
+
+
 def warn_slowdown(
     bench: str,
     value: float,
@@ -49,38 +63,87 @@ def warn_slowdown(
     *,
     metric: str = "rows/sec",
     fraction: float = SLOWDOWN_WARN_FRACTION,
-) -> bool:
-    """Soft throughput check: True (and a stderr WARNING) iff ``value`` fell
-    more than ``fraction`` below the committed ``baseline_value``."""
+) -> dict | None:
+    """Soft throughput check: a warning record (and a stderr WARNING) iff
+    ``value`` fell more than ``fraction`` below the committed
+    ``baseline_value``; ``None`` when the check passes."""
     if not baseline_value or value >= (1.0 - fraction) * baseline_value:
-        return False
-    print(
-        f"WARNING: {bench} {metric} regressed "
-        f"{1.0 - value / baseline_value:.0%} vs committed baseline "
-        f"({value:.0f} vs {baseline_value:.0f}); soft check only",
-        file=sys.stderr,
-    )
-    return True
+        return None
+    return _emit({
+        "kind": "slowdown",
+        "bench": bench,
+        "metric": metric,
+        "value": float(value),
+        "baseline": float(baseline_value),
+        "drop_fraction": 1.0 - value / baseline_value,
+        "message": (
+            f"{bench} {metric} regressed "
+            f"{1.0 - value / baseline_value:.0%} vs committed baseline "
+            f"({value:.0f} vs {baseline_value:.0f}); soft check only"
+        ),
+    })
 
 
 def warn_compiles(
     bench: str,
     family_compiles: dict[str, int],
     baseline_compiles: dict[str, int],
-) -> bool:
-    """Soft compile-count check: True (and one stderr WARNING per family)
-    iff any family compiled MORE computations than the committed baseline.
-    Counts are deterministic, but the convention stays soft — the hard gate
-    is each bench's in-run one-compile assertion."""
-    warned = False
+) -> list[dict]:
+    """Soft compile-count check: one warning record (and one stderr WARNING)
+    per family that compiled MORE computations than the committed baseline;
+    an empty list when every family holds.  Counts are deterministic, but
+    the convention stays soft — the hard gate is each bench's in-run
+    one-compile assertion."""
+    records = []
     for fam, count in family_compiles.items():
         committed = baseline_compiles.get(fam)
         if committed is not None and count > committed:
-            warned = True
-            print(
-                f"WARNING: {bench} family {fam!r} compiled {count} "
-                f"computations vs {committed} in the committed baseline; "
-                "soft check only",
-                file=sys.stderr,
-            )
-    return warned
+            records.append(_emit({
+                "kind": "compiles",
+                "bench": bench,
+                "metric": f"family_compiles[{fam}]",
+                "value": int(count),
+                "baseline": int(committed),
+                "message": (
+                    f"{bench} family {fam!r} compiled {count} "
+                    f"computations vs {committed} in the committed "
+                    "baseline; soft check only"
+                ),
+            }))
+    return records
+
+
+def warn_speedup_bar(
+    bench: str,
+    speedup: float,
+    bar: float,
+    *,
+    metric: str = "speedup",
+) -> dict | None:
+    """Soft absolute-bar check: a warning record (and a stderr WARNING) iff
+    ``speedup`` is below the acceptance ``bar``; ``None`` otherwise.  Wall
+    clock is never a hard gate (machine contention)."""
+    if speedup >= bar:
+        return None
+    return _emit({
+        "kind": "speedup_bar",
+        "bench": bench,
+        "metric": metric,
+        "value": float(speedup),
+        "baseline": float(bar),
+        "message": (
+            f"{bench} {metric} {speedup:.1f}x is below the {bar:.0f}x bar; "
+            "soft check only (machine contention?)"
+        ),
+    })
+
+
+def collect(*checks) -> list[dict]:
+    """Flatten check results (records, ``None``s, lists of records) into the
+    manifest ``warnings`` list."""
+    out: list[dict] = []
+    for c in checks:
+        if not c:
+            continue
+        out.extend(c if isinstance(c, list) else [c])
+    return out

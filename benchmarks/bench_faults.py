@@ -30,7 +30,8 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks._softgate import committed_baseline, warn_compiles, warn_slowdown
+from benchmarks._softgate import (collect, committed_baseline, warn_compiles,
+                                  warn_slowdown)
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
@@ -145,12 +146,14 @@ def run() -> list[dict]:
     assert sum(ex.outcomes.values()) == ex.rounds == EXEC_ROUNDS
 
     baseline = committed_baseline(_MANIFEST_PATH)
-    slowdown_warned = warn_slowdown(
-        "bench_faults", rows_per_sec, baseline.get("rows_per_sec")
+    warnings = collect(
+        warn_slowdown("bench_faults", rows_per_sec, baseline.get("rows_per_sec")),
+        warn_compiles(
+            "bench_faults", family_compiles, baseline.get("family_compiles", {})
+        ),
     )
-    compile_warned = warn_compiles(
-        "bench_faults", family_compiles, baseline.get("family_compiles", {})
-    )
+    slowdown_warned = any(w["kind"] == "slowdown" for w in warnings)
+    compile_warned = any(w["kind"] == "compiles" for w in warnings)
 
     li = STRATEGIES.index("lea")
     cells = []
@@ -188,6 +191,7 @@ def run() -> list[dict]:
         "executor_rounds": ex.rounds,
         "executor_outcomes": {k: ex.outcomes[k] for k in OUTCOMES},
         "executor_outcomes_sum_ok": True,
+        "warnings": warnings,
         "results": cells,
     }
     sweeps.write_manifest(_MANIFEST_PATH, doc)

@@ -28,15 +28,14 @@ speedups; the acceptance bar is >= 5x on the exact-round path.
 
 from __future__ import annotations
 
-import json
 import os
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._softgate import collect, warn_speedup_bar
 from repro.core import throughput
 from repro.core.coded_ops import chunk_on_time, coded_matmul_exact, encode_dataset_modp
 from repro.core.lagrange import (FIELD_P, CodeSpec, decode_matrix_modp,
@@ -44,6 +43,7 @@ from repro.core.lagrange import (FIELD_P, CodeSpec, decode_matrix_modp,
                                  generator_matrix_modp, matmul_modp)
 from repro.core.lea import LoadParams
 from repro.kernels.gf import matmul_gf
+from repro.sweeps import write_manifest
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _MANIFEST = os.path.join(_ROOT, "BENCH_gf.json")
@@ -184,14 +184,10 @@ def run() -> list[dict]:
     # soft perf gate, same convention as sweep_smoke: a refresh on a slow /
     # contended machine WARNS and flags the manifest, it never fails CI —
     # bit-exactness above is the hard gate, wall clock is not
-    below_bar = speedup_round < SPEEDUP_BAR
-    if below_bar:
-        print(
-            f"WARNING: bench_gf exact-round speedup {speedup_round:.1f}x is "
-            f"below the {SPEEDUP_BAR:.0f}x bar; soft check only "
-            f"(machine contention?)",
-            file=sys.stderr,
-        )
+    warnings = collect(warn_speedup_bar(
+        "bench_gf", speedup_round, SPEEDUP_BAR, metric="exact-round speedup"
+    ))
+    below_bar = bool(warnings)
 
     doc = {
         "bench": "bench_gf",
@@ -210,11 +206,11 @@ def run() -> list[dict]:
         "speedup_encode_gemm": speedup_gemm,
         "speedup_decode_matrix": speedup_decode,
         "speedup_exact_round": speedup_round,
+        "warnings": warnings,
         "results": rows,
     }
-    with open(_MANIFEST, "w") as f:
-        json.dump(doc, f, indent=2, allow_nan=False)
-        f.write("\n")
+    # write_manifest stamps provenance + enforces RFC-8259-strict JSON
+    write_manifest(_MANIFEST, doc)
     return rows
 
 

@@ -35,7 +35,8 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks._softgate import committed_baseline, warn_compiles, warn_slowdown
+from benchmarks._softgate import (collect, committed_baseline, warn_compiles,
+                                  warn_slowdown)
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
@@ -167,12 +168,14 @@ def run() -> list[dict]:
     )
 
     baseline = committed_baseline(_MANIFEST_PATH)
-    slowdown_warned = warn_slowdown(
-        "bench_serving", rows_per_sec, baseline.get("rows_per_sec")
+    warnings = collect(
+        warn_slowdown("bench_serving", rows_per_sec, baseline.get("rows_per_sec")),
+        warn_compiles(
+            "bench_serving", family_compiles, baseline.get("family_compiles", {})
+        ),
     )
-    compile_warned = warn_compiles(
-        "bench_serving", family_compiles, baseline.get("family_compiles", {})
-    )
+    slowdown_warned = any(w["kind"] == "slowdown" for w in warnings)
+    compile_warned = any(w["kind"] == "compiles" for w in warnings)
 
     served_codes = (serving.EVENT_ON_TIME, serving.EVENT_LATE)
     deadline_s = float(scenarios[0].deadline)   # one round = d seconds
@@ -223,6 +226,7 @@ def run() -> list[dict]:
         "slowdown_warned": slowdown_warned,
         "cold_s": cold_s,
         "warm_s": warm_s,
+        "warnings": warnings,
         "results": cells,
     }
     sweeps.write_manifest(_MANIFEST_PATH, doc)

@@ -1,0 +1,226 @@
+"""Cross-bench regression report: the ``repro.obs`` layer end to end.
+
+Aggregates every committed ``BENCH_*.json`` at the repo root into ONE
+regression summary (writes ``BENCH_obs.json``):
+
+  * metric deltas — every shared numeric top-level metric of each manifest
+    is diffed against the COMMITTED baseline (``git show HEAD:`` via
+    ``benchmarks._softgate.committed_baseline``, the repo's soft-gate
+    reference), absolute and relative;
+  * softgate warnings — the structured warning records each bench appended
+    to its manifest's ``warnings`` list are collected in one place;
+  * provenance audit — which manifests carry the ``repro.obs.provenance``
+    stamp (all of them must; ``tests/test_benchmarks_cli.py`` hard-gates
+    the contract);
+  * static cost rows — FLOP/byte/intensity estimates for the engine's
+    pool-path entry points from the ``repro.launch.hlo_cost`` walker
+    (lower + compile at reference small shapes, trip-count-aware HLO walk);
+  * a telemetry demo — a small ``telemetry=True`` serving run, asserted to
+    compile exactly ONCE via the unified ``repro.obs`` compile counter,
+    exported as a valid Chrome trace-event document (``obs_trace.json`` at
+    the repo root, viewable in Perfetto / chrome://tracing) whose request
+    dispositions are asserted to reconcile with the engine's own counters.
+
+Hard in-run gates: the one-compile assertion, trace validity
+(``repro.obs.validate_trace``) and disposition conservation.  Everything
+wall-clock-ish stays soft, per the ``benchmarks._softgate`` convention.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks._softgate import committed_baseline
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+_MANIFEST_PATH = os.path.join(_ROOT, "BENCH_obs.json")
+_TRACE_PATH = os.path.join(_ROOT, "obs_trace.json")
+
+# the telemetry demo: Sec. 6.2-scale pool, tiny horizon (it is a demo of
+# the export path, not a benchmark — bench_serving owns the perf numbers)
+N = 15
+KSTAR, ELL_G, ELL_B = 50, 10, 3
+MU_G, MU_B, DEADLINE = 10.0, 3.0, 1.0
+P_GG, P_BB = 0.8, 0.7
+ROUNDS = 64
+CELLS = 2
+RATE = 0.6
+DEADLINE_REL = 3
+CAPACITY = 2
+STRATEGIES = ("lea",)
+
+
+def _numeric_deltas(current: dict, baseline: dict) -> dict:
+    """Per-key {current, baseline, delta, rel} for shared numeric metrics."""
+    deltas = {}
+    for k, v in current.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        bv = baseline.get(k)
+        if isinstance(bv, bool) or not isinstance(bv, (int, float)):
+            continue
+        deltas[k] = {
+            "current": v,
+            "baseline": bv,
+            "delta": v - bv,
+            "rel": (v - bv) / bv if bv else None,
+        }
+    return deltas
+
+
+def run() -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs, serving, sweeps
+    from repro.launch import hlo_cost
+
+    # -- 1. aggregate every committed BENCH manifest -----------------------
+    bench_paths = sorted(glob.glob(os.path.join(_ROOT, "BENCH_*.json")))
+    bench_paths = [
+        p for p in bench_paths
+        if os.path.basename(p) != os.path.basename(_MANIFEST_PATH)
+    ]
+    benches: dict[str, dict] = {}
+    warnings_collected: list[dict] = []
+    missing_provenance: list[str] = []
+    for path in bench_paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                current = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        baseline = committed_baseline(path)
+        for w in current.get("warnings") or []:
+            warnings_collected.append({**w, "manifest": name})
+        prov = current.get("provenance") or {}
+        if not prov:
+            missing_provenance.append(name)
+        benches[name] = {
+            "bench": current.get("bench"),
+            "has_provenance": bool(prov),
+            "git_sha": prov.get("git_sha"),
+            "deltas": _numeric_deltas(current, baseline),
+        }
+
+    # -- 2. static per-target cost rows (hlo_cost entry-point walk) --------
+    cost_rows = [
+        hlo_cost.estimate_entry(t) for t in hlo_cost.entry_point_names()
+    ]
+
+    # -- 3. telemetry-on serving run -> Chrome trace -----------------------
+    b = CELLS
+    keys = jax.vmap(lambda i: jax.random.PRNGKey(3000 + i))(jnp.arange(b))
+    spec = serving.RequestSpec(
+        kstar=jnp.full((b,), KSTAR, jnp.int32),
+        ell_g=jnp.full((b,), ELL_G, jnp.int32),
+        ell_b=jnp.full((b,), ELL_B, jnp.int32),
+        deadline_rel=jnp.full((b,), DEADLINE_REL, jnp.int32),
+        admit_threshold=jnp.zeros((b,), jnp.float32),
+        reserve_cap=jnp.full((b,), serving.ADMIT_ALL_CAP, jnp.float32),
+    )
+    process = serving.make_process(
+        "poisson", rate=jnp.full((b,), RATE, jnp.float32)
+    )
+    c0 = obs.compile_events("serving.sweep")
+    t0 = time.perf_counter()
+    out, tel = serving.sweep_serving(
+        keys, jnp.ones((b, N), bool),
+        jnp.full((b, N), P_GG, jnp.float32),
+        jnp.full((b, N), P_BB, jnp.float32),
+        MU_G, MU_B, DEADLINE, spec, process,
+        rounds=ROUNDS, strategies=STRATEGIES, capacity=CAPACITY,
+        telemetry=True,
+    )
+    jax.block_until_ready(out)
+    run_s = time.perf_counter() - t0
+    telemetry_compiles = obs.compile_events("serving.sweep") - c0
+    # telemetry=on adds ZERO compiles beyond the family's one computation
+    assert telemetry_compiles == 1, telemetry_compiles
+
+    trace = obs.serving_trace(
+        np.asarray(out.events)[0], np.asarray(out.sojourn)[0],
+        strategies=STRATEGIES,
+        telemetry=jax.tree.map(lambda x: np.asarray(x)[0], tel),
+    )
+    obs.write_trace(_TRACE_PATH, trace)
+    stats = obs.validate_trace(trace)
+    # the trace's dispositions must reconcile with the engine's counters
+    li = STRATEGIES.index("lea")
+    disp = stats["dispositions"]
+    want = {
+        "on_time": int(np.asarray(out.served_on_time)[0, li]),
+        "late": int(np.asarray(out.served_late)[0, li]),
+        "expired": int(np.asarray(out.expired)[0, li]),
+    }
+    got = {k: disp.get(k, 0) for k in want}
+    assert got == want, (got, want)
+    assert stats["complete"] > 0, "trace has no request events"
+
+    doc = {
+        "bench": "obs_report",
+        "manifests": sorted(benches),
+        "benches": benches,
+        "warnings_collected": warnings_collected,
+        "missing_provenance": missing_provenance,
+        "cost_model": cost_rows,
+        "telemetry_compiles": telemetry_compiles,
+        "trace_path": os.path.basename(_TRACE_PATH),
+        "trace_events": stats["events"],
+        "trace_complete": stats["complete"],
+        "trace_dispositions": disp,
+        "trace_dispositions_ok": True,
+        "counter_names": list(obs.counter_names()),
+        "compile_events_total": obs.compile_events(),
+        "serving_demo": {
+            "cells": b, "rounds": ROUNDS, "rate": RATE,
+            "capacity": CAPACITY, "run_s": run_s,
+        },
+    }
+    sweeps.write_manifest(_MANIFEST_PATH, doc)
+
+    rows = [{
+        "name": "obs_report",
+        "us_per_call": run_s * 1e6 / (b * ROUNDS),
+        "derived": (
+            f"manifests={len(benches)};warnings={len(warnings_collected)};"
+            f"missing_provenance={len(missing_provenance)};"
+            f"trace_events={stats['events']};complete={stats['complete']};"
+            f"telemetry_compiles={telemetry_compiles}"
+        ),
+    }]
+    for c in cost_rows:
+        rows.append({
+            "name": f"obs_cost_{c['target']}",
+            "us_per_call": 0.0,
+            "derived": (
+                f"flops_per_round={c['flops_per_round']:.0f};"
+                f"hbm_bytes_per_round={c['hbm_bytes_per_round']:.0f};"
+                f"intensity={c['arithmetic_intensity']:.2f}"
+            ),
+        })
+    for name, info in sorted(benches.items()):
+        moved = sum(
+            1 for d in info["deltas"].values()
+            if d["rel"] is not None and abs(d["rel"]) > 1e-12
+        )
+        rows.append({
+            "name": f"obs_delta_{name}",
+            "us_per_call": 0.0,
+            "derived": (
+                f"metrics={len(info['deltas'])};moved={moved};"
+                f"provenance={int(info['has_provenance'])}"
+            ),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

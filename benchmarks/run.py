@@ -7,19 +7,27 @@ Usage:
   python -m benchmarks.run --list          # print registered targets + blurbs
 
 Exit code 0 is the CI smoke gate: every requested suite must produce its
-rows without raising.  Six targets additionally refresh a manifest at the
+rows without raising.  Seven targets additionally refresh a manifest at the
 repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
 ``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
 ``BENCH_sweep.json`` (with a soft rows/sec regression check against the
 committed baseline), ``bench_policies`` -> ``BENCH_policies.json``
 (per-policy throughput, baseline ratio, final regret + CI vs the oracle),
 ``bench_gf`` -> ``BENCH_gf.json`` (exact GF(p) device-vs-numpy speedups,
->= 5x acceptance on the exact coded round) and ``bench_faults`` ->
+>= 5x acceptance on the exact coded round), ``bench_faults`` ->
 ``BENCH_faults.json`` (packet-erasure grid: partial-work-conserving decode
 vs all-or-nothing under shared fault traces, retry/degrade outcome
-accounting) and ``bench_serving`` -> ``BENCH_serving.json`` (streaming
+accounting), ``bench_serving`` -> ``BENCH_serving.json`` (streaming
 serving grid: latency percentiles, served-requests/sec and the
-admission-control-vs-admit-all gain at overload).
+admission-control-vs-admit-all gain at overload) and ``obs_report`` ->
+``BENCH_obs.json`` (cross-bench regression summary: metric deltas vs the
+committed baselines, collected softgate warnings, provenance audit,
+static hlo_cost rows, plus a telemetry-on serving run exported as the
+Chrome trace ``obs_trace.json``).
+
+Profiling: set ``REPRO_PROFILE=<dir>`` to wrap the selected suites in a
+``jax.profiler`` trace (``repro.obs.profile_trace``); engine phases are
+annotated via ``jax.named_scope`` either way.
 """
 
 import sys
@@ -56,6 +64,10 @@ SUITES = [
      "beyond-paper: LEA-coded microbatch DP in the trainer"),
     ("roofline", "roofline",
      "33-cell dry-run roofline terms (from experiments/dryrun)"),
+    ("obs_report", "obs_report",
+     "cross-bench regression summary: metric deltas vs committed baselines, "
+     "softgate warnings, provenance audit, hlo_cost rows + Chrome trace; "
+     "writes BENCH_obs.json"),
 ]
 
 
@@ -81,17 +93,24 @@ def main(argv: list[str] | None = None) -> None:
 
     import importlib
 
+    # REPRO_PROFILE=<dir> wraps the whole selection in a jax.profiler trace;
+    # each suite gets a host-side TraceAnnotation span (repro.obs.profiling)
+    from repro.obs import annotate, profile_trace
+
     print("name,us_per_call,derived")
     failed = False
-    for name, module, _ in selected:
-        try:
-            fn = importlib.import_module(f"benchmarks.{module}").run
-            for row in fn():
-                print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")
-        except Exception as e:  # pragma: no cover
-            failed = True
-            print(f"{name},0,\"SUITE ERROR: {e}\"", file=sys.stdout)
-            traceback.print_exc(file=sys.stderr)
+    with profile_trace("benchmarks.run"):
+        for name, module, _ in selected:
+            try:
+                fn = importlib.import_module(f"benchmarks.{module}").run
+                with annotate(f"suite:{name}"):
+                    rows = fn()
+                for row in rows:
+                    print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")
+            except Exception as e:  # pragma: no cover
+                failed = True
+                print(f"{name},0,\"SUITE ERROR: {e}\"", file=sys.stdout)
+                traceback.print_exc(file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

@@ -31,8 +31,9 @@ import subprocess
 import sys
 import time
 
-from benchmarks._softgate import (SLOWDOWN_WARN_FRACTION, committed_baseline,
-                                  warn_compiles, warn_slowdown)
+from benchmarks._softgate import (SLOWDOWN_WARN_FRACTION, collect,
+                                  committed_baseline, warn_compiles,
+                                  warn_slowdown)
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
@@ -121,10 +122,14 @@ def _child_main() -> None:
     # failure — the hard in-run assertion above is the real gate)
     baseline = committed_baseline(_BASELINE_PATH)
     baseline_rps = baseline.get("rows_per_sec")
-    slowdown_warned = warn_slowdown("sweep_smoke", rows_per_sec, baseline_rps)
-    compile_warned = warn_compiles(
-        "sweep_smoke", family_compiles, baseline.get("family_compiles", {})
+    warnings = collect(
+        warn_slowdown("sweep_smoke", rows_per_sec, baseline_rps),
+        warn_compiles(
+            "sweep_smoke", family_compiles, baseline.get("family_compiles", {})
+        ),
     )
+    slowdown_warned = any(w["kind"] == "slowdown" for w in warnings)
+    compile_warned = any(w["kind"] == "compiles" for w in warnings)
 
     # per-row allocator time inside one batched allocate (the sweep hot path)
     lp = scenarios[0].lp
@@ -158,6 +163,7 @@ def _child_main() -> None:
             "cold_s": cold_s,
             "warm_s": warm_s,
             "allocator_us_per_row": allocator_us_per_row,
+            "warnings": warnings,
         },
     )
     sweeps.write_manifest(_BASELINE_PATH, doc)

@@ -186,12 +186,15 @@ def _decode_on_time(
     spec: CodeSpec, results: jnp.ndarray, on_time: jnp.ndarray
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Device decode: (nr, *dims) results + (nr,) bool -> ((k, *dims), ok)."""
-    kstar = spec.recovery_threshold
-    received = received_indices(on_time, kstar)
-    d = decode_matrix_jax(spec, received)
-    gathered = jnp.take(results, received, axis=0)            # (K*, *dims)
-    ok = jnp.sum(on_time) >= kstar
-    return jnp.tensordot(d.astype(results.dtype), gathered, axes=1), ok
+    from repro.obs.profiling import phase as _phase
+
+    with _phase("decode"):
+        kstar = spec.recovery_threshold
+        received = received_indices(on_time, kstar)
+        d = decode_matrix_jax(spec, received)
+        gathered = jnp.take(results, received, axis=0)        # (K*, *dims)
+        ok = jnp.sum(on_time) >= kstar
+        return jnp.tensordot(d.astype(results.dtype), gathered, axes=1), ok
 
 
 def coded_matmul_device(
@@ -371,14 +374,17 @@ def _decode_on_time_modp(
     spec: CodeSpec, results: jnp.ndarray, on_time: jnp.ndarray
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Exact device decode: (nr, *dims) residues + (nr,) bool -> ((k, *dims), ok)."""
-    gf = _gf()
-    kstar = spec.recovery_threshold
-    received = received_indices(on_time, kstar)
-    d = decode_matrix_modp_device(spec, received)
-    gathered = jnp.take(results, received, axis=0)         # (K*, *dims)
-    ok = jnp.sum(on_time) >= kstar
-    out = gf.from_gf(gf.matmul_gf(d, gathered.reshape(kstar, -1)))
-    return out.reshape((spec.k,) + results.shape[1:]), ok
+    from repro.obs.profiling import phase as _phase
+
+    with _phase("decode"):
+        gf = _gf()
+        kstar = spec.recovery_threshold
+        received = received_indices(on_time, kstar)
+        d = decode_matrix_modp_device(spec, received)
+        gathered = jnp.take(results, received, axis=0)     # (K*, *dims)
+        ok = jnp.sum(on_time) >= kstar
+        out = gf.from_gf(gf.matmul_gf(d, gathered.reshape(kstar, -1)))
+        return out.reshape((spec.k,) + results.shape[1:]), ok
 
 
 def coded_matmul_exact(

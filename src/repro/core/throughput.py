@@ -106,6 +106,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.obs.profiling import phase as _phase
+from repro.obs.telemetry import TelemetryFrame
+
 from . import lea as lea_mod
 from . import markov
 from .lea import LoadParams
@@ -259,8 +262,8 @@ def _rollout_block(
     pi_g: jnp.ndarray,         # (n,)
     load,                      # LoadParams (static) or lea.PoolLoad (traced)
     strategies: tuple[str, ...],
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Loads + feasibility for one block of rounds: (S, m, n), (S, m).
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Loads + feasibility + prefixes for one block: (S, m, n), (S, m), (A, m).
 
     Per-round work only (allocator DP rows, static draw chains, scoring are
     all row-independent), so any partition of the M rounds into blocks yields
@@ -276,17 +279,20 @@ def _rollout_block(
     kstar, ell_g, ell_b, mask = _load_fields(load)
     alloc_names = allocator_strategies(strategies)
     loads_by: dict[str, tuple[jnp.ndarray, jnp.ndarray]] = {}
+    prefix = jnp.zeros((len(alloc_names), m), jnp.int32)       # allocator i*
     if alloc_names:
-        if isinstance(load, lea_mod.PoolLoad):
-            loads_all, _, feas = lea_mod.allocate_masked(p_alloc, load)
-            feas_rows = jnp.broadcast_to(feas, loads_all.shape[:2])  # (A, m)
-            for j, s in enumerate(alloc_names):
-                loads_by[s] = (loads_all[j], feas_rows[j])
-        else:
-            loads_all, _ = lea_mod.allocate(p_alloc, load)  # one (A*m, n) DP
-            always = jnp.ones((m,), bool)
-            for j, s in enumerate(alloc_names):
-                loads_by[s] = (loads_all[j], always)
+        with _phase("allocate"):
+            if isinstance(load, lea_mod.PoolLoad):
+                loads_all, i_star, feas = lea_mod.allocate_masked(p_alloc, load)
+                feas_rows = jnp.broadcast_to(feas, loads_all.shape[:2])  # (A, m)
+                for j, s in enumerate(alloc_names):
+                    loads_by[s] = (loads_all[j], feas_rows[j])
+            else:
+                loads_all, i_star = lea_mod.allocate(p_alloc, load)  # one (A*m, n) DP
+                always = jnp.ones((m,), bool)
+                for j, s in enumerate(alloc_names):
+                    loads_by[s] = (loads_all[j], always)
+            prefix = i_star.astype(jnp.int32)                  # (A, m)
 
     # -- static draws (same round key per strategy, as in the seed) --
     if "static" in strategies:
@@ -306,7 +312,24 @@ def _rollout_block(
 
     loads_mat = jnp.stack([loads_by[s][0] for s in strategies])    # (S, m, n)
     feasible = jnp.stack([loads_by[s][1] for s in strategies])     # (S, m)
-    return loads_mat, feasible
+    return loads_mat, feasible, prefix
+
+
+def _score_block_stats(
+    loads_mat: jnp.ndarray, feasible: jnp.ndarray, states: jnp.ndarray,
+    mu_g, mu_b, deadline, kstar: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(m, S) success indicators + (S, m) received counts for one block.
+
+    ``received`` is an intermediate of the success rule; surfacing it is
+    free (XLA dead-code-eliminates it when the caller discards it, so the
+    telemetry=off computation is unchanged)."""
+    with _phase("score"):
+        speeds = jnp.where(states == 1, mu_g, mu_b)                # (m, n)
+        on_time = loads_mat.astype(jnp.float32) / speeds <= deadline + 1e-9
+        received = jnp.sum(jnp.where(on_time, loads_mat, 0), axis=-1)  # (S, m)
+        succ = (received >= kstar) & feasible
+    return jnp.moveaxis(succ, 0, 1), received                      # (m, S), _
 
 
 def _score_block(
@@ -314,11 +337,9 @@ def _score_block(
     mu_g, mu_b, deadline, kstar: int,
 ) -> jnp.ndarray:
     """(m, S) success indicators from one block's loads + trajectory."""
-    speeds = jnp.where(states == 1, mu_g, mu_b)                    # (m, n)
-    on_time = loads_mat.astype(jnp.float32) / speeds <= deadline + 1e-9
-    received = jnp.sum(jnp.where(on_time, loads_mat, 0), axis=-1)  # (S, m)
-    succ = (received >= kstar) & feasible
-    return jnp.moveaxis(succ, 0, 1)                                # (m, S)
+    return _score_block_stats(
+        loads_mat, feasible, states, mu_g, mu_b, deadline, kstar
+    )[0]
 
 
 def _check_strategies(strategies: tuple[str, ...]) -> None:
@@ -354,38 +375,80 @@ def _simulate_impl(
     rounds: int,
     strategies: tuple[str, ...],
     round_chunk: int | None,
-) -> jnp.ndarray:
+    telemetry: bool = False,
+):
     """Shared engine body behind :func:`simulate_strategies` (static
     ``LoadParams``) and :func:`simulate_strategies_pool` (traced
     ``PoolLoad``).  The two flavours differ only in the value-preserving
-    masking constructs the PoolLoad branch threads through the layers."""
+    masking constructs the PoolLoad branch threads through the layers.
+
+    ``telemetry`` (static): False returns the (rounds, S) success stream
+    on literally the pre-existing code path; True additionally returns a
+    :class:`repro.obs.telemetry.TelemetryFrame` of per-round streams —
+    pure extra outputs of the same traced computation (the success stream
+    is built from the identical intermediate values, so it is
+    bit-identical either way; property-tested in tests/obs/)."""
     _check_strategies(strategies)
     _check_chain_shapes(p_gg, p_bb, rounds)
     masked = isinstance(load, lea_mod.PoolLoad)
     k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(
-        k_traj, p_gg, p_bb, rounds,
-        worker_mask=load.mask if masked else None,
-    )                                                              # (M, n)
+    with _phase("trajectory"):
+        states = markov.sample_trajectory(
+            k_traj, p_gg, p_bb, rounds,
+            worker_mask=load.mask if masked else None,
+        )                                                          # (M, n)
     pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
     round_keys = jax.random.split(k_rounds, rounds)
     alloc_names = allocator_strategies(strategies)
     if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
+        with _phase("policy_replay"):
+            p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
     else:  # keep the block signature uniform; zero-size axis costs nothing
         p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
     kstar = load.kstar
 
     def block(states_b, keys_b, p_alloc_b):
-        loads_mat, feasible = _rollout_block(
+        loads_mat, feasible, prefix = _rollout_block(
             states_b, keys_b, p_alloc_b, pi_g, load, strategies
         )
-        return _score_block(
+        succ, received = _score_block_stats(
             loads_mat, feasible, states_b, mu_g, mu_b, deadline, kstar
+        )
+        if not telemetry:
+            return succ
+        # time-major extra streams (m leading) so the chunked path can
+        # unblock them exactly like succ
+        return succ, (
+            jnp.moveaxis(prefix, 0, 1),                            # (m, A)
+            jnp.moveaxis(jnp.sum(loads_mat, axis=-1), 0, 1),       # (m, S)
+            jnp.moveaxis(received, 0, 1),                          # (m, S)
+            jnp.moveaxis(feasible, 0, 1),                          # (m, S)
+        )
+
+    def with_frame(succ, tel):
+        # estimator error vs. the genie's true conditional p_good, masked
+        # workers excluded — O(A*M*n), computed once outside the blocks
+        from repro.policies.estimators import oracle_p_good
+
+        p_true = oracle_p_good(states, p_gg, p_bb, pi_g)           # (M, n)
+        err = jnp.abs(p_alloc - p_true[None])                      # (A, M, n)
+        if masked:
+            w = load.mask.astype(jnp.float32)
+            est = jnp.sum(err * w, axis=-1) / jnp.maximum(jnp.sum(w), 1.0)
+        else:
+            est = jnp.mean(err, axis=-1)                           # (A, M)
+        prefix_t, load_total_t, received_t, feasible_t = tel
+        return succ, TelemetryFrame(
+            est_err=jnp.moveaxis(est, 0, 1),                       # (M, A)
+            prefix_size=prefix_t,
+            load_total=load_total_t,
+            received=received_t,
+            feasible=feasible_t,
         )
 
     if round_chunk is None or round_chunk >= rounds:
-        return block(states, round_keys, p_alloc)
+        out = block(states, round_keys, p_alloc)
+        return with_frame(*out) if telemetry else out
 
     if round_chunk <= 0:
         raise ValueError("round_chunk must be positive")
@@ -398,7 +461,7 @@ def _simulate_impl(
     p_alloc_p = (
         jnp.concatenate([p_alloc, p_alloc[:, -pad:]], axis=1) if pad else p_alloc
     )
-    succ = jax.lax.map(
+    out = jax.lax.map(
         lambda xs: block(*xs),
         (
             states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
@@ -410,8 +473,15 @@ def _simulate_impl(
                 0, 1,
             ),
         ),
-    )  # (n_blocks, round_chunk, S)
-    return succ.reshape((n_blocks * round_chunk,) + succ.shape[2:])[:rounds]
+    )  # leaves: (n_blocks, round_chunk, ...)
+
+    def unblock(x):
+        return x.reshape((n_blocks * round_chunk,) + x.shape[2:])[:rounds]
+
+    if not telemetry:
+        return unblock(out)
+    succ, tel = out
+    return with_frame(unblock(succ), jax.tree.map(unblock, tel))
 
 
 @partial(jax.jit, static_argnames=("strategies", "lp", "rounds", "round_chunk"))
@@ -451,7 +521,8 @@ def simulate_strategies(
     )
 
 
-@partial(jax.jit, static_argnames=("strategies", "rounds", "round_chunk"))
+@partial(jax.jit,
+         static_argnames=("strategies", "rounds", "round_chunk", "telemetry"))
 def simulate_strategies_pool(
     key: jax.Array,
     pool,
@@ -463,7 +534,8 @@ def simulate_strategies_pool(
     rounds: int,
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
     round_chunk: int | None = None,
-) -> jnp.ndarray:
+    telemetry: bool = False,
+):
     """:func:`simulate_strategies` with TRACED load parameters.
 
     ``pool`` is a :class:`repro.core.lea.PoolLoad`: kstar/ell_g/ell_b are
@@ -475,10 +547,16 @@ def simulate_strategies_pool(
     on the same key (exact on the ref-DP path — see the module docstring
     for the TPU-kernel caveat, the padded-row PRNG convention and the
     explicit infeasibility flag).
+
+    ``telemetry`` (static): False returns the (rounds, S) success stream
+    unchanged; True returns ``(succ, TelemetryFrame)`` — extra per-round
+    streams out of the SAME traced computation (see
+    :mod:`repro.obs.telemetry`; bit-identity and the zero-extra-compile
+    property are asserted in tests/obs/).
     """
     return _simulate_impl(
         key, pool, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies,
-        round_chunk,
+        round_chunk, telemetry,
     )
 
 
@@ -506,7 +584,7 @@ def _rollout_impl(
         p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)
     else:
         p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
-    loads_mat, feasible = _rollout_block(
+    loads_mat, feasible, _prefix = _rollout_block(
         states, round_keys, p_alloc, pi_g, load, strategies
     )
     return states, loads_mat, feasible
@@ -688,7 +766,8 @@ def sweep_pool(
     rounds: int,
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
     round_chunk: int | None = None,
-) -> jnp.ndarray:
+    telemetry: bool = False,
+):
     """:func:`sweep` with TRACED per-row load parameters.
 
     ``pool`` is a :class:`repro.core.lea.PoolLoad` whose leaves carry a
@@ -697,6 +776,9 @@ def sweep_pool(
     compiles to ONE XLA computation — the fused path the ``repro.sweeps``
     executor runs.  Full-width rows are bit-identical to :func:`sweep` with
     the equivalent static ``LoadParams`` on the same keys.
+
+    ``telemetry=True`` returns ``(succ, TelemetryFrame)`` with a leading
+    (B,) axis on every frame leaf (same compile-fusion contract).
     """
     strategies = tuple(strategies)   # lists would fail jit's static-arg hashing
     b = p_gg.shape[0]
@@ -704,7 +786,7 @@ def sweep_pool(
     mu_b = jnp.broadcast_to(jnp.asarray(mu_b, jnp.float32), (b,))
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (b,))
     fn = partial(simulate_strategies_pool, rounds=rounds, strategies=strategies,
-                 round_chunk=round_chunk)
+                 round_chunk=round_chunk, telemetry=telemetry)
     return jax.vmap(
         lambda k, pl, pg, pb, mg, mb, d: fn(
             k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
@@ -737,3 +819,16 @@ def compare(
         key, lp, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies=tuple(strategies)
     )
     return {s: timely_throughput(succ[:, j]) for j, s in enumerate(strategies)}
+
+
+# the engine's jitted entry points feed the unified obs compile counter
+# (repro.obs.counters) — one registry instead of per-module cache hooks
+from repro.obs import counters as _obs_counters  # noqa: E402
+
+_obs_counters.register_compiled("engine.simulate_strategies", simulate_strategies)
+_obs_counters.register_compiled(
+    "engine.simulate_strategies_pool", simulate_strategies_pool
+)
+_obs_counters.register_compiled("engine.rollout", rollout)
+_obs_counters.register_compiled("engine.rollout_pool", rollout_pool)
+_obs_counters.register_compiled("engine.serve_rollout", serve_rollout)

@@ -26,6 +26,8 @@ those failure modes on top of the batched engine:
     into one compile — the same convention as ``repro.sweeps``).
 """
 
+from repro.obs.telemetry import FaultTelemetry
+
 from .channels import (FaultTrace, apply_channel, base_trace, fault_key,
                        injector_names, make_channel, make_injector,
                        register_injector)
@@ -35,8 +37,8 @@ from .packets import (coded_matmul_exact_packets, coded_matmul_packets,
                       layer1_recovery, packet_counts, packet_on_time)
 
 __all__ = [
-    "FaultOutcomes", "FaultTrace", "apply_channel", "base_trace",
-    "coded_matmul_exact_packets", "coded_matmul_packets",
+    "FaultOutcomes", "FaultTelemetry", "FaultTrace", "apply_channel",
+    "base_trace", "coded_matmul_exact_packets", "coded_matmul_packets",
     "fault_compile_cache_size", "fault_key", "injector_names",
     "layer1_recovery", "make_channel", "make_injector", "packet_counts",
     "packet_on_time", "register_injector", "simulate_faults", "sweep_faults",

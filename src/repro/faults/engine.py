@@ -33,6 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import throughput
+from repro.obs import counters as _obs_counters
+from repro.obs.profiling import phase as _phase
+from repro.obs.telemetry import FaultTelemetry
 
 from .channels import apply_channel, base_trace, fault_key
 from .packets import layer1_recovery, packet_counts, packet_on_time
@@ -52,8 +55,8 @@ class FaultOutcomes(NamedTuple):
 
 def _simulate_faults_impl(
     key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
-    rounds, strategies, r, packets, p1,
-) -> FaultOutcomes:
+    rounds, strategies, r, packets, p1, telemetry=False,
+):
     states, loads, feasible = throughput._rollout_impl(
         key, pool, p_gg, p_bb, rounds, strategies
     )                                   # (M, n), (S, M, n), (S, M)
@@ -61,26 +64,40 @@ def _simulate_faults_impl(
     trace = base_trace(rounds, n, r, packets, deadline)
     trace = apply_channel(fault_key(key), channel, trace)
 
-    mask_aon = packet_on_time(states, loads, mu_g, mu_b, deadline, r, packets,
-                              trace=trace, conserve=False)   # (S, M, nr, P)
-    mask_con = packet_on_time(states, loads, mu_g, mu_b, deadline, r, packets,
-                              trace=trace, conserve=True)
-    counts_aon = packet_counts(mask_aon)                     # (S, M, P)
-    counts_con = packet_counts(mask_con)
+    with _phase("decode"):
+        mask_aon = packet_on_time(states, loads, mu_g, mu_b, deadline, r,
+                                  packets, trace=trace, conserve=False)
+        mask_con = packet_on_time(states, loads, mu_g, mu_b, deadline, r,
+                                  packets, trace=trace, conserve=True)
+        counts_aon = packet_counts(mask_aon)                 # (S, M, P)
+        counts_con = packet_counts(mask_con)
 
     kstar = pool.kstar
     full_aon = feasible & jnp.all(counts_aon >= kstar, axis=-1)
     full_con = feasible & jnp.all(counts_con >= kstar, axis=-1)
     l1 = feasible & layer1_recovery(counts_con, k1star, p1)
     to_ms = lambda x: jnp.moveaxis(x, 0, 1)                  # (S, M) -> (M, S)
-    return FaultOutcomes(
+    outcomes = FaultOutcomes(
         full_aon=to_ms(full_aon),
         full_conserve=to_ms(full_con),
         partial=to_ms(l1 & ~full_con),
     )
+    if not telemetry:
+        return outcomes
+    # fault-event counts + binding received margins: pure extra outputs of
+    # the same traced values (the outcome streams above are untouched)
+    count_i = lambda m, ax: jnp.sum(m.astype(jnp.int32), axis=ax)
+    tel = FaultTelemetry(
+        preempted=count_i(trace.t_cut < deadline, -1),       # (M,)
+        packets_lost=count_i(~trace.keep, (-3, -2, -1)),     # (M,)
+        received_aon=to_ms(jnp.min(counts_aon, axis=-1)),    # (M, S)
+        received_conserve=to_ms(jnp.min(counts_con, axis=-1)),
+    )
+    return outcomes, tel
 
 
-@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets", "p1"))
+@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets",
+                                   "p1", "telemetry"))
 def simulate_faults(
     key: jax.Array,
     pool,
@@ -97,7 +114,8 @@ def simulate_faults(
     r: int,
     packets: int,
     p1: int = 1,
-) -> FaultOutcomes:
+    telemetry: bool = False,
+):
     """One row's fault-scored simulation (see module docstring).
 
     ``pool`` is a :class:`repro.core.lea.PoolLoad` (traced K*/ell + mask);
@@ -108,30 +126,44 @@ def simulate_faults(
     workers); with an empty channel AND ``packets=1`` the ``full_aon``
     column reproduces :func:`repro.core.throughput.simulate_strategies_pool`
     success indicators exactly (the same loads, the same on-time rule).
+
+    ``telemetry`` (static): True returns ``(FaultOutcomes,
+    FaultTelemetry)`` — per-round fault-event counts and binding received
+    margins out of the same traced computation; False (default) is the
+    pre-existing path, bit-identical.
     """
     return _simulate_faults_impl(
         key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
-        rounds, strategies, r, packets, p1,
+        rounds, strategies, r, packets, p1, telemetry,
     )
 
 
-@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets", "p1"))
+@partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets",
+                                   "p1", "telemetry"))
 def _run_fault_group(
     keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
-    *, rounds, strategies, r, packets, p1,
-) -> FaultOutcomes:
+    *, rounds, strategies, r, packets, p1, telemetry=False,
+):
     """(B,) rows -> (B, rounds, S) outcomes, one XLA computation."""
     return jax.vmap(
         lambda k, pl, pg, pb, mg, mb, d, ch, k1: _simulate_faults_impl(
             k, pl, pg, pb, mg, mb, d, ch, k1,
-            rounds, strategies, r, packets, p1,
+            rounds, strategies, r, packets, p1, telemetry,
         )
     )(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star)
 
 
+_obs_counters.register_compiled("faults.sweep", _run_fault_group)
+_obs_counters.register_compiled("faults.simulate", simulate_faults)
+
+
 def fault_compile_cache_size() -> int:
-    """Distinct fault-group computations compiled so far (test hook)."""
-    return _run_fault_group._cache_size()
+    """Distinct fault-group computations compiled so far.
+
+    Thin alias over the unified obs counter
+    (``obs.compile_events("faults.sweep")``) — kept for the pre-obs tests
+    and benchmarks."""
+    return _obs_counters.compile_events("faults.sweep")
 
 
 def sweep_faults(
@@ -150,14 +182,18 @@ def sweep_faults(
     r: int,
     packets: int,
     p1: int = 1,
-) -> FaultOutcomes:
+    telemetry: bool = False,
+):
     """Batched :func:`simulate_faults`: every leaf carries a leading (B,) axis.
 
     ``channel`` injector parameters are (B,) traced leaves (same structure
     per row), so a whole fault-parameter grid — different drop rates,
     preemption probabilities, burst rates per row — fuses into ONE compile
     per static (rounds, strategies, r, packets, p1) signature.  Returns
-    :class:`FaultOutcomes` of (B, rounds, S) arrays.
+    :class:`FaultOutcomes` of (B, rounds, S) arrays; with
+    ``telemetry=True``, ``(FaultOutcomes, FaultTelemetry)`` with a leading
+    (B,) axis on every telemetry leaf (same one-compile contract — a
+    telemetry-on grid is still ONE computation).
     """
     strategies = tuple(strategies)
     b = p_gg.shape[0]
@@ -167,4 +203,5 @@ def sweep_faults(
         keys, pool, p_gg, p_bb, as_b(mu_g), as_b(mu_b), as_b(deadline),
         channel, jnp.broadcast_to(jnp.asarray(k1star, jnp.int32), (b,)),
         rounds=rounds, strategies=strategies, r=r, packets=packets, p1=p1,
+        telemetry=telemetry,
     )

@@ -429,3 +429,199 @@ def analyze(hlo: str) -> Costs:
     # fusions' interiors are counted when the fusion instruction is visited;
     # exclude called computations from the entry walk by only walking ENTRY.
     return cost_of_computation(entry, comps, shapes, memo)
+
+
+# ---------------------------------------------------------------------------
+# CLI: lower the engine's pool-path entry points and walk their HLO
+# ---------------------------------------------------------------------------
+#
+# The walker above is a pure text pass; the functions below are the bridge
+# to the live engine: each builds a SMALL representative invocation of one
+# of the current pool-path entry points (traced-K* engine, fault sweep,
+# serving sweep), lowers + compiles it, and hands ``compiled.as_text()`` to
+# :func:`analyze`.  Shapes are tiny on purpose — the point is static
+# FLOP/byte structure per round (``benchmarks/run.py obs_report`` divides
+# them out as per-target cost rows), not a benchmark.
+
+_ENTRY_ROUNDS = 16
+_ENTRY_N = 8
+
+
+def _hlo_simulate_strategies_pool() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import throughput
+    from repro.core.lea import PoolLoad
+
+    n = _ENTRY_N
+    pool = PoolLoad(
+        kstar=jnp.int32(20), ell_g=jnp.int32(5), ell_b=jnp.int32(1),
+        mask=jnp.ones((n,), bool),
+    )
+    return throughput.simulate_strategies_pool.lower(
+        jax.random.PRNGKey(0), pool,
+        jnp.full((n,), 0.8, jnp.float32), jnp.full((n,), 0.7, jnp.float32),
+        5.0, 1.0, 1.0,
+        rounds=_ENTRY_ROUNDS, strategies=("lea", "static"),
+    ).compile().as_text()
+
+
+def _hlo_sweep_faults() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import faults
+    from repro.core.lea import PoolLoad
+
+    n, b = _ENTRY_N, 2
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    pool = PoolLoad(
+        kstar=jnp.full((b,), 20, jnp.int32),
+        ell_g=jnp.full((b,), 5, jnp.int32),
+        ell_b=jnp.full((b,), 1, jnp.int32),
+        mask=jnp.ones((b, n), bool),
+    )
+    p_gg = jnp.full((b, n), 0.8, jnp.float32)
+    p_bb = jnp.full((b, n), 0.7, jnp.float32)
+    channel = faults.make_channel([
+        ("preempt", {"p_preempt": jnp.full((b,), 0.2, jnp.float32)}),
+    ])
+    fn = jax.jit(lambda k, pl, pg, pb, ch: faults.sweep_faults(
+        k, pl, pg, pb, 5.0, 1.0, 1.0, ch, 10,
+        rounds=_ENTRY_ROUNDS, strategies=("lea", "static"), r=2, packets=2,
+    ))
+    return fn.lower(keys, pool, p_gg, p_bb, channel).compile().as_text()
+
+
+def _hlo_sweep_serving() -> str:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import serving
+
+    n, b = _ENTRY_N, 2
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    mask = jnp.ones((b, n), bool)
+    p_gg = jnp.full((b, n), 0.8, jnp.float32)
+    p_bb = jnp.full((b, n), 0.7, jnp.float32)
+    spec = serving.RequestSpec(
+        kstar=jnp.full((b,), 20, jnp.int32),
+        ell_g=jnp.full((b,), 5, jnp.int32),
+        ell_b=jnp.full((b,), 1, jnp.int32),
+        deadline_rel=jnp.full((b,), 2, jnp.int32),
+        admit_threshold=jnp.zeros((b,), jnp.float32),
+        reserve_cap=jnp.full((b,), serving.ADMIT_ALL_CAP, jnp.float32),
+    )
+    process = serving.make_process(
+        "poisson", rate=jnp.full((b,), 1.0, jnp.float32)
+    )
+    fn = jax.jit(lambda k, m, pg, pb, sp, pr: serving.sweep_serving(
+        k, m, pg, pb, 5.0, 1.0, 1.0, sp, pr,
+        rounds=_ENTRY_ROUNDS, strategies=("lea",), capacity=2, grace=0,
+    ))
+    return fn.lower(keys, mask, p_gg, p_bb, spec, process).compile().as_text()
+
+
+# name -> HLO builder; the names ARE the engine's pool-path entry points
+ENTRY_POINTS = {
+    "simulate_strategies_pool": _hlo_simulate_strategies_pool,
+    "sweep_faults": _hlo_sweep_faults,
+    "sweep_serving": _hlo_sweep_serving,
+}
+
+
+def entry_point_names() -> tuple[str, ...]:
+    return tuple(sorted(ENTRY_POINTS))
+
+
+def estimate_entry(name: str) -> dict:
+    """Lower entry point ``name`` at the reference small shapes and return
+    its static cost row (JSON-able; rounds-normalised columns included)."""
+    if name not in ENTRY_POINTS:
+        raise KeyError(
+            f"unknown entry point {name!r}; available: "
+            f"{', '.join(entry_point_names())}"
+        )
+    costs = analyze(ENTRY_POINTS[name]())
+    flops = costs.flops
+    return {
+        "target": name,
+        "rounds": _ENTRY_ROUNDS,
+        "n": _ENTRY_N,
+        "matmul_flops": costs.matmul_flops,
+        "other_flops": costs.other_flops,
+        "flops": flops,
+        "hbm_bytes": costs.hbm_bytes,
+        "collective_bytes": costs.collective_bytes,
+        "per_collective": dict(costs.per_collective),
+        "flops_per_round": flops / _ENTRY_ROUNDS,
+        "hbm_bytes_per_round": costs.hbm_bytes / _ENTRY_ROUNDS,
+        "arithmetic_intensity": flops / max(costs.hbm_bytes, 1.0),
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+    import json
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.launch.hlo_cost",
+        description=(
+            "Static FLOP/byte cost walk of the engine's pool-path entry "
+            "points (or a raw HLO text dump)."
+        ),
+    )
+    parser.add_argument(
+        "targets", nargs="*",
+        help=f"entry points to lower (default: all of "
+             f"{', '.join(entry_point_names())})",
+    )
+    parser.add_argument("--list", action="store_true",
+                        help="print the known entry points and exit")
+    parser.add_argument("--hlo-file", metavar="PATH",
+                        help="analyze a raw HLO text file instead of lowering")
+    parser.add_argument("--json", action="store_true",
+                        help="emit one JSON document instead of CSV rows")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        print("\n".join(entry_point_names()))
+        return
+    if args.hlo_file:
+        with open(args.hlo_file) as f:
+            costs = analyze(f.read())
+        rows = [{
+            "target": args.hlo_file,
+            "matmul_flops": costs.matmul_flops,
+            "other_flops": costs.other_flops,
+            "flops": costs.flops,
+            "hbm_bytes": costs.hbm_bytes,
+            "collective_bytes": costs.collective_bytes,
+            "per_collective": dict(costs.per_collective),
+        }]
+    else:
+        targets = args.targets or list(entry_point_names())
+        unknown = [t for t in targets if t not in ENTRY_POINTS]
+        if unknown:
+            raise SystemExit(
+                f"unknown entry point(s): {', '.join(unknown)}\n"
+                f"available: {', '.join(entry_point_names())}"
+            )
+        rows = [estimate_entry(t) for t in targets]
+
+    if args.json:
+        print(json.dumps(rows, indent=2, allow_nan=False))
+        return
+    cols = ("target", "flops", "matmul_flops", "hbm_bytes",
+            "collective_bytes", "arithmetic_intensity")
+    print(",".join(cols))
+    for row in rows:
+        print(",".join(
+            f"{row[c]:.3f}" if isinstance(row.get(c), float) else str(row.get(c, ""))
+            for c in cols
+        ))
+
+
+if __name__ == "__main__":
+    main()

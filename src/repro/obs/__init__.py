@@ -1,0 +1,52 @@
+"""repro.obs — observability: telemetry streams, provenance, profiling.
+
+The engines (:mod:`repro.core.throughput`, :mod:`repro.faults.engine`,
+:mod:`repro.serving.engine`) expose an optional ``telemetry=`` static flag
+that threads extra per-round streams out of the SAME compiled computation
+— estimator error vs. the genie's true p_good, allocated-load totals,
+allocator prefix sizes, queue occupancy, admission decisions, fault-event
+counts.  ``telemetry=False`` (the default) is literally the pre-existing
+code path: bit-identical outputs, zero cost, and a telemetry-on batch
+still compiles exactly once per sweep family (asserted through the
+unified compile counter below).  This package owns everything that sits
+on top of those streams:
+
+  * :mod:`~repro.obs.counters`   — the ONE compile-event counter registry
+    behind ``sweeps.compile_cache_size`` /
+    ``faults.fault_compile_cache_size`` /
+    ``serving.serving_compile_cache_size`` (all three are now thin
+    aliases over :func:`compile_events`);
+  * :mod:`~repro.obs.telemetry`  — :class:`TelemetryFrame` /
+    :class:`FaultTelemetry` / :class:`ServingTelemetry` pytrees plus
+    host-side exporters: flat metric tables (:func:`metric_streams`,
+    :func:`metric_table`) and Chrome trace-event JSON
+    (:func:`serving_trace`, viewable in Perfetto / ``chrome://tracing``);
+  * :mod:`~repro.obs.provenance` — :func:`provenance`: git sha + dirty
+    flag, jax/jaxlib versions, backend/device, caller-supplied timestamp
+    — stamped into every ``BENCH_*.json`` by
+    :func:`repro.sweeps.results.write_manifest`;
+  * :mod:`~repro.obs.profiling`  — ``jax.named_scope`` phase spans inside
+    the engines (trajectory sample -> policy replay -> allocate -> score
+    -> decode), host-side ``jax.profiler.TraceAnnotation`` spans, and a
+    ``REPRO_PROFILE=<dir>``-gated profiler-trace context manager.
+
+``benchmarks/run.py obs_report`` is the consumer: it aggregates every
+committed ``BENCH_*.json`` into one provenance-stamped regression summary
+(metric deltas vs. the committed baselines, softgate warnings collected)
+and renders a serving run as a request-timeline trace.
+"""
+
+from .counters import compile_events, counter_names, register_compiled
+from .profiling import (PROFILE_ENV, annotate, phase, profile_dir,
+                        profile_trace)
+from .provenance import provenance
+from .telemetry import (FaultTelemetry, ServingTelemetry, TelemetryFrame,
+                        metric_streams, metric_table, serving_trace,
+                        validate_trace, write_trace)
+
+__all__ = [
+    "FaultTelemetry", "PROFILE_ENV", "ServingTelemetry", "TelemetryFrame",
+    "annotate", "compile_events", "counter_names", "metric_streams",
+    "metric_table", "phase", "profile_dir", "profile_trace", "provenance",
+    "register_compiled", "serving_trace", "validate_trace", "write_trace",
+]

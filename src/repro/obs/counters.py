@@ -1,0 +1,59 @@
+"""The unified compile-event counter.
+
+Before ``repro.obs`` each engine carried its own copy-pasted hook over its
+jitted group entry point (``sweeps.compile_cache_size``,
+``faults.fault_compile_cache_size``, ``serving.serving_compile_cache_size``
+— all three were ``<jitted>._cache_size()`` one-liners).  They now register
+here once at import time and the old names are thin aliases over
+:func:`compile_events`, so "did this sweep add a compile?" is a single
+question with a single answer no matter which engine ran:
+
+    before = obs.compile_events()
+    ... run any mix of sweep families ...
+    assert obs.compile_events() - before == expected_new_computations
+
+Counters are monotonic per process (they read jit caches, which only
+grow); deltas, not absolutes, are the meaningful quantity.  Registration
+is idempotent by name — re-importing an engine module re-registers the
+same hook.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable[[], int]] = {}
+
+
+def register_compiled(name: str, jitted) -> None:
+    """Register a jitted entry point's compile-cache counter under ``name``.
+
+    ``jitted`` is anything with a ``_cache_size()`` hook (a ``jax.jit``
+    wrapper) or a plain zero-arg callable returning an int.
+    """
+    hook = getattr(jitted, "_cache_size", jitted)
+    if not callable(hook):
+        raise TypeError(f"{name!r}: {jitted!r} has no _cache_size and is not callable")
+    _REGISTRY[name] = hook
+
+
+def counter_names() -> tuple[str, ...]:
+    """Registered counter names, sorted (only imported engines appear)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def compile_events(name: str | None = None) -> int:
+    """Compiled computations so far: one named counter, or the sum of all.
+
+    With ``name=None`` the value sums every registered engine — the number
+    the acceptance tests diff around a sweep to assert "this run added
+    exactly N compiles" (N=1 per new family signature, and telemetry=on
+    must add zero beyond that).
+    """
+    if name is None:
+        return sum(int(hook()) for hook in _REGISTRY.values())
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"no compile counter {name!r}; registered: {counter_names()}"
+        )
+    return int(_REGISTRY[name]())

@@ -1,0 +1,79 @@
+"""Profiling hooks: named phase scopes, host spans, REPRO_PROFILE traces.
+
+Three layers, all zero-cost when unused:
+
+  * :func:`phase` — ``jax.named_scope`` around the engine phases
+    (``trajectory`` -> ``policy_replay`` -> ``allocate`` -> ``score`` ->
+    ``decode``).  Pure trace-time metadata: the names land in the HLO (and
+    therefore in profiler timelines) and add NOTHING at runtime, so the
+    engines wrap their phases unconditionally.
+  * :func:`annotate` — a host-side ``jax.profiler.TraceAnnotation`` span
+    (e.g. around one benchmark target).  No-op unless a profiler trace is
+    being collected.
+  * :func:`profile_trace` — the collection gate: when the
+    ``REPRO_PROFILE`` env var names a directory, the context manager wraps
+    its body in ``jax.profiler.start_trace``/``stop_trace`` and dumps a
+    trace viewable in Perfetto / TensorBoard there; unset, it is a no-op.
+    ``benchmarks/run.py`` wraps every selected suite in it, so
+
+        REPRO_PROFILE=/tmp/trace python -m benchmarks.run bench_serving
+
+    profiles a whole target with the engine phases labelled.
+
+jax is imported lazily so ``--list``-style cold paths never pay for it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator
+
+PROFILE_ENV = "REPRO_PROFILE"
+
+# engine phases, in execution order — the catalogue ROADMAP documents
+ENGINE_PHASES = ("trajectory", "policy_replay", "allocate", "score", "decode")
+
+
+def profile_dir() -> str | None:
+    """The REPRO_PROFILE trace directory, or None when profiling is off."""
+    return os.environ.get(PROFILE_ENV) or None
+
+
+def phase(name: str):
+    """``jax.named_scope`` for one engine phase (trace-time metadata only)."""
+    import jax
+
+    return jax.named_scope(f"repro.{name}")
+
+
+@contextlib.contextmanager
+def annotate(name: str) -> Iterator[None]:
+    """Host-side profiler span; inert when no trace is being collected."""
+    import jax
+
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def profile_trace(label: str = "repro") -> Iterator[str | None]:
+    """Collect a jax profiler trace into $REPRO_PROFILE, if set.
+
+    Yields the trace directory (or None when profiling is off).  The
+    directory is created if missing; ``stop_trace`` runs even when the
+    body raises, so a crashing benchmark still leaves a usable trace.
+    """
+    out = profile_dir()
+    if out is None:
+        yield None
+        return
+    import jax
+
+    os.makedirs(out, exist_ok=True)
+    jax.profiler.start_trace(out)
+    try:
+        with jax.profiler.TraceAnnotation(label):
+            yield out
+    finally:
+        jax.profiler.stop_trace()

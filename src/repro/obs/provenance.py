@@ -1,0 +1,86 @@
+"""Run provenance: the who/where/when stamped into every BENCH_*.json.
+
+A committed manifest is a regression baseline; a baseline without
+provenance is unfalsifiable ("was that number from this machine? this
+jax? a dirty tree?").  :func:`provenance` answers with a small JSON-able
+dict; :func:`repro.sweeps.results.write_manifest` stamps it into every
+manifest it writes, and ``benchmarks/run.py obs_report`` surfaces it in
+the cross-bench regression summary.
+
+The timestamp is PASSED IN by the caller (``time.time()`` at the call
+site) rather than read here — the one field that would otherwise make two
+provenance calls in the same process disagree, which would break the
+exporter round-trip tests and pollute manifest diffs with noise.
+"""
+
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import sys
+from typing import Any
+
+_SCHEMA_KEYS = (
+    "git_sha", "git_dirty", "jax", "jaxlib", "backend", "device",
+    "python", "platform", "timestamp",
+)
+
+
+def _repo_root() -> str:
+    # src/repro/obs/provenance.py -> the checkout root three levels up
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _git(args: list[str], cwd: str) -> str | None:
+    try:
+        proc = subprocess.run(
+            ["git", *args], capture_output=True, text=True, timeout=30,
+            cwd=cwd,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return proc.stdout.strip() if proc.returncode == 0 else None
+
+
+def provenance(
+    timestamp: float | str | None = None, *, root: str | None = None
+) -> dict[str, Any]:
+    """The run's provenance record (all keys always present, None if unknown).
+
+    ``timestamp`` is caller-supplied (see module docstring); ``root`` the
+    git checkout to interrogate (defaults to this package's checkout).
+    Device facts come from the default jax backend; outside a usable git
+    checkout ``git_sha``/``git_dirty`` are None rather than raising —
+    provenance must never fail a benchmark run.
+    """
+    cwd = root or _repo_root()
+    sha = _git(["rev-parse", "HEAD"], cwd)
+    status = _git(["status", "--porcelain"], cwd)
+    doc: dict[str, Any] = {
+        "git_sha": sha,
+        "git_dirty": bool(status) if status is not None else None,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "timestamp": timestamp,
+    }
+    try:  # jax facts: best-effort, never the reason a bench dies
+        import jax
+        import jaxlib
+
+        doc["jax"] = jax.__version__
+        doc["jaxlib"] = jaxlib.__version__
+        doc["backend"] = jax.default_backend()
+        devices = jax.devices()
+        doc["device"] = devices[0].device_kind if devices else None
+    except Exception:  # pragma: no cover - jax import is container-guaranteed
+        doc.update({"jax": None, "jaxlib": None, "backend": None,
+                    "device": None})
+    return doc
+
+
+def has_required_fields(doc: dict[str, Any]) -> bool:
+    """True iff ``doc`` carries the full provenance schema (values may be
+    None — the keys are the contract the manifest test pins)."""
+    return all(k in doc for k in _SCHEMA_KEYS)

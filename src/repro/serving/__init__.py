@@ -25,6 +25,8 @@ load-adaptive redundancy of *Slack Squeeze Coded Computing*, arXiv
     (:class:`ServingOutcomes` + sojourn streams for latency percentiles).
 """
 
+from repro.obs.telemetry import ServingTelemetry
+
 from .admission import admission_room, minimal_demand, predicted_success
 from .arrivals import (arrival_key, make_process, process_names,
                        register_process, sample_arrivals)
@@ -37,6 +39,7 @@ from .queue import (ADMIT_ALL_CAP, RequestQueue, RequestSpec, admit,
 __all__ = [
     "ADMIT_ALL_CAP", "EVENT_EXPIRED", "EVENT_LATE", "EVENT_NONE",
     "EVENT_ON_TIME", "RequestQueue", "RequestSpec", "ServingOutcomes",
+    "ServingTelemetry",
     "admission_room", "admit", "arrival_key", "edf_order", "empty_queue",
     "make_process", "minimal_demand", "predicted_success", "process_names",
     "register_process", "release", "sample_arrivals",

@@ -55,6 +55,9 @@ import jax.numpy as jnp
 
 from repro.core import lea as lea_mod
 from repro.core import throughput
+from repro.obs import counters as _obs_counters
+from repro.obs.profiling import phase as _phase
+from repro.obs.telemetry import ServingTelemetry
 
 from . import admission
 from . import arrivals as arrivals_mod
@@ -122,8 +125,8 @@ def _ceil_div(num, den):
 
 def _simulate_serving_impl(
     key, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process, channel,
-    rounds, strategies, capacity, grace,
-) -> ServingOutcomes:
+    rounds, strategies, capacity, grace, telemetry=False,
+):
     states, p_alloc = throughput.serve_rollout(
         key, pool_mask, p_gg, p_bb, rounds, strategies
     )                                             # (M, n), (A, M, n)
@@ -174,14 +177,16 @@ def _simulate_serving_impl(
         )
         q, n_admit = rqueue.admit(q, t, want, ks_t, eg_t, eb_t, dl_t)
         # (2) multi-job allocation: greedy EDF water-filling
-        loads, _i_star, feas = lea_mod.allocate_queue(
-            p_t, pool_mask, q.occupied, q.kstar, q.ell_g, q.ell_b,
-            rqueue.edf_order(q),
-        )                                         # (Q, n), (Q,), (Q,)
+        with _phase("allocate"):
+            loads, _i_star, feas = lea_mod.allocate_queue(
+                p_t, pool_mask, q.occupied, q.kstar, q.ell_g, q.ell_b,
+                rqueue.edf_order(q),
+            )                                     # (Q, n), (Q,), (Q,)
         # (3) score: the engine's on-time rule, per slot
-        speeds = jnp.where(states_t == 1, mu_g, mu_b)              # (n,)
-        on_time = loads.astype(jnp.float32) / speeds <= tcut_t + 1e-9
-        received = jnp.sum(jnp.where(on_time, loads, 0), axis=-1)  # (Q,)
+        with _phase("score"):
+            speeds = jnp.where(states_t == 1, mu_g, mu_b)          # (n,)
+            on_time = loads.astype(jnp.float32) / speeds <= tcut_t + 1e-9
+            received = jnp.sum(jnp.where(on_time, loads, 0), axis=-1)  # (Q,)
         complete = q.occupied & feas & (received >= q.kstar)
         # (4) disposition
         done_on_time = complete & (t <= q.deadline_abs)
@@ -203,7 +208,14 @@ def _simulate_serving_impl(
             rejected=cnt.rejected + (count_t - n_admit),
             expired=cnt.expired + count_i(overdue),
         )
-        return (q, cnt), (event_t, sojourn_t)
+        if not telemetry:
+            return (q, cnt), (event_t, sojourn_t)
+        # extra per-round scan outputs: queue occupancy after departures
+        # and the round's admission decisions (same traced values, so the
+        # primary streams above are untouched)
+        occ_t = jnp.sum(q.occupied.astype(jnp.int32))
+        return (q, cnt), (event_t, sojourn_t, occ_t, n_admit,
+                          count_t - n_admit)
 
     def run_one(p_a, p_succ_a):
         zero = jnp.int32(0)
@@ -211,16 +223,17 @@ def _simulate_serving_impl(
             rqueue.empty_queue(capacity),
             _Counters(zero, zero, zero, zero, zero),
         )
-        (q_f, cnt), (events, sojourn) = jax.lax.scan(
+        (q_f, cnt), ys = jax.lax.scan(
             body, carry0,
             xs=(t_idx, states, p_a, p_succ_a, counts, ks_m, eg_m, eb_m,
                 dl_m, thr_m, cap_m, t_cut),
         )
-        return cnt, jnp.sum(q_f.occupied.astype(jnp.int32)), events, sojourn
+        return cnt, jnp.sum(q_f.occupied.astype(jnp.int32)), ys
 
-    cnt, in_flight, events, sojourn = jax.vmap(run_one)(p_alloc, p_succ)
+    cnt, in_flight, ys = jax.vmap(run_one)(p_alloc, p_succ)
+    events, sojourn = ys[0], ys[1]
     n_strat = len(strategies)
-    return ServingOutcomes(
+    outcomes = ServingOutcomes(
         arrivals=jnp.broadcast_to(jnp.sum(counts), (n_strat,)),
         admitted=cnt.admitted,
         served_on_time=cnt.served_on_time,
@@ -231,9 +244,19 @@ def _simulate_serving_impl(
         events=events,
         sojourn=sojourn,
     )
+    if not telemetry:
+        return outcomes
+    occ, admit_t, rej_t = ys[2], ys[3], ys[4]
+    return outcomes, ServingTelemetry(
+        arrivals_t=counts,
+        occupancy=occ,
+        admitted_t=admit_t,
+        rejected_t=rej_t,
+    )
 
 
-@partial(jax.jit, static_argnames=("rounds", "strategies", "capacity", "grace"))
+@partial(jax.jit, static_argnames=("rounds", "strategies", "capacity",
+                                   "grace", "telemetry"))
 def simulate_serving(
     key: jax.Array,
     pool_mask: jnp.ndarray,
@@ -250,7 +273,8 @@ def simulate_serving(
     capacity: int = 4,
     grace: int = 0,
     channel: tuple = (),
-) -> ServingOutcomes:
+    telemetry: bool = False,
+):
     """One serving simulation (see module docstring).
 
     ``pool_mask`` (n,) bool marks real workers; ``spec`` is a
@@ -261,30 +285,44 @@ def simulate_serving(
     ``channel`` an optional time-axis ``repro.faults`` channel.
     ``capacity`` (queue slots) and ``grace`` (late-completion window in
     rounds) are static.
+
+    ``telemetry`` (static): True returns ``(ServingOutcomes,
+    ServingTelemetry)`` — per-round arrivals, queue occupancy and
+    admission decisions out of the same compiled scan; False (default) is
+    the pre-existing path, bit-identical.
     """
     return _simulate_serving_impl(
         key, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process,
-        channel, rounds, tuple(strategies), capacity, grace,
+        channel, rounds, tuple(strategies), capacity, grace, telemetry,
     )
 
 
-@partial(jax.jit, static_argnames=("rounds", "strategies", "capacity", "grace"))
+@partial(jax.jit, static_argnames=("rounds", "strategies", "capacity",
+                                   "grace", "telemetry"))
 def _run_serving_group(
     keys, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process, channel,
-    *, rounds, strategies, capacity, grace,
-) -> ServingOutcomes:
+    *, rounds, strategies, capacity, grace, telemetry=False,
+):
     """(B,) rows -> ServingOutcomes of (B, S, ...) leaves, ONE computation."""
     return jax.vmap(
         lambda k, m, pg, pb, mg, mb, d, sp, pr: _simulate_serving_impl(
             k, m, pg, pb, mg, mb, d, sp, pr, channel,
-            rounds, strategies, capacity, grace,
+            rounds, strategies, capacity, grace, telemetry,
         )
     )(keys, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process)
 
 
+_obs_counters.register_compiled("serving.sweep", _run_serving_group)
+_obs_counters.register_compiled("serving.simulate", simulate_serving)
+
+
 def serving_compile_cache_size() -> int:
-    """Distinct serving-group computations compiled so far (test hook)."""
-    return _run_serving_group._cache_size()
+    """Distinct serving-group computations compiled so far.
+
+    Thin alias over the unified obs counter
+    (``obs.compile_events("serving.sweep")``) — kept for the pre-obs tests
+    and benchmarks."""
+    return _obs_counters.compile_events("serving.sweep")
 
 
 def sweep_serving(
@@ -303,7 +341,8 @@ def sweep_serving(
     capacity: int = 4,
     grace: int = 0,
     channel: tuple = (),
-) -> ServingOutcomes:
+    telemetry: bool = False,
+):
     """Batched :func:`simulate_serving`: every leaf carries a leading (B,).
 
     ``spec`` leaves and ``process`` parameters are (B,) traced rows (scalars
@@ -311,7 +350,9 @@ def sweep_serving(
     into ONE compile per static (rounds, strategies, capacity, grace)
     signature.  The fault ``channel`` (if any) is shared across rows with
     scalar parameters (per-row channel grids belong to
-    :func:`repro.faults.engine.sweep_faults`).
+    :func:`repro.faults.engine.sweep_faults`).  ``telemetry=True`` returns
+    ``(ServingOutcomes, ServingTelemetry)`` with a leading (B,) on every
+    telemetry leaf — still ONE compile for the whole grid.
     """
     strategies = tuple(strategies)
     b = p_gg.shape[0]
@@ -330,4 +371,5 @@ def sweep_serving(
         as_b(mu_g, jnp.float32), as_b(mu_b, jnp.float32),
         as_b(deadline, jnp.float32), spec, process, channel,
         rounds=rounds, strategies=strategies, capacity=capacity, grace=grace,
+        telemetry=telemetry,
     )

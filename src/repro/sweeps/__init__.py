@@ -24,6 +24,8 @@ The one-liner::
         print(r.name, r.throughput, f"{r.baseline_ratio:.2f}x")
 """
 
+from repro.obs.telemetry import TelemetryFrame
+
 from .executor import (compile_cache_size, run, run_group, run_groups,
                        suggest_round_chunk)
 from .registry import (Scenario, ScenarioBatch, SweepGroup, as_dense_schedule,
@@ -33,7 +35,7 @@ from .results import (ScenarioResult, manifest, summarize, summarize_group,
                       write_manifest)
 
 __all__ = [
-    "Scenario", "ScenarioBatch", "ScenarioResult", "SweepGroup",
+    "Scenario", "ScenarioBatch", "ScenarioResult", "SweepGroup", "TelemetryFrame",
     "as_dense_schedule", "build_groups", "catalogue", "compile_cache_size",
     "describe", "expand", "family_names", "manifest", "register", "run",
     "run_group", "run_groups", "suggest_round_chunk", "summarize",

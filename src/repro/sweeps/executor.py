@@ -36,11 +36,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import throughput
 from repro.core.lea import PoolLoad
+from repro.obs import counters as _obs_counters
 
 from .registry import ScenarioBatch, SweepGroup
 
 
-@partial(jax.jit, static_argnames=("rounds", "strategies", "round_chunk"))
+@partial(jax.jit,
+         static_argnames=("rounds", "strategies", "round_chunk", "telemetry"))
 def _run_group(
     keys: jnp.ndarray,
     p_gg: jnp.ndarray,
@@ -53,11 +55,13 @@ def _run_group(
     rounds: int,
     strategies: tuple[str, ...],
     round_chunk: int | None,
-) -> jnp.ndarray:
+    telemetry: bool = False,
+):
     """(B,) rows -> (B, rounds, S) success indicators, one XLA computation."""
     fn = partial(
         throughput.simulate_strategies_pool,
         rounds=rounds, strategies=strategies, round_chunk=round_chunk,
+        telemetry=telemetry,
     )
     return jax.vmap(
         lambda k, pg, pb, mg, mb, d, pl: fn(
@@ -66,9 +70,16 @@ def _run_group(
     )(keys, p_gg, p_bb, mu_g, mu_b, deadline, pool)
 
 
+_obs_counters.register_compiled("sweeps.run_group", _run_group)
+
+
 def compile_cache_size() -> int:
-    """Number of distinct group computations compiled so far (test hook)."""
-    return _run_group._cache_size()
+    """Number of distinct group computations compiled so far.
+
+    Thin alias over the unified obs counter
+    (``obs.compile_events("sweeps.run_group")``) — kept for the pre-obs
+    tests and benchmarks."""
+    return _obs_counters.compile_events("sweeps.run_group")
 
 
 def _pad_batch(batch: ScenarioBatch, multiple: int) -> tuple[ScenarioBatch, int]:
@@ -97,8 +108,14 @@ def run_group(
     *,
     mesh: Mesh | None = None,
     round_chunk: int | None = None,
-) -> np.ndarray:
-    """Execute one group; returns host (B, rounds, S) bool success array."""
+    telemetry: bool = False,
+):
+    """Execute one group; returns host (B, rounds, S) bool success array.
+
+    With ``telemetry=True`` returns ``(succ, TelemetryFrame)`` — the frame
+    leaves are host arrays with the same leading (B,) slicing as ``succ``
+    (see :mod:`repro.obs.telemetry`); the group still compiles once.
+    """
     if group.rounds < 1:
         names = ", ".join(sc.name for sc in group.scenarios[:3])
         raise ValueError(
@@ -111,13 +128,16 @@ def run_group(
             raise ValueError(f'sweep mesh must have axes ("batch",), got {mesh.axis_names}')
         batch, b = _pad_batch(batch, mesh.devices.size)
         batch = _shard_batch(batch, mesh)
-    succ = _run_group(
+    out = _run_group(
         batch.keys, batch.p_gg, batch.p_bb, batch.mu_g, batch.mu_b,
         batch.deadline, batch.pool,
         rounds=group.rounds, strategies=group.strategies,
-        round_chunk=round_chunk,
+        round_chunk=round_chunk, telemetry=telemetry,
     )
-    return np.asarray(succ[:b])
+    if not telemetry:
+        return np.asarray(out[:b])
+    succ, frame = out
+    return np.asarray(succ[:b]), jax.tree.map(lambda x: np.asarray(x[:b]), frame)
 
 
 def run_groups(

@@ -32,11 +32,13 @@ import dataclasses
 import json
 import math
 import os
+import time
 from typing import Any, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.provenance import provenance as _provenance_fn
 from repro.policies import regret as regret_mod
 
 from .registry import Scenario, SweepGroup
@@ -220,8 +222,17 @@ def manifest(
     *,
     bench: str,
     extra: dict[str, Any] | None = None,
+    timestamp: float | None = None,
 ) -> dict[str, Any]:
-    """BENCH_*.json-shaped document: bench name, metadata, flat result rows."""
+    """BENCH_*.json-shaped document: bench name, metadata, flat result rows.
+
+    Every manifest is stamped with run ``provenance``
+    (:func:`repro.obs.provenance`: git sha + dirty flag, jax/jaxlib
+    versions, backend/device, host) and a ``warnings`` list (the
+    ``benchmarks._softgate`` structured records; ``extra`` may supply it).
+    ``timestamp`` is passed through to the provenance record —
+    ``time.time()`` when the caller does not care about determinism.
+    """
     doc: dict[str, Any] = {
         "bench": bench,
         "scenarios": len(results),
@@ -230,10 +241,23 @@ def manifest(
     }
     if extra:
         doc.update(extra)
+    doc.setdefault("warnings", [])
+    doc.setdefault(
+        "provenance",
+        _provenance_fn(time.time() if timestamp is None else timestamp),
+    )
     return doc
 
 
 def write_manifest(path: str | os.PathLike, doc: dict[str, Any]) -> None:
+    """Write a BENCH_*.json document (RFC-8259 strict, trailing newline).
+
+    The provenance/warnings stamps are backstopped here too, so writers
+    that assemble their document by hand (bench_faults, bench_serving,
+    bench_gf) still satisfy the manifest contract.
+    """
+    doc.setdefault("warnings", [])
+    doc.setdefault("provenance", _provenance_fn(time.time()))
     with open(path, "w") as f:
         # allow_nan=False: fail loudly rather than emit non-RFC JSON
         json.dump(doc, f, indent=2, allow_nan=False)

@@ -1,0 +1,161 @@
+"""Exporter round-trip tests: metric tables, Chrome trace-event JSON,
+validation and disposition conservation — all on synthetic frames, no
+engine required."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (ServingTelemetry, TelemetryFrame, metric_streams,
+                       metric_table, serving_trace, validate_trace,
+                       write_trace)
+
+M = 6
+
+
+def _frame():
+    return TelemetryFrame(
+        est_err=np.arange(M * 2, dtype=np.float32).reshape(M, 2),
+        prefix_size=np.full((M, 2), 5, np.int32),
+        load_total=np.full((M, 3), 40, np.int32),
+        received=np.full((M, 3), 20, np.int32),
+        feasible=np.ones((M, 3), bool),
+    )
+
+
+def test_metric_streams_names_and_axes():
+    streams = metric_streams(
+        _frame(), strategies=("lea", "static", "oracle"),
+        alloc_strategies=("lea", "oracle"),
+    )
+    assert set(streams) == {
+        "est_err/lea", "est_err/oracle", "prefix_size/lea",
+        "prefix_size/oracle",
+        "load_total/lea", "load_total/static", "load_total/oracle",
+        "received/lea", "received/static", "received/oracle",
+        "feasible/lea", "feasible/static", "feasible/oracle",
+    }
+    for vec in streams.values():
+        assert vec.shape == (M,)
+    np.testing.assert_array_equal(
+        streams["est_err/oracle"], np.arange(M * 2).reshape(M, 2)[:, 1]
+    )
+
+
+def test_metric_streams_strategy_major_leaves_are_transposed():
+    tel = ServingTelemetry(
+        arrivals_t=np.arange(M, dtype=np.int32),
+        occupancy=np.arange(2 * M, dtype=np.int32).reshape(2, M),
+        admitted_t=np.zeros((2, M), np.int32),
+        rejected_t=np.zeros((2, M), np.int32),
+    )
+    streams = metric_streams(tel, strategies=("lea", "greedy"))
+    np.testing.assert_array_equal(streams["arrivals_t"], np.arange(M))
+    # (S, M) leaves come out per-strategy along rounds
+    np.testing.assert_array_equal(streams["occupancy/greedy"],
+                                  np.arange(M, 2 * M))
+
+
+def test_metric_streams_rejects_batched_frames():
+    batched = TelemetryFrame(*[np.zeros((2, M, 3))] * 5)
+    with pytest.raises(ValueError, match="batch row"):
+        metric_streams(batched)
+
+
+def test_metric_streams_rejects_wrong_name_count():
+    with pytest.raises(ValueError):
+        metric_streams(_frame(), strategies=("lea",))
+
+
+def test_metric_table_rows_are_json_safe_summaries():
+    rows = metric_table(_frame(), strategies=("a", "b", "c"),
+                        alloc_strategies=("a", "c"))
+    by_name = {r["metric"]: r for r in rows}
+    r = by_name["est_err/a"]
+    assert r["rounds"] == M
+    assert r["min"] == 0.0 and r["last"] == float((M - 1) * 2)
+    json.dumps(rows, allow_nan=False)
+
+
+def _events_sojourn():
+    # (S=1, M, Q=2): codes 1/2/3 at chosen (round, slot) cells
+    ev = np.zeros((1, M, 2), np.int32)
+    so = np.zeros((1, M, 2), np.int32)
+    ev[0, 2, 0], so[0, 2, 0] = 1, 2      # on_time, 2-round sojourn
+    ev[0, 4, 1], so[0, 4, 1] = 2, 3      # late
+    ev[0, 5, 0], so[0, 5, 0] = 3, 4      # expired
+    return ev, so
+
+
+def test_serving_trace_round_trips_and_conserves_dispositions(tmp_path):
+    ev, so = _events_sojourn()
+    tel = ServingTelemetry(
+        arrivals_t=np.ones(M, np.int32),
+        occupancy=np.ones((1, M), np.int32),
+        admitted_t=np.ones((1, M), np.int32),
+        rejected_t=np.zeros((1, M), np.int32),
+    )
+    doc = serving_trace(ev, so, strategies=("lea",), telemetry=tel)
+    stats = validate_trace(doc)
+    assert stats["complete"] == 3
+    assert stats["dispositions"] == {"on_time": 1, "late": 1, "expired": 1}
+    # deterministic timestamps: round index x round_us
+    x = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    on_time = next(e for e in x if e["name"] == "on_time")
+    assert on_time["ts"] == (2 - 2 + 1) * 1000.0
+    assert on_time["dur"] == 2 * 1000.0
+    # occupancy counters ride along
+    assert sum(e["ph"] == "C" for e in doc["traceEvents"]) == M
+    # file round-trip through the strict writer
+    path = tmp_path / "trace.json"
+    write_trace(path, doc)
+    back = json.loads(path.read_text())
+    assert back == json.loads(json.dumps(doc))
+    assert validate_trace(back) == stats
+
+
+def test_serving_trace_is_deterministic():
+    ev, so = _events_sojourn()
+    assert serving_trace(ev, so) == serving_trace(ev, so)
+
+
+def test_serving_trace_rejects_mismatched_shapes():
+    ev, so = _events_sojourn()
+    with pytest.raises(ValueError):
+        serving_trace(ev, so[:, :-1])
+    with pytest.raises(ValueError):
+        serving_trace(ev[0], so[0])     # batch row already selected twice
+
+
+def test_event_names_mirror_the_serving_engine_constants():
+    # obs keeps the code->name map literal (it must not import the engines);
+    # this is the cross-check that the two stay in sync
+    from repro import serving
+    from repro.obs import telemetry as tmod
+
+    assert tmod._EVENT_NAMES == {
+        serving.EVENT_ON_TIME: "on_time",
+        serving.EVENT_LATE: "late",
+        serving.EVENT_EXPIRED: "expired",
+    }
+
+
+def test_validate_trace_rejects_malformed_documents():
+    with pytest.raises(ValueError):
+        validate_trace({"no": "traceEvents"})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "X", "name": "x"}]})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"ph": "X", "name": "x", "pid": 0, "tid": 0, "ts": 0.0, "dur": 0.0}
+        ]})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"ph": "Z", "name": "x", "pid": 0, "tid": 0}
+        ]})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [
+            {"ph": "C", "name": "x", "pid": 0, "tid": 0,
+             "args": {"v": float("nan")}}
+        ]})

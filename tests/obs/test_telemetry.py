@@ -1,0 +1,204 @@
+"""Telemetry property tests: ``telemetry=on`` leaves every pre-existing
+engine stream bit-identical and adds zero compiles beyond the family's one
+computation (asserted via the unified ``repro.obs`` compile counter)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, serving, sweeps
+from repro.core import throughput
+from repro.core.lea import PoolLoad
+from repro.obs import FaultTelemetry, ServingTelemetry, TelemetryFrame, compile_events
+
+N = 8
+ROUNDS = 48
+STRATEGIES = ("lea", "static", "oracle")
+KSTAR, ELL_G, ELL_B = 20, 5, 1
+MU_G, MU_B, DEADLINE = 5.0, 1.0, 1.0
+P_GG, P_BB = 0.8, 0.7
+
+
+def _pool(n=N, mask=None):
+    return PoolLoad(
+        kstar=jnp.int32(KSTAR), ell_g=jnp.int32(ELL_G), ell_b=jnp.int32(ELL_B),
+        mask=jnp.ones((n,), bool) if mask is None else mask,
+    )
+
+
+def _engine(key, telemetry, round_chunk=None):
+    return throughput.simulate_strategies_pool(
+        key, _pool(),
+        jnp.full((N,), P_GG, jnp.float32), jnp.full((N,), P_BB, jnp.float32),
+        MU_G, MU_B, DEADLINE, rounds=ROUNDS, strategies=STRATEGIES,
+        round_chunk=round_chunk, telemetry=telemetry,
+    )
+
+
+def test_engine_telemetry_bit_identical_one_compile_each():
+    key = jax.random.PRNGKey(0)
+    c0 = compile_events("engine.simulate_strategies_pool")
+    off = _engine(key, telemetry=False)
+    c_off = compile_events("engine.simulate_strategies_pool") - c0
+    on, frame = _engine(key, telemetry=True)
+    c_on = compile_events("engine.simulate_strategies_pool") - c0 - c_off
+    # the pre-existing stream is untouched, bit for bit
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    # telemetry=on is ONE computation of its own (no compile fragmentation);
+    # repeats of either variant hit the cache (<= because an earlier test
+    # may already have populated this signature)
+    assert c_off <= 1 and c_on == 1, (c_off, c_on)
+    _engine(key, telemetry=True)
+    assert compile_events("engine.simulate_strategies_pool") == c0 + c_off + c_on
+    assert isinstance(frame, TelemetryFrame)
+    n_a = len(throughput.allocator_strategies(STRATEGIES))
+    assert np.asarray(frame.est_err).shape == (ROUNDS, n_a)
+    assert np.asarray(frame.prefix_size).shape == (ROUNDS, n_a)
+    for leaf in (frame.load_total, frame.received, frame.feasible):
+        assert np.asarray(leaf).shape == (ROUNDS, len(STRATEGIES))
+
+
+def test_engine_oracle_estimator_error_is_exactly_zero():
+    _, frame = _engine(jax.random.PRNGKey(1), telemetry=True)
+    alloc = throughput.allocator_strategies(STRATEGIES)
+    err = np.asarray(frame.est_err)
+    oi = alloc.index("oracle")
+    # the genie predicts with the genie's own truth
+    np.testing.assert_array_equal(err[:, oi], np.zeros(ROUNDS, np.float32))
+    # a real estimator is not the genie
+    assert err[:, alloc.index("lea")].max() > 0.0
+
+
+def test_engine_chunked_telemetry_bit_identical_to_unchunked():
+    key = jax.random.PRNGKey(2)
+    succ, frame = _engine(key, telemetry=True)
+    succ_c, frame_c = _engine(key, telemetry=True, round_chunk=16)
+    np.testing.assert_array_equal(np.asarray(succ), np.asarray(succ_c))
+    for a, b in zip(frame, frame_c):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _fault_args(b=3):
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    pool = PoolLoad(
+        kstar=jnp.full((b,), KSTAR, jnp.int32),
+        ell_g=jnp.full((b,), ELL_G, jnp.int32),
+        ell_b=jnp.full((b,), ELL_B, jnp.int32),
+        mask=jnp.ones((b, N), bool),
+    )
+    channel = faults.make_channel([
+        ("preempt", {"p_preempt": jnp.full((b,), 0.3, jnp.float32)}),
+        ("packet_bernoulli", {"p_drop": jnp.full((b,), 0.1, jnp.float32)}),
+    ])
+    return (keys, pool, jnp.full((b, N), P_GG, jnp.float32),
+            jnp.full((b, N), P_BB, jnp.float32), MU_G, MU_B, DEADLINE,
+            channel, 10)
+
+
+def test_faults_telemetry_bit_identical_one_compile():
+    args = _fault_args()
+    kw = dict(rounds=32, strategies=("lea", "static"), r=2, packets=2, p1=1)
+    c0 = compile_events("faults.sweep")
+    off = faults.sweep_faults(*args, **kw)
+    on, tel = faults.sweep_faults(*args, telemetry=True, **kw)
+    compiles = compile_events("faults.sweep") - c0
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert compiles <= 2, compiles     # one per static variant, no more
+    assert isinstance(tel, FaultTelemetry)
+    b_rows = np.asarray(args[2]).shape[0]
+    assert np.asarray(tel.preempted).shape == (b_rows, 32)
+    assert np.asarray(tel.packets_lost).shape == (b_rows, 32)
+    assert np.asarray(tel.received_aon).shape == (b_rows, 32, 2)
+    # conserve counts at least the AON packets, pointwise
+    assert (np.asarray(tel.received_conserve)
+            >= np.asarray(tel.received_aon)).all()
+    # the channel actually fires (the counters are live streams, not zeros)
+    assert np.asarray(tel.preempted).sum() > 0
+    assert np.asarray(tel.packets_lost).sum() > 0
+
+
+def _serving_args(b=2):
+    keys = jax.vmap(lambda i: jax.random.PRNGKey(100 + i))(jnp.arange(b))
+    spec = serving.RequestSpec(
+        kstar=jnp.full((b,), 50, jnp.int32),
+        ell_g=jnp.full((b,), 10, jnp.int32),
+        ell_b=jnp.full((b,), 3, jnp.int32),
+        deadline_rel=jnp.full((b,), 3, jnp.int32),
+        admit_threshold=jnp.zeros((b,), jnp.float32),
+        reserve_cap=jnp.full((b,), serving.ADMIT_ALL_CAP, jnp.float32),
+    )
+    process = serving.make_process(
+        "poisson", rate=jnp.full((b,), 0.6, jnp.float32)
+    )
+    n = 15
+    return (keys, jnp.ones((b, n), bool),
+            jnp.full((b, n), P_GG, jnp.float32),
+            jnp.full((b, n), P_BB, jnp.float32),
+            10.0, 3.0, 1.0, spec, process)
+
+
+def test_serving_telemetry_bit_identical_and_conserving():
+    args = _serving_args()
+    kw = dict(rounds=40, strategies=("lea",), capacity=2)
+    c0 = compile_events("serving.sweep")
+    off = serving.sweep_serving(*args, **kw)
+    on, tel = serving.sweep_serving(*args, telemetry=True, **kw)
+    compiles = compile_events("serving.sweep") - c0
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert compiles <= 2, compiles     # one per static variant, no more
+    assert isinstance(tel, ServingTelemetry)
+    arrivals_t = np.asarray(tel.arrivals_t)        # (B, M)
+    admitted_t = np.asarray(tel.admitted_t)        # (B, S, M)
+    rejected_t = np.asarray(tel.rejected_t)
+    occupancy = np.asarray(tel.occupancy)
+    # per-round admission conservation: every arrival admitted or rejected
+    np.testing.assert_array_equal(
+        admitted_t + rejected_t,
+        np.broadcast_to(arrivals_t[:, None, :], admitted_t.shape),
+    )
+    # the per-round streams sum to the run counters
+    np.testing.assert_array_equal(admitted_t.sum(-1), np.asarray(on.admitted))
+    np.testing.assert_array_equal(rejected_t.sum(-1), np.asarray(on.rejected))
+    # final occupancy is exactly the engine's in-flight count
+    np.testing.assert_array_equal(occupancy[..., -1], np.asarray(on.in_flight))
+    # the arrival stream matches the outcomes' own arrival counter
+    np.testing.assert_array_equal(
+        np.broadcast_to(arrivals_t.sum(-1)[:, None],
+                        np.asarray(on.arrivals).shape),
+        np.asarray(on.arrivals),
+    )
+
+
+def test_sweeps_executor_threads_telemetry_and_slices_batch():
+    scenarios = sweeps.expand("hetero_kstar", ks=(50, 80), lams=(0.2,),
+                              rounds=24)
+    (group,) = sweeps.build_groups(scenarios, seeds=1)
+    succ = sweeps.run_group(group)
+    succ_t, frame = sweeps.run_group(group, telemetry=True)
+    np.testing.assert_array_equal(succ, succ_t)
+    b = group.batch.rows
+    assert succ_t.shape[0] == b
+    for leaf in frame:
+        assert np.asarray(leaf).shape[0] == b
+        assert np.asarray(leaf).shape[1] == group.rounds
+
+
+def test_legacy_compile_counter_aliases_track_the_obs_counter():
+    assert sweeps.compile_cache_size() == compile_events("sweeps.run_group")
+    assert faults.fault_compile_cache_size() == compile_events("faults.sweep")
+    assert (serving.serving_compile_cache_size()
+            == compile_events("serving.sweep"))
+    # and the unified total covers every registered family
+    assert compile_events() >= (
+        compile_events("sweeps.run_group")
+        + compile_events("faults.sweep")
+        + compile_events("serving.sweep")
+    )
+
+
+def test_unknown_counter_name_raises():
+    with pytest.raises(KeyError):
+        compile_events("no.such.counter")

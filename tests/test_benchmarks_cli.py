@@ -71,6 +71,7 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
         "bench_gf": "BENCH_gf.json",
         "bench_faults": "BENCH_faults.json",
         "bench_serving": "BENCH_serving.json",
+        "obs_report": "BENCH_obs.json",
     }
     for name, _, desc in SUITES:
         named = re.findall(r"BENCH_\w+\.json", desc)
@@ -79,6 +80,30 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
             assert os.path.exists(os.path.join(_ROOT, writers[name])), name
         else:
             assert not named, f"{name} blurb names a manifest it never writes"
+
+
+def test_every_committed_manifest_is_provenance_stamped():
+    """The manifest contract: every BENCH_*.json writer stamps run
+    provenance (repro.obs.provenance via results.manifest/write_manifest)
+    and carries the structured ``warnings`` list the softgate records
+    append to."""
+    import glob
+    import json
+
+    from repro.obs.provenance import has_required_fields
+
+    paths = sorted(glob.glob(os.path.join(_ROOT, "BENCH_*.json")))
+    assert len(paths) >= 7, paths        # all seven writers are committed
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        name = os.path.basename(path)
+        assert "provenance" in doc, f"{name} missing provenance stamp"
+        assert has_required_fields(doc["provenance"]), name
+        assert doc["provenance"]["git_sha"], name
+        assert isinstance(doc.get("warnings"), list), name
+        for w in doc["warnings"]:
+            assert {"kind", "bench", "metric", "message"} <= set(w), (name, w)
 
 
 def test_bench_faults_is_a_registered_target_and_listed():
@@ -165,6 +190,50 @@ def test_committed_bench_serving_manifest_shape_and_invariants():
     # latency + req/sec at >= 3 arrival rates, at least one overloaded
     assert len(rates) >= 3
     assert overloaded_gain == doc["admission_gain_requests"]
+
+
+def test_obs_report_is_a_registered_target_and_listed():
+    from benchmarks.run import SUITES
+
+    names = [name for name, _, _ in SUITES]
+    assert "obs_report" in names
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    assert "obs_report" in proc.stdout and "BENCH_obs.json" in proc.stdout
+
+
+def test_committed_obs_report_manifest_and_trace():
+    """BENCH_obs.json is a committed artifact: the telemetry run compiled
+    exactly once, the committed Chrome trace is structurally valid and its
+    request dispositions reconcile (the flag the bench hard-gates in-run),
+    and the cost model covers every hlo_cost entry point."""
+    import json
+
+    from repro.launch import hlo_cost
+    from repro.obs import validate_trace
+
+    with open(os.path.join(_ROOT, "BENCH_obs.json")) as f:
+        doc = json.load(f)
+    assert doc["bench"] == "obs_report"
+    assert doc["telemetry_compiles"] == 1
+    assert doc["trace_dispositions_ok"] is True
+    assert doc["trace_complete"] > 0
+    targets = {row["target"] for row in doc["cost_model"]}
+    assert targets == set(hlo_cost.entry_point_names())
+    for row in doc["cost_model"]:
+        assert row["flops"] > 0 and row["hbm_bytes"] > 0, row["target"]
+    # every sibling manifest was aggregated
+    assert set(doc["manifests"]) >= {
+        "BENCH_fig3.json", "BENCH_sweep.json", "BENCH_policies.json",
+        "BENCH_gf.json", "BENCH_faults.json", "BENCH_serving.json",
+    }
+    assert doc["missing_provenance"] == []
+    # the committed trace itself must be a valid trace-event document
+    with open(os.path.join(_ROOT, doc["trace_path"])) as f:
+        trace = json.load(f)
+    stats = validate_trace(trace)
+    assert stats["complete"] == doc["trace_complete"]
+    assert stats["dispositions"] == doc["trace_dispositions"]
 
 
 def test_committed_bench_gf_manifest_shape_and_flags():

@@ -76,3 +76,52 @@ def test_hlo_cost_walker():
                           capture_output=True, text=True, timeout=600, env=env)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "HLO_COST_OK" in proc.stdout
+
+
+def _run_cli(*args: str):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [_SRC] + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.hlo_cost", *args],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+
+
+def test_cli_lists_the_engine_pool_path_entry_points():
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    names = proc.stdout.split()
+    assert names == ["simulate_strategies_pool", "sweep_faults",
+                     "sweep_serving"]
+
+
+def test_cli_rejects_unknown_entry_points_with_listing():
+    proc = _run_cli("no_such_entry")
+    assert proc.returncode != 0
+    assert "no_such_entry" in proc.stderr
+    assert "simulate_strategies_pool" in proc.stderr
+
+
+def test_estimate_entry_lowers_the_pool_engine_and_costs_it():
+    from repro.launch import hlo_cost
+
+    row = hlo_cost.estimate_entry("simulate_strategies_pool")
+    assert row["target"] == "simulate_strategies_pool"
+    assert row["flops"] > 0 and row["hbm_bytes"] > 0
+    assert row["flops_per_round"] == row["flops"] / row["rounds"]
+    assert row["arithmetic_intensity"] > 0
+    import json
+
+    json.dumps(row, allow_nan=False)     # obs_report embeds it verbatim
+
+
+def test_estimate_entry_rejects_unknown_names():
+    import pytest
+
+    from repro.launch import hlo_cost
+
+    with pytest.raises(KeyError):
+        hlo_cost.estimate_entry("nope")
