@@ -31,24 +31,53 @@ import sys
 SLOWDOWN_WARN_FRACTION = 0.30
 
 
+def committed_baseline_with_source(path: str) -> tuple[dict, str]:
+    """The committed manifest at ``path`` plus WHERE it came from.
+
+    Returns ``(doc, source)`` with ``source`` one of ``"git"`` (``git show
+    HEAD:`` succeeded), ``"worktree"`` (no usable git checkout / the file
+    is untracked at HEAD — the on-disk file stands in), or ``"missing"``
+    (neither; ``doc`` is ``{}``).  Consumers that must degrade gracefully
+    (``obs_report``) use the source to emit a structured ``baseline``
+    warning record instead of silently diffing against the wrong
+    reference."""
+    git_root = _repo_root(os.path.dirname(os.path.abspath(path)))
+    if git_root is not None:
+        rel = os.path.relpath(os.path.abspath(path), git_root)
+        try:
+            blob = subprocess.run(
+                ["git", "show", f"HEAD:{rel.replace(os.sep, '/')}"],
+                capture_output=True, text=True, timeout=30, cwd=git_root,
+            )
+            if blob.returncode == 0:
+                return json.loads(blob.stdout), "git"
+        except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
+            pass
+    try:
+        with open(path) as f:
+            return json.load(f), "worktree"
+    except (OSError, json.JSONDecodeError):
+        return {}, "missing"
+
+
+def _repo_root(start: str) -> str | None:
+    """The git worktree root containing ``start``, or None without git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"],
+            capture_output=True, text=True, timeout=30, cwd=start,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return None
+
+
 def committed_baseline(path: str) -> dict:
     """The committed manifest at ``path`` (git HEAD), falling back to the
     on-disk file outside a usable git checkout."""
-    root = os.path.dirname(os.path.abspath(path))
-    try:
-        blob = subprocess.run(
-            ["git", "show", f"HEAD:{os.path.basename(path)}"],
-            capture_output=True, text=True, timeout=30, cwd=root,
-        )
-        if blob.returncode == 0:
-            return json.loads(blob.stdout)
-    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
-        pass
-    try:
-        with open(path) as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError):
-        return {}
+    return committed_baseline_with_source(path)[0]
 
 
 def _emit(record: dict) -> dict:

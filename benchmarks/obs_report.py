@@ -15,15 +15,26 @@ regression summary (writes ``BENCH_obs.json``):
   * static cost rows — FLOP/byte/intensity estimates for the engine's
     pool-path entry points from the ``repro.launch.hlo_cost`` walker
     (lower + compile at reference small shapes, trip-count-aware HLO walk);
-  * a telemetry demo — a small ``telemetry=True`` serving run, asserted to
-    compile exactly ONCE via the unified ``repro.obs`` compile counter,
-    exported as a valid Chrome trace-event document (``obs_trace.json`` at
-    the repo root, viewable in Perfetto / chrome://tracing) whose request
-    dispositions are asserted to reconcile with the engine's own counters.
+  * a trend section — the ``BENCH_history.jsonl`` trajectory behind every
+    manifest (appended by ``repro.sweeps.results.write_manifest``) folded
+    through ``repro.obs.history.trend_report``: per-metric time series and
+    robust median-vs-envelope regression records — the softgate's
+    "vs HEAD" diff widened to "vs trajectory" (``run.py --check`` gates
+    on the hard records);
+  * a telemetry + tap demo — a small ``telemetry=True, tap=True`` serving
+    run, asserted to compile exactly ONCE via the unified ``repro.obs``
+    compile counter and to stream block-aggregate tap events while the
+    scan runs, exported as a valid Chrome trace-event document
+    (``benchmarks/artifacts/obs_trace.json``, viewable in Perfetto /
+    chrome://tracing) whose request dispositions are asserted to
+    reconcile with the engine's own counters.
 
 Hard in-run gates: the one-compile assertion, trace validity
 (``repro.obs.validate_trace``) and disposition conservation.  Everything
-wall-clock-ish stays soft, per the ``benchmarks._softgate`` convention.
+wall-clock-ish stays soft, per the ``benchmarks._softgate`` convention —
+including a missing git baseline: ``git show HEAD:`` being unavailable
+(shallow export, untracked manifest) downgrades that manifest's delta
+section to a structured ``baseline`` warning record, never an exception.
 """
 
 from __future__ import annotations
@@ -33,12 +44,12 @@ import json
 import os
 import time
 
-from benchmarks._softgate import committed_baseline
+from benchmarks._softgate import committed_baseline_with_source
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _ROOT = os.path.dirname(_HERE)
 _MANIFEST_PATH = os.path.join(_ROOT, "BENCH_obs.json")
-_TRACE_PATH = os.path.join(_ROOT, "obs_trace.json")
+_TRACE_PATH = os.path.join(_HERE, "artifacts", "obs_trace.json")
 
 # the telemetry demo: Sec. 6.2-scale pool, tiny horizon (it is a demo of
 # the export path, not a benchmark — bench_serving owns the perf numbers)
@@ -96,7 +107,25 @@ def run() -> list[dict]:
                 current = json.load(f)
         except (OSError, json.JSONDecodeError):
             continue
-        baseline = committed_baseline(path)
+        baseline, baseline_source = committed_baseline_with_source(path)
+        if baseline_source != "git":
+            # no committed reference (shallow export, untracked manifest):
+            # skip the delta section with a structured record — diffing a
+            # fresh run against ITSELF (the worktree fallback) would report
+            # zero drift and mask a real regression
+            warnings_collected.append({
+                "kind": "baseline",
+                "bench": current.get("bench") or name,
+                "metric": "baseline_source",
+                "value": baseline_source,
+                "baseline": "git",
+                "manifest": name,
+                "message": (
+                    f"{name}: no committed baseline via git show HEAD: "
+                    f"(source={baseline_source}); metric deltas skipped"
+                ),
+            })
+            baseline = {}
         for w in current.get("warnings") or []:
             warnings_collected.append({**w, "manifest": name})
         prov = current.get("provenance") or {}
@@ -106,7 +135,9 @@ def run() -> list[dict]:
             "bench": current.get("bench"),
             "has_provenance": bool(prov),
             "git_sha": prov.get("git_sha"),
-            "deltas": _numeric_deltas(current, baseline),
+            "baseline_source": baseline_source,
+            "deltas": (_numeric_deltas(current, baseline)
+                       if baseline_source == "git" else {}),
         }
 
     # -- 2. static per-target cost rows (hlo_cost entry-point walk) --------
@@ -130,25 +161,34 @@ def run() -> list[dict]:
     )
     c0 = obs.compile_events("serving.sweep")
     t0 = time.perf_counter()
-    out, tel = serving.sweep_serving(
-        keys, jnp.ones((b, N), bool),
-        jnp.full((b, N), P_GG, jnp.float32),
-        jnp.full((b, N), P_BB, jnp.float32),
-        MU_G, MU_B, DEADLINE, spec, process,
-        rounds=ROUNDS, strategies=STRATEGIES, capacity=CAPACITY,
-        telemetry=True,
-    )
-    jax.block_until_ready(out)
+    with obs.capture_taps() as tap_events:
+        out, tel = serving.sweep_serving(
+            keys, jnp.ones((b, N), bool),
+            jnp.full((b, N), P_GG, jnp.float32),
+            jnp.full((b, N), P_BB, jnp.float32),
+            MU_G, MU_B, DEADLINE, spec, process,
+            rounds=ROUNDS, strategies=STRATEGIES, capacity=CAPACITY,
+            telemetry=True, tap=True, tap_stride=ROUNDS // 4,
+        )
+        jax.block_until_ready(out)
     run_s = time.perf_counter() - t0
     telemetry_compiles = obs.compile_events("serving.sweep") - c0
-    # telemetry=on adds ZERO compiles beyond the family's one computation
+    # telemetry+tap on adds ZERO compiles beyond the family's one computation
     assert telemetry_compiles == 1, telemetry_compiles
+    # the taps actually streamed DURING the run: every cell announced every
+    # stride block, and each event's host timestamp precedes run completion
+    run_done_t = time.perf_counter()
+    for e in tap_events:
+        obs.validate_event(e)
+    assert len(tap_events) == b * len(STRATEGIES) * 4, len(tap_events)
+    assert all(e["host_time"] < run_done_t for e in tap_events)
 
     trace = obs.serving_trace(
         np.asarray(out.events)[0], np.asarray(out.sojourn)[0],
         strategies=STRATEGIES,
         telemetry=jax.tree.map(lambda x: np.asarray(x)[0], tel),
     )
+    os.makedirs(os.path.dirname(_TRACE_PATH), exist_ok=True)
     obs.write_trace(_TRACE_PATH, trace)
     stats = obs.validate_trace(trace)
     # the trace's dispositions must reconcile with the engine's counters
@@ -163,6 +203,13 @@ def run() -> list[dict]:
     assert got == want, (got, want)
     assert stats["complete"] > 0, "trace has no request events"
 
+    # -- 4. trend section: the history trajectory behind every manifest ----
+    history_file = obs.history_path(_MANIFEST_PATH)
+    trend = obs.trend_report(obs.read_history(history_file))
+    for reg in trend["regressions"]:
+        if reg.get("severity") == "hard":
+            warnings_collected.append({**reg, "manifest": "BENCH_history.jsonl"})
+
     doc = {
         "bench": "obs_report",
         "manifests": sorted(benches),
@@ -171,13 +218,15 @@ def run() -> list[dict]:
         "missing_provenance": missing_provenance,
         "cost_model": cost_rows,
         "telemetry_compiles": telemetry_compiles,
-        "trace_path": os.path.basename(_TRACE_PATH),
+        "tap_events": len(tap_events),
+        "trace_path": os.path.relpath(_TRACE_PATH, _ROOT),
         "trace_events": stats["events"],
         "trace_complete": stats["complete"],
         "trace_dispositions": disp,
         "trace_dispositions_ok": True,
         "counter_names": list(obs.counter_names()),
         "compile_events_total": obs.compile_events(),
+        "trend": trend,
         "serving_demo": {
             "cells": b, "rounds": ROUNDS, "rate": RATE,
             "capacity": CAPACITY, "run_s": run_s,
@@ -192,7 +241,10 @@ def run() -> list[dict]:
             f"manifests={len(benches)};warnings={len(warnings_collected)};"
             f"missing_provenance={len(missing_provenance)};"
             f"trace_events={stats['events']};complete={stats['complete']};"
-            f"telemetry_compiles={telemetry_compiles}"
+            f"telemetry_compiles={telemetry_compiles};"
+            f"tap_events={len(tap_events)};"
+            f"history_entries={trend['entries']};"
+            f"trend_regressions={len(trend['regressions'])}"
         ),
     }]
     for c in cost_rows:

@@ -5,9 +5,19 @@ Usage:
   python -m benchmarks.run                 # run every suite
   python -m benchmarks.run bench_policies  # run the named suite(s) only
   python -m benchmarks.run --list          # print registered targets + blurbs
+  python -m benchmarks.run --check ...     # additionally trend-gate: exit 2
+                                           # on any HARD trend regression in
+                                           # the BENCH_history.jsonl
+                                           # trajectory after the suites run
+  python -m benchmarks.run --quiet ...     # suppress the stderr progress
+                                           # line (CI logs)
 
 Exit code 0 is the CI smoke gate: every requested suite must produce its
-rows without raising.  Seven targets additionally refresh a manifest at the
+rows without raising (exit 1 otherwise); ``--check`` adds exit 2 when the
+robust trend detector (``repro.obs.history.trend_report``) flags a hard
+regression — the median of the newest history entries leaving the
+committed median ± max(tol·|median|, z·MAD) envelope on the worse side
+for a perf metric.  Seven targets additionally refresh a manifest at the
 repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
 ``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
 ``BENCH_sweep.json`` (with a soft rows/sec regression check against the
@@ -22,14 +32,24 @@ serving grid: latency percentiles, served-requests/sec and the
 admission-control-vs-admit-all gain at overload) and ``obs_report`` ->
 ``BENCH_obs.json`` (cross-bench regression summary: metric deltas vs the
 committed baselines, collected softgate warnings, provenance audit,
-static hlo_cost rows, plus a telemetry-on serving run exported as the
-Chrome trace ``obs_trace.json``).
+static hlo_cost rows, the trend section over ``BENCH_history.jsonl``,
+plus a telemetry+tap serving run exported as the Chrome trace
+``benchmarks/artifacts/obs_trace.json``).  Every manifest write appends
+its history record (``repro.obs.history``; ``REPRO_BENCH_HISTORY``
+redirects the file).
+
+A stderr progress line (suites done, elapsed — ``repro.obs.metrics.
+ProgressLine``) tracks the selection unless ``--quiet``; the process-
+default metrics registry collects per-suite wall-clock
+(``bench.<target>.seconds``) and the executors' compile/phase attribution
+either way.
 
 Profiling: set ``REPRO_PROFILE=<dir>`` to wrap the selected suites in a
 ``jax.profiler`` trace (``repro.obs.profile_trace``); engine phases are
 annotated via ``jax.named_scope`` either way.
 """
 
+import os
 import sys
 import traceback
 
@@ -81,6 +101,9 @@ def main(argv: list[str] | None = None) -> None:
     if "--list" in argv:
         print(list_targets())
         return
+    check = "--check" in argv
+    quiet = "--quiet" in argv
+    argv = [a for a in argv if a not in ("--check", "--quiet")]
 
     known = {name for name, _, _ in SUITES}
     unknown = [a for a in argv if a not in known]
@@ -96,14 +119,18 @@ def main(argv: list[str] | None = None) -> None:
     # REPRO_PROFILE=<dir> wraps the whole selection in a jax.profiler trace;
     # each suite gets a host-side TraceAnnotation span (repro.obs.profiling)
     from repro.obs import annotate, profile_trace
+    from repro.obs.metrics import DEFAULT as _metrics
+    from repro.obs.metrics import ProgressLine, timed
 
+    progress = ProgressLine(total=len(selected), enabled=not quiet,
+                            label="benchmarks")
     print("name,us_per_call,derived")
     failed = False
     with profile_trace("benchmarks.run"):
-        for name, module, _ in selected:
+        for i, (name, module, _) in enumerate(selected):
             try:
                 fn = importlib.import_module(f"benchmarks.{module}").run
-                with annotate(f"suite:{name}"):
+                with annotate(f"suite:{name}"), timed(f"bench.{name}"):
                     rows = fn()
                 for row in rows:
                     print(f"{row['name']},{row['us_per_call']:.2f},\"{row['derived']}\"")
@@ -111,8 +138,30 @@ def main(argv: list[str] | None = None) -> None:
                 failed = True
                 print(f"{name},0,\"SUITE ERROR: {e}\"", file=sys.stdout)
                 traceback.print_exc(file=sys.stderr)
+            progress.update(i + 1)
+    progress.close()
     if failed:
         raise SystemExit(1)
+    if check:
+        regressions = _trend_check()
+        if regressions:
+            for r in regressions:
+                print(f"TREND REGRESSION: {r['message']}", file=sys.stderr)
+            raise SystemExit(2)
+
+
+def _trend_check() -> list[dict]:
+    """Hard trend-regression records over the benchmark history trajectory.
+
+    The history file is ``BENCH_history.jsonl`` next to the repo-root
+    manifests (``REPRO_BENCH_HISTORY`` overrides — the hook the tests use
+    to doctor a synthetic slowdown)."""
+    from repro.obs import history as _history
+
+    anchor = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_obs.json")
+    records = _history.read_history(_history.history_path(anchor))
+    return _history.hard_regressions(_history.trend_report(records))
 
 
 if __name__ == "__main__":

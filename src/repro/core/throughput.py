@@ -376,6 +376,9 @@ def _simulate_impl(
     strategies: tuple[str, ...],
     round_chunk: int | None,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
+    tap_row=None,
 ):
     """Shared engine body behind :func:`simulate_strategies` (static
     ``LoadParams``) and :func:`simulate_strategies_pool` (traced
@@ -387,7 +390,17 @@ def _simulate_impl(
     :class:`repro.obs.telemetry.TelemetryFrame` of per-round streams —
     pure extra outputs of the same traced computation (the success stream
     is built from the identical intermediate values, so it is
-    bit-identical either way; property-tested in tests/obs/)."""
+    bit-identical either way; property-tested in tests/obs/).
+
+    ``tap`` (static): True streams block aggregates (rounds done, success
+    counts + timely throughput so far, mean estimator error so far) to the
+    host DURING the computation via :func:`repro.obs.taps.emit` — at every
+    ``round_chunk`` block boundary on the chunked path (which swaps the
+    ``lax.map`` for an equivalent ``lax.scan`` carrying the cumulative
+    aggregates; the per-round ys are untouched, so outputs stay
+    bit-identical) and at ``tap_stride`` boundaries on the unchunked path.
+    ``tap_row`` is an optional traced batch index stamped into the events
+    (-1 when absent)."""
     _check_strategies(strategies)
     _check_chain_shapes(p_gg, p_bb, rounds)
     masked = isinstance(load, lea_mod.PoolLoad)
@@ -425,9 +438,11 @@ def _simulate_impl(
             jnp.moveaxis(feasible, 0, 1),                          # (m, S)
         )
 
-    def with_frame(succ, tel):
+    def est_err_rounds():
         # estimator error vs. the genie's true conditional p_good, masked
-        # workers excluded — O(A*M*n), computed once outside the blocks
+        # workers excluded — O(A*M*n), computed once outside the blocks;
+        # shared by the telemetry frame and the tap aggregates (same traced
+        # values, same order of operations either way)
         from repro.policies.estimators import oracle_p_good
 
         p_true = oracle_p_good(states, p_gg, p_bb, pi_g)           # (M, n)
@@ -437,17 +452,49 @@ def _simulate_impl(
             est = jnp.sum(err * w, axis=-1) / jnp.maximum(jnp.sum(w), 1.0)
         else:
             est = jnp.mean(err, axis=-1)                           # (A, M)
+        return jnp.moveaxis(est, 0, 1)                             # (M, A)
+
+    def with_frame(succ, tel):
         prefix_t, load_total_t, received_t, feasible_t = tel
         return succ, TelemetryFrame(
-            est_err=jnp.moveaxis(est, 0, 1),                       # (M, A)
+            est_err=est_err_rounds(),
             prefix_size=prefix_t,
             load_total=load_total_t,
             received=received_t,
             feasible=feasible_t,
         )
 
+    row = jnp.int32(-1) if tap_row is None else jnp.asarray(tap_row, jnp.int32)
+
+    def tap_emit(token, block_i, rounds_done, succ_cum, err_cum):
+        # block aggregates: cumulative success counts per strategy, timely
+        # throughput so far, mean estimator error so far (A may be 0)
+        from repro.obs import taps as _taps
+
+        done_f = jnp.maximum(rounds_done.astype(jnp.float32), 1.0)
+        return _taps.emit(
+            "engine.pool", token=token,
+            block=jnp.asarray(block_i, jnp.int32),
+            row=row,
+            rounds_done=jnp.asarray(rounds_done, jnp.int32),
+            succ_so_far=succ_cum,
+            throughput_so_far=succ_cum.astype(jnp.float32) / done_f,
+            est_err_so_far=err_cum / done_f,
+        )
+
     if round_chunk is None or round_chunk >= rounds:
         out = block(states, round_keys, p_alloc)
+        if tap:
+            succ_all = out[0] if telemetry else out                # (M, S)
+            from repro.obs import taps as _taps
+
+            stride = _taps.resolve_stride(rounds, tap_stride)
+            succ_cum = jnp.cumsum(succ_all.astype(jnp.int32), axis=0)
+            err_cum = jnp.cumsum(est_err_rounds(), axis=0)         # (M, A)
+            token = None
+            for bi, bound in enumerate(_taps.stride_boundaries(rounds, stride)):
+                token = tap_emit(token, bi, jnp.int32(bound),
+                                 succ_cum[bound - 1], err_cum[bound - 1])
         return with_frame(*out) if telemetry else out
 
     if round_chunk <= 0:
@@ -461,19 +508,54 @@ def _simulate_impl(
     p_alloc_p = (
         jnp.concatenate([p_alloc, p_alloc[:, -pad:]], axis=1) if pad else p_alloc
     )
-    out = jax.lax.map(
-        lambda xs: block(*xs),
-        (
-            states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
-            keys_p.reshape((n_blocks, round_chunk) + round_keys.shape[1:]),
-            jnp.moveaxis(
-                p_alloc_p.reshape(
-                    (p_alloc.shape[0], n_blocks, round_chunk, states.shape[1])
-                ),
-                0, 1,
+    xs = (
+        states_p.reshape((n_blocks, round_chunk) + states.shape[1:]),
+        keys_p.reshape((n_blocks, round_chunk) + round_keys.shape[1:]),
+        jnp.moveaxis(
+            p_alloc_p.reshape(
+                (p_alloc.shape[0], n_blocks, round_chunk, states.shape[1])
             ),
+            0, 1,
         ),
-    )  # leaves: (n_blocks, round_chunk, ...)
+    )
+    if not tap:
+        out = jax.lax.map(lambda b_xs: block(*b_xs), xs)
+        # leaves: (n_blocks, round_chunk, ...)
+    else:
+        # lax.map IS lax.scan with an unused carry: carrying the cumulative
+        # aggregates (and emitting them at every block boundary) leaves the
+        # per-round ys — and therefore the unblocked outputs — bit-identical
+        est_full = est_err_rounds()                                # (M, A)
+        est_p = (
+            jnp.concatenate([est_full, est_full[-pad:]]) if pad else est_full
+        ).reshape((n_blocks, round_chunk, len(alloc_names)))
+        in_round = jnp.arange(round_chunk, dtype=jnp.int32)
+
+        def scan_body(carry, b_xs):
+            block_i, succ_cum, err_cum, token = carry
+            *block_xs, est_b = b_xs
+            ys = block(*block_xs)
+            succ_b = ys[0] if telemetry else ys                    # (m, S)
+            # mask the edge-pad rows out of the aggregates (the ys keep
+            # them; unblock slices them off exactly as before)
+            valid = (block_i * round_chunk + in_round) < rounds    # (m,)
+            succ_cum = succ_cum + jnp.sum(
+                jnp.where(valid[:, None], succ_b.astype(jnp.int32), 0), axis=0
+            )
+            err_cum = err_cum + jnp.sum(
+                jnp.where(valid[:, None], est_b, 0.0), axis=0
+            )
+            rounds_done = jnp.minimum((block_i + 1) * round_chunk, rounds)
+            token = tap_emit(token, block_i, rounds_done, succ_cum, err_cum)
+            return (block_i + 1, succ_cum, err_cum, token), ys
+
+        carry0 = (
+            jnp.int32(0),
+            jnp.zeros((len(strategies),), jnp.int32),
+            jnp.zeros((len(alloc_names),), jnp.float32),
+            jnp.int32(0),
+        )
+        _, out = jax.lax.scan(scan_body, carry0, (*xs, est_p))
 
     def unblock(x):
         return x.reshape((n_blocks * round_chunk,) + x.shape[2:])[:rounds]
@@ -522,7 +604,8 @@ def simulate_strategies(
 
 
 @partial(jax.jit,
-         static_argnames=("strategies", "rounds", "round_chunk", "telemetry"))
+         static_argnames=("strategies", "rounds", "round_chunk", "telemetry",
+                          "tap", "tap_stride"))
 def simulate_strategies_pool(
     key: jax.Array,
     pool,
@@ -535,6 +618,9 @@ def simulate_strategies_pool(
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
     round_chunk: int | None = None,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
+    tap_row=None,
 ):
     """:func:`simulate_strategies` with TRACED load parameters.
 
@@ -553,10 +639,17 @@ def simulate_strategies_pool(
     streams out of the SAME traced computation (see
     :mod:`repro.obs.telemetry`; bit-identity and the zero-extra-compile
     property are asserted in tests/obs/).
+
+    ``tap`` (static): True streams block-aggregated telemetry to the host
+    DURING the computation (see :mod:`repro.obs.taps`) at ``round_chunk``
+    block boundaries (or ``tap_stride`` boundaries when unchunked) —
+    outputs stay bit-identical, one compile per signature, and
+    ``tap=False`` traces zero callbacks.  ``tap_row`` (traced int) labels
+    events with a batch index under :func:`sweep_pool`.
     """
     return _simulate_impl(
         key, pool, p_gg, p_bb, mu_g, mu_b, deadline, rounds, strategies,
-        round_chunk, telemetry,
+        round_chunk, telemetry, tap, tap_stride, tap_row,
     )
 
 
@@ -767,6 +860,8 @@ def sweep_pool(
     strategies: tuple[str, ...] = ("lea", "static", "oracle"),
     round_chunk: int | None = None,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """:func:`sweep` with TRACED per-row load parameters.
 
@@ -779,6 +874,9 @@ def sweep_pool(
 
     ``telemetry=True`` returns ``(succ, TelemetryFrame)`` with a leading
     (B,) axis on every frame leaf (same compile-fusion contract).
+    ``tap=True`` streams per-row block aggregates to the host mid-run
+    (events carry the batch ``row`` index; see :mod:`repro.obs.taps`) —
+    same one-compile contract, outputs bit-identical.
     """
     strategies = tuple(strategies)   # lists would fail jit's static-arg hashing
     b = p_gg.shape[0]
@@ -786,7 +884,16 @@ def sweep_pool(
     mu_b = jnp.broadcast_to(jnp.asarray(mu_b, jnp.float32), (b,))
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (b,))
     fn = partial(simulate_strategies_pool, rounds=rounds, strategies=strategies,
-                 round_chunk=round_chunk, telemetry=telemetry)
+                 round_chunk=round_chunk, telemetry=telemetry, tap=tap,
+                 tap_stride=tap_stride)
+    if tap:
+        rows = jnp.arange(b, dtype=jnp.int32)
+        return jax.vmap(
+            lambda k, pl, pg, pb, mg, mb, d, ri: fn(
+                k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d,
+                tap_row=ri,
+            )
+        )(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, rows)
     return jax.vmap(
         lambda k, pl, pg, pb, mg, mb, d: fn(
             k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d

@@ -56,6 +56,7 @@ class FaultOutcomes(NamedTuple):
 def _simulate_faults_impl(
     key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
     rounds, strategies, r, packets, p1, telemetry=False,
+    tap=False, tap_stride=None, tap_row=None,
 ):
     states, loads, feasible = throughput._rollout_impl(
         key, pool, p_gg, p_bb, rounds, strategies
@@ -82,11 +83,37 @@ def _simulate_faults_impl(
         full_conserve=to_ms(full_con),
         partial=to_ms(l1 & ~full_con),
     )
+    count_i = lambda m, ax: jnp.sum(m.astype(jnp.int32), axis=ax)
+    if tap:
+        # the engine is fully vectorised (no scan), so stride aggregates
+        # are prefix sums of the per-round streams; emitting them is a pure
+        # extra effect of the same traced values — outcomes untouched
+        from repro.obs import taps as _taps
+
+        stride = _taps.resolve_stride(rounds, tap_stride)
+        cum = jax.tree.map(
+            lambda x: jnp.cumsum(x.astype(jnp.int32), axis=0), outcomes
+        )
+        pre_cum = jnp.cumsum(count_i(trace.t_cut < deadline, -1))
+        lost_cum = jnp.cumsum(count_i(~trace.keep, (-3, -2, -1)))
+        row = (jnp.int32(-1) if tap_row is None
+               else jnp.asarray(tap_row, jnp.int32))
+        token = None
+        for bi, bound in enumerate(_taps.stride_boundaries(rounds, stride)):
+            token = _taps.emit(
+                "faults.sweep", token=token,
+                block=jnp.int32(bi), row=row,
+                rounds_done=jnp.int32(bound),
+                recovered_aon_so_far=cum.full_aon[bound - 1],
+                recovered_conserve_so_far=cum.full_conserve[bound - 1],
+                partial_so_far=cum.partial[bound - 1],
+                preempted_so_far=pre_cum[bound - 1],
+                packets_lost_so_far=lost_cum[bound - 1],
+            )
     if not telemetry:
         return outcomes
     # fault-event counts + binding received margins: pure extra outputs of
     # the same traced values (the outcome streams above are untouched)
-    count_i = lambda m, ax: jnp.sum(m.astype(jnp.int32), axis=ax)
     tel = FaultTelemetry(
         preempted=count_i(trace.t_cut < deadline, -1),       # (M,)
         packets_lost=count_i(~trace.keep, (-3, -2, -1)),     # (M,)
@@ -97,7 +124,7 @@ def _simulate_faults_impl(
 
 
 @partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets",
-                                   "p1", "telemetry"))
+                                   "p1", "telemetry", "tap", "tap_stride"))
 def simulate_faults(
     key: jax.Array,
     pool,
@@ -115,6 +142,8 @@ def simulate_faults(
     packets: int,
     p1: int = 1,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """One row's fault-scored simulation (see module docstring).
 
@@ -131,24 +160,36 @@ def simulate_faults(
     FaultTelemetry)`` — per-round fault-event counts and binding received
     margins out of the same traced computation; False (default) is the
     pre-existing path, bit-identical.
+
+    ``tap`` (static): True streams stride-aggregated decode/fault counts
+    to the host mid-run (:mod:`repro.obs.taps`); outputs stay
+    bit-identical and ``tap=False`` traces zero callbacks.
     """
     return _simulate_faults_impl(
         key, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
-        rounds, strategies, r, packets, p1, telemetry,
+        rounds, strategies, r, packets, p1, telemetry, tap, tap_stride,
     )
 
 
 @partial(jax.jit, static_argnames=("rounds", "strategies", "r", "packets",
-                                   "p1", "telemetry"))
+                                   "p1", "telemetry", "tap", "tap_stride"))
 def _run_fault_group(
     keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star,
     *, rounds, strategies, r, packets, p1, telemetry=False,
+    tap=False, tap_stride=None,
 ):
     """(B,) rows -> (B, rounds, S) outcomes, one XLA computation."""
+    rows = jnp.arange(keys.shape[0], dtype=jnp.int32) if tap else None
+    fn = lambda k, pl, pg, pb, mg, mb, d, ch, k1, ri: _simulate_faults_impl(
+        k, pl, pg, pb, mg, mb, d, ch, k1,
+        rounds, strategies, r, packets, p1, telemetry, tap, tap_stride, ri,
+    )
+    if tap:
+        return jax.vmap(fn)(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline,
+                            channel, k1star, rows)
     return jax.vmap(
-        lambda k, pl, pg, pb, mg, mb, d, ch, k1: _simulate_faults_impl(
-            k, pl, pg, pb, mg, mb, d, ch, k1,
-            rounds, strategies, r, packets, p1, telemetry,
+        lambda k, pl, pg, pb, mg, mb, d, ch, k1: fn(
+            k, pl, pg, pb, mg, mb, d, ch, k1, None
         )
     )(keys, pool, p_gg, p_bb, mu_g, mu_b, deadline, channel, k1star)
 
@@ -183,6 +224,8 @@ def sweep_faults(
     packets: int,
     p1: int = 1,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """Batched :func:`simulate_faults`: every leaf carries a leading (B,) axis.
 
@@ -193,7 +236,9 @@ def sweep_faults(
     :class:`FaultOutcomes` of (B, rounds, S) arrays; with
     ``telemetry=True``, ``(FaultOutcomes, FaultTelemetry)`` with a leading
     (B,) axis on every telemetry leaf (same one-compile contract — a
-    telemetry-on grid is still ONE computation).
+    telemetry-on grid is still ONE computation).  ``tap=True`` streams
+    per-row stride aggregates mid-run (events carry the batch ``row``; see
+    :mod:`repro.obs.taps`) under the same contract.
     """
     strategies = tuple(strategies)
     b = p_gg.shape[0]
@@ -203,5 +248,5 @@ def sweep_faults(
         keys, pool, p_gg, p_bb, as_b(mu_g), as_b(mu_b), as_b(deadline),
         channel, jnp.broadcast_to(jnp.asarray(k1star, jnp.int32), (b,)),
         rounds=rounds, strategies=strategies, r=r, packets=packets, p1=p1,
-        telemetry=telemetry,
+        telemetry=telemetry, tap=tap, tap_stride=tap_stride,
     )

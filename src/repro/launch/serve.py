@@ -13,6 +13,12 @@ worker pool, and prints the timely-throughput / latency accounting.
 Any registered arrival process is legal (``--process poisson --rate 1.5``,
 ``--process mmpp ...``); ``--admit-threshold 0 --reserve-cap big`` is
 admit-all.  Exit is always 0 unless the accounting identities fail.
+
+Live observability (:mod:`repro.obs`): ``--progress`` turns on the serving
+engine's ``tap=`` stream and renders a stderr progress line (rounds/sec,
+ETA) DURING the compiled scan; ``--tap-stride N`` sets the block size
+(default ``rounds // 8``); ``--tap-log FILE`` appends every tap event to a
+JSONL event log.  Tap-off runs are bit-identical to the flags' absence.
 """
 
 from __future__ import annotations
@@ -25,6 +31,8 @@ import numpy as np
 
 from repro import serving
 from repro.core import CodeSpec, LoadParams
+from repro.obs import metrics as _metrics
+from repro.obs import taps as _taps
 
 
 def _build_process(args):
@@ -81,6 +89,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--admit-threshold", type=float, default=0.5)
     ap.add_argument("--reserve-cap", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    # live observability (repro.obs taps)
+    ap.add_argument("--progress", action="store_true",
+                    help="stream tap events; stderr progress line mid-scan")
+    ap.add_argument("--tap-stride", type=int, default=None,
+                    help="rounds per tap block (default rounds // 8)")
+    ap.add_argument("--tap-log", default=None, metavar="FILE",
+                    help="append tap events to this JSONL file")
     args = ap.parse_args(argv)
     if args.smoke:
         args.rounds = min(args.rounds, 64)
@@ -100,13 +115,31 @@ def main(argv=None) -> dict:
         deadline_rel=args.deadline_rel,
         admit_threshold=args.admit_threshold, reserve_cap=args.reserve_cap,
     )
-    out = serving.simulate_serving(
-        jax.random.PRNGKey(args.seed), jnp.ones((args.n,), bool),
-        jnp.full((args.n,), args.p_gg), jnp.full((args.n,), args.p_bb),
-        args.mu_g, args.mu_b, args.deadline, req, _build_process(args),
-        rounds=args.rounds, strategies=strategies,
-        capacity=args.capacity, grace=args.grace,
-    )
+    tap = bool(args.progress or args.tap_log)
+    stride = args.tap_stride
+    if tap and stride is None:
+        stride = max(args.rounds // 8, 1)
+    progress = _metrics.ProgressLine(total=args.rounds, enabled=args.progress,
+                                     label="serve")
+    handlers = [("serve.progress", progress)] if args.progress else []
+    if args.tap_log:
+        handlers.append(("serve.jsonl", _metrics.JsonlSink(args.tap_log)))
+    for hname, h in handlers:
+        _taps.add_tap(hname, h)
+    try:
+        out = serving.simulate_serving(
+            jax.random.PRNGKey(args.seed), jnp.ones((args.n,), bool),
+            jnp.full((args.n,), args.p_gg), jnp.full((args.n,), args.p_bb),
+            args.mu_g, args.mu_b, args.deadline, req, _build_process(args),
+            rounds=args.rounds, strategies=strategies,
+            capacity=args.capacity, grace=args.grace,
+            tap=tap, tap_stride=stride,
+        )
+        out = jax.block_until_ready(out)
+    finally:
+        for hname, _ in handlers:
+            _taps.remove_tap(hname)
+        progress.close()
 
     summary = {}
     arr = int(out.arrivals[0])

@@ -30,23 +30,57 @@ on top of those streams:
     -> decode), host-side ``jax.profiler.TraceAnnotation`` spans, and a
     ``REPRO_PROFILE=<dir>``-gated profiler-trace context manager.
 
+The LIVE tier (PR 9) sits next to the post-hoc ``telemetry=`` streams:
+
+  * :mod:`~repro.obs.taps`       — the ``tap=`` static engine flag's host
+    side: ``io_callback``-backed block-aggregate events streamed DURING
+    compiled scans, handler registry (:func:`add_tap` /
+    :func:`capture_taps`), event schema validation; tap-off is
+    bit-identical and zero-callback, tap-on still compiles once per
+    family signature (same contract as ``telemetry=``);
+  * :mod:`~repro.obs.metrics`    — host metrics registry (named counters /
+    gauges / histograms under a strict naming convention) with JSONL,
+    Prometheus-exposition and stderr progress-line sinks, plus per-phase
+    wall-clock / compile-time attribution (:func:`timed`,
+    :func:`record_compile`);
+  * :mod:`~repro.obs.history`    — ``BENCH_history.jsonl``: every
+    :func:`repro.sweeps.results.write_manifest` appends a compact
+    provenance-stamped record, and :func:`~repro.obs.history.trend_report`
+    flags robust (median-vs-MAD-envelope) slowdowns across the trajectory
+    — the softgate's "vs HEAD" widened to "vs trajectory"
+    (``benchmarks/run.py --check`` gates on it).
+
 ``benchmarks/run.py obs_report`` is the consumer: it aggregates every
 committed ``BENCH_*.json`` into one provenance-stamped regression summary
-(metric deltas vs. the committed baselines, softgate warnings collected)
-and renders a serving run as a request-timeline trace.
+(metric deltas vs. the committed baselines, softgate warnings collected,
+trend section over the history) and renders a serving run as a
+request-timeline trace.
 """
 
 from .counters import compile_events, counter_names, register_compiled
+from .history import (HISTORY_BASENAME, HISTORY_ENV, append_record,
+                      history_path, read_history, record_from_manifest,
+                      trend_report)
+from .metrics import (DEFAULT as default_metrics, JsonlSink, MetricsRegistry,
+                      ProgressLine, record_compile, tap_to_registry, timed)
 from .profiling import (PROFILE_ENV, annotate, phase, profile_dir,
                         profile_trace)
 from .provenance import provenance
+from .taps import (EVENT_STREAMS, TAP_ENGINES, add_tap, capture_taps,
+                   remove_tap, tap_names, validate_event)
 from .telemetry import (FaultTelemetry, ServingTelemetry, TelemetryFrame,
                         metric_streams, metric_table, serving_trace,
                         validate_trace, write_trace)
 
 __all__ = [
-    "FaultTelemetry", "PROFILE_ENV", "ServingTelemetry", "TelemetryFrame",
-    "annotate", "compile_events", "counter_names", "metric_streams",
+    "EVENT_STREAMS", "FaultTelemetry", "HISTORY_BASENAME", "HISTORY_ENV",
+    "JsonlSink", "MetricsRegistry", "PROFILE_ENV", "ProgressLine",
+    "ServingTelemetry", "TAP_ENGINES", "TelemetryFrame", "add_tap",
+    "annotate", "append_record", "capture_taps", "compile_events",
+    "counter_names", "default_metrics", "history_path", "metric_streams",
     "metric_table", "phase", "profile_dir", "profile_trace", "provenance",
-    "register_compiled", "serving_trace", "validate_trace", "write_trace",
+    "read_history", "record_compile", "record_from_manifest",
+    "register_compiled", "remove_tap", "serving_trace", "tap_names",
+    "tap_to_registry", "timed", "trend_report", "validate_event",
+    "validate_trace", "write_trace",
 ]

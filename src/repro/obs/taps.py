@@ -1,0 +1,210 @@
+"""In-run telemetry taps: block aggregates streamed to the host mid-scan.
+
+The ``telemetry=`` flag (PR 8) returns per-round streams *with* the result
+— nothing reaches the host until the compiled computation finishes, which
+at paper scale (M = 1e5 sweeps, overnight ``arrival_grid`` serving runs)
+means hours of silence.  The ``tap=`` static flag (a sibling, threaded
+through the same engines) instead emits BLOCK AGGREGATES — rounds done,
+timely throughput so far, estimator error so far, queue admissions, fault
+counts — to the host DURING the scan, via ``jax.experimental.io_callback``
+at every ``round_chunk`` block boundary (and a configurable ``tap_stride``
+inside unchunked computations).
+
+Contract (property-tested in tests/obs/test_taps.py, mirroring
+``telemetry=``):
+
+  * ``tap=False`` (the default) is literally the pre-existing code path:
+    bit-identical outputs and ZERO host callbacks (no ``emit`` is traced);
+  * ``tap=True`` leaves the primary streams bit-identical (events are pure
+    extra effects of the same traced values) and still compiles exactly
+    once per static family signature (unified ``obs.counters`` registry);
+  * events arrive IN ORDER per (engine, row, strategy): every ``emit``
+    returns an int32 token that the next ``emit`` folds into an operand,
+    a pure data dependence that serialises unordered callbacks without
+    ``ordered=True`` (which vmap rejects — and every engine tap runs
+    under at least one vmap).
+
+Event schema: each event is a flat dict with ``engine`` (one of
+:data:`TAP_ENGINES`), ``host_time`` (``time.perf_counter()`` at delivery)
+and the engine's streams from :data:`EVENT_STREAMS` — scalars or small
+per-strategy vectors, as numpy arrays.  Batched engines add ``row`` (the
+vmapped batch index, -1 for unbatched calls); serving adds ``strategy``.
+
+Handlers are looked up at CALL time, not trace time, so a handler
+registered after a tapped computation compiled still receives its events
+(the compile-once property and live handler swapping coexist).  A handler
+that raises is dropped from that event, never the computation — the
+never-raise convention of ``repro.obs``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+Handler = Callable[[dict], None]
+
+# engine identifiers stamped into every event
+TAP_ENGINES = ("engine.pool", "faults.sweep", "serving")
+
+# per-engine payload streams (beyond the common engine/block/row/host_time);
+# the catalogue the ROADMAP documents and validate_event checks against
+EVENT_STREAMS: dict[str, tuple[str, ...]] = {
+    "engine.pool": (
+        "rounds_done", "succ_so_far", "throughput_so_far", "est_err_so_far",
+    ),
+    "faults.sweep": (
+        "rounds_done", "recovered_aon_so_far", "recovered_conserve_so_far",
+        "partial_so_far", "preempted_so_far", "packets_lost_so_far",
+    ),
+    "serving": (
+        "rounds_done", "admitted_so_far", "served_on_time_so_far",
+        "served_late_so_far", "rejected_so_far", "expired_so_far",
+        "occupancy", "strategy",
+    ),
+}
+
+_COMMON_KEYS = ("engine", "block", "row", "host_time")
+
+_HANDLERS: dict[str, Handler] = {}
+_LOCK = threading.Lock()
+
+
+def add_tap(name: str, handler: Handler) -> None:
+    """Register (or replace) a tap handler under ``name``.
+
+    The handler receives one dict per event (see module docstring); it runs
+    on the io_callback host thread, so it should be quick and must tolerate
+    concurrent calls when several devices run tapped computations.
+    """
+    if not callable(handler):
+        raise TypeError(f"tap handler {name!r} is not callable: {handler!r}")
+    with _LOCK:
+        _HANDLERS[name] = handler
+
+
+def remove_tap(name: str) -> None:
+    """Unregister a handler; unknown names are a no-op (teardown-safe)."""
+    with _LOCK:
+        _HANDLERS.pop(name, None)
+
+
+def tap_names() -> tuple[str, ...]:
+    """Registered handler names, sorted."""
+    with _LOCK:
+        return tuple(sorted(_HANDLERS))
+
+
+@contextlib.contextmanager
+def capture_taps() -> Iterator[list[dict]]:
+    """Collect every tap event fired inside the block into the yielded list.
+
+    The canonical test fixture::
+
+        with obs.capture_taps() as events:
+            run_group(group, tap=True)
+        assert events and events[-1]["rounds_done"] == rounds
+    """
+    events: list[dict] = []
+    name = f"_capture_{id(events)}"
+    add_tap(name, events.append)
+    try:
+        yield events
+    finally:
+        remove_tap(name)
+
+
+def _dispatch(engine: str, names: tuple[str, ...], vals: tuple) -> None:
+    """Build the event dict and fan it out to every registered handler."""
+    event: dict[str, Any] = {"engine": engine, "host_time": time.perf_counter()}
+    for k, v in zip(names, vals):
+        a = np.asarray(v)
+        event[k] = a[()] if a.ndim == 0 else a
+    with _LOCK:
+        handlers = list(_HANDLERS.values())
+    for handler in handlers:
+        try:
+            handler(dict(event))
+        except Exception:  # never-raise: a broken sink must not kill the run
+            pass
+
+
+def emit(engine: str, *, token=None, **streams):
+    """Trace one tap event into the current computation; returns a token.
+
+    ``streams`` are traced scalars/vectors (the event payload); ``token``
+    is the previous ``emit``'s return value — folding it into the first
+    operand forces host delivery order (unordered callbacks have no
+    ordering of their own, and ``ordered=True`` is rejected under vmap).
+    Call this ONLY under a ``tap=True`` static branch: an un-traced path
+    must stay zero-callback.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import io_callback
+
+    names = tuple(streams)
+    vals = [jnp.asarray(v) for v in streams.values()]
+
+    def cb(*args):
+        _dispatch(engine, names, args[: len(names)])
+        return np.int32(0)
+
+    if token is not None:
+        vals.append(jnp.asarray(token))  # cb ignores it; pure ordering dep
+    return io_callback(
+        cb, jax.ShapeDtypeStruct((), jnp.int32), *vals, ordered=False
+    )
+
+
+def validate_event(event: dict) -> None:
+    """Raise ``ValueError`` unless ``event`` matches the tap schema.
+
+    Checks the common keys, the engine id, the engine's exact stream set
+    and the monotonicity preconditions a single event can carry
+    (``rounds_done`` positive, ``block`` non-negative).
+    """
+    missing = [k for k in _COMMON_KEYS if k not in event]
+    if missing:
+        raise ValueError(f"tap event missing common keys {missing}: {sorted(event)}")
+    engine = event["engine"]
+    if engine not in EVENT_STREAMS:
+        raise ValueError(f"unknown tap engine {engine!r}; known: {TAP_ENGINES}")
+    want = set(EVENT_STREAMS[engine])
+    got = set(event) - set(_COMMON_KEYS)
+    if got != want:
+        raise ValueError(
+            f"{engine} event streams mismatch: missing {sorted(want - got)}, "
+            f"unexpected {sorted(got - want)}"
+        )
+    if int(np.asarray(event["rounds_done"])) <= 0:
+        raise ValueError(f"rounds_done must be positive: {event['rounds_done']}")
+    if int(np.asarray(event["block"])) < 0:
+        raise ValueError(f"block must be non-negative: {event['block']}")
+
+
+def resolve_stride(rounds: int, tap_stride: int | None) -> int:
+    """The emission stride inside an unchunked computation.
+
+    ``None`` means one final aggregate at round M (the cheapest honest
+    default); an explicit positive stride emits at every multiple (and
+    always at M).  Validated here so every engine rejects bad strides the
+    same way.
+    """
+    if tap_stride is None:
+        return rounds
+    if tap_stride <= 0:
+        raise ValueError(f"tap_stride must be positive, got {tap_stride}")
+    return min(tap_stride, rounds)
+
+
+def stride_boundaries(rounds: int, stride: int) -> tuple[int, ...]:
+    """Static emission boundaries: stride, 2*stride, ..., and always M."""
+    bounds = list(range(stride, rounds + 1, stride))
+    if not bounds or bounds[-1] != rounds:
+        bounds.append(rounds)
+    return tuple(bounds)

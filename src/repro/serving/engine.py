@@ -126,6 +126,7 @@ def _ceil_div(num, den):
 def _simulate_serving_impl(
     key, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process, channel,
     rounds, strategies, capacity, grace, telemetry=False,
+    tap=False, tap_stride=None, tap_row=None,
 ):
     states, p_alloc = throughput.serve_rollout(
         key, pool_mask, p_gg, p_bb, rounds, strategies
@@ -217,20 +218,56 @@ def _simulate_serving_impl(
         return (q, cnt), (event_t, sojourn_t, occ_t, n_admit,
                           count_t - n_admit)
 
-    def run_one(p_a, p_succ_a):
+    def run_one(p_a, p_succ_a, strat_i):
         zero = jnp.int32(0)
         carry0 = (
             rqueue.empty_queue(capacity),
             _Counters(zero, zero, zero, zero, zero),
         )
-        (q_f, cnt), ys = jax.lax.scan(
-            body, carry0,
-            xs=(t_idx, states, p_a, p_succ_a, counts, ks_m, eg_m, eb_m,
-                dl_m, thr_m, cap_m, t_cut),
+        xs = (t_idx, states, p_a, p_succ_a, counts, ks_m, eg_m, eb_m,
+              dl_m, thr_m, cap_m, t_cut)
+        if not tap:
+            (q_f, cnt), ys = jax.lax.scan(body, carry0, xs=xs)
+            return cnt, jnp.sum(q_f.occupied.astype(jnp.int32)), ys
+        # tap=True: the ONE scan becomes a trace-time chain of per-block
+        # scans of the SAME body over a partition of the same xs — the
+        # carry threads through unchanged and the ys concatenate, so every
+        # output is bit-identical — with a block-aggregate emit between
+        # segments.  (io_callback cannot be cond-gated here: the body runs
+        # under vmap — over strategies and sweep rows — and jax rejects IO
+        # effects in vmap-of-cond; segmenting needs no cond at all.)
+        from repro.obs import taps as _taps
+
+        stride = _taps.resolve_stride(rounds, tap_stride)
+        row = (jnp.int32(-1) if tap_row is None
+               else jnp.asarray(tap_row, jnp.int32))
+        carry, token, ys_blocks, done = carry0, None, [], 0
+        for bi, bound in enumerate(_taps.stride_boundaries(rounds, stride)):
+            xs_b = jax.tree.map(lambda x: x[done:bound], xs)
+            carry, ys_b = jax.lax.scan(body, carry, xs=xs_b)
+            ys_blocks.append(ys_b)
+            q_b, cnt_b = carry
+            token = _taps.emit(
+                "serving", token=token,
+                block=jnp.int32(bi), row=row,
+                strategy=jnp.asarray(strat_i, jnp.int32),
+                rounds_done=jnp.int32(bound),
+                admitted_so_far=cnt_b.admitted,
+                served_on_time_so_far=cnt_b.served_on_time,
+                served_late_so_far=cnt_b.served_late,
+                rejected_so_far=cnt_b.rejected,
+                expired_so_far=cnt_b.expired,
+                occupancy=jnp.sum(q_b.occupied.astype(jnp.int32)),
+            )
+            done = bound
+        q_f, cnt = carry
+        ys = jax.tree.map(
+            lambda *bs: jnp.concatenate(bs, axis=0), *ys_blocks
         )
         return cnt, jnp.sum(q_f.occupied.astype(jnp.int32)), ys
 
-    cnt, in_flight, ys = jax.vmap(run_one)(p_alloc, p_succ)
+    strat_idx = jnp.arange(len(strategies), dtype=jnp.int32)
+    cnt, in_flight, ys = jax.vmap(run_one)(p_alloc, p_succ, strat_idx)
     events, sojourn = ys[0], ys[1]
     n_strat = len(strategies)
     outcomes = ServingOutcomes(
@@ -256,7 +293,7 @@ def _simulate_serving_impl(
 
 
 @partial(jax.jit, static_argnames=("rounds", "strategies", "capacity",
-                                   "grace", "telemetry"))
+                                   "grace", "telemetry", "tap", "tap_stride"))
 def simulate_serving(
     key: jax.Array,
     pool_mask: jnp.ndarray,
@@ -274,6 +311,8 @@ def simulate_serving(
     grace: int = 0,
     channel: tuple = (),
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """One serving simulation (see module docstring).
 
@@ -290,24 +329,41 @@ def simulate_serving(
     ServingTelemetry)`` — per-round arrivals, queue occupancy and
     admission decisions out of the same compiled scan; False (default) is
     the pre-existing path, bit-identical.
+
+    ``tap`` (static): True streams per-(strategy) block aggregates —
+    admissions, served-on-time/late, rejections, expiries, occupancy so
+    far — to the host every ``tap_stride`` rounds WHILE the scan runs
+    (:mod:`repro.obs.taps`): the round scan is segmented at trace time
+    into equivalent per-block scans with an ``io_callback`` emit between
+    segments, so outputs stay bit-identical and ``tap=False`` traces zero
+    callbacks (one compile per static signature either way).
     """
     return _simulate_serving_impl(
         key, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process,
         channel, rounds, tuple(strategies), capacity, grace, telemetry,
+        tap, tap_stride,
     )
 
 
 @partial(jax.jit, static_argnames=("rounds", "strategies", "capacity",
-                                   "grace", "telemetry"))
+                                   "grace", "telemetry", "tap", "tap_stride"))
 def _run_serving_group(
     keys, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process, channel,
     *, rounds, strategies, capacity, grace, telemetry=False,
+    tap=False, tap_stride=None,
 ):
     """(B,) rows -> ServingOutcomes of (B, S, ...) leaves, ONE computation."""
+    fn = lambda k, m, pg, pb, mg, mb, d, sp, pr, ri: _simulate_serving_impl(
+        k, m, pg, pb, mg, mb, d, sp, pr, channel,
+        rounds, strategies, capacity, grace, telemetry, tap, tap_stride, ri,
+    )
+    if tap:
+        rows = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        return jax.vmap(fn)(keys, pool_mask, p_gg, p_bb, mu_g, mu_b,
+                            deadline, spec, process, rows)
     return jax.vmap(
-        lambda k, m, pg, pb, mg, mb, d, sp, pr: _simulate_serving_impl(
-            k, m, pg, pb, mg, mb, d, sp, pr, channel,
-            rounds, strategies, capacity, grace, telemetry,
+        lambda k, m, pg, pb, mg, mb, d, sp, pr: fn(
+            k, m, pg, pb, mg, mb, d, sp, pr, None
         )
     )(keys, pool_mask, p_gg, p_bb, mu_g, mu_b, deadline, spec, process)
 
@@ -342,6 +398,8 @@ def sweep_serving(
     grace: int = 0,
     channel: tuple = (),
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """Batched :func:`simulate_serving`: every leaf carries a leading (B,).
 
@@ -352,7 +410,10 @@ def sweep_serving(
     scalar parameters (per-row channel grids belong to
     :func:`repro.faults.engine.sweep_faults`).  ``telemetry=True`` returns
     ``(ServingOutcomes, ServingTelemetry)`` with a leading (B,) on every
-    telemetry leaf — still ONE compile for the whole grid.
+    telemetry leaf — still ONE compile for the whole grid.  ``tap=True``
+    streams per-(row, strategy) block aggregates mid-scan (see
+    :func:`simulate_serving`) — same one-compile contract, outputs
+    bit-identical.
     """
     strategies = tuple(strategies)
     b = p_gg.shape[0]
@@ -371,5 +432,5 @@ def sweep_serving(
         as_b(mu_g, jnp.float32), as_b(mu_b, jnp.float32),
         as_b(deadline, jnp.float32), spec, process, channel,
         rounds=rounds, strategies=strategies, capacity=capacity, grace=grace,
-        telemetry=telemetry,
+        telemetry=telemetry, tap=tap, tap_stride=tap_stride,
     )

@@ -26,6 +26,7 @@ blocks path so paper-scale M = 1e5 grids hold peak memory at one block.
 from __future__ import annotations
 
 import math
+import time
 from functools import partial
 from typing import Sequence
 
@@ -37,12 +38,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core import throughput
 from repro.core.lea import PoolLoad
 from repro.obs import counters as _obs_counters
+from repro.obs import metrics as _metrics
 
 from .registry import ScenarioBatch, SweepGroup
 
 
 @partial(jax.jit,
-         static_argnames=("rounds", "strategies", "round_chunk", "telemetry"))
+         static_argnames=("rounds", "strategies", "round_chunk", "telemetry",
+                          "tap", "tap_stride"))
 def _run_group(
     keys: jnp.ndarray,
     p_gg: jnp.ndarray,
@@ -56,13 +59,23 @@ def _run_group(
     strategies: tuple[str, ...],
     round_chunk: int | None,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """(B,) rows -> (B, rounds, S) success indicators, one XLA computation."""
     fn = partial(
         throughput.simulate_strategies_pool,
         rounds=rounds, strategies=strategies, round_chunk=round_chunk,
-        telemetry=telemetry,
+        telemetry=telemetry, tap=tap, tap_stride=tap_stride,
     )
+    if tap:
+        rows = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        return jax.vmap(
+            lambda k, pg, pb, mg, mb, d, pl, ri: fn(
+                k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d,
+                tap_row=ri,
+            )
+        )(keys, p_gg, p_bb, mu_g, mu_b, deadline, pool, rows)
     return jax.vmap(
         lambda k, pg, pb, mg, mb, d, pl: fn(
             k, pool=pl, p_gg=pg, p_bb=pb, mu_g=mg, mu_b=mb, deadline=d
@@ -109,12 +122,20 @@ def run_group(
     mesh: Mesh | None = None,
     round_chunk: int | None = None,
     telemetry: bool = False,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ):
     """Execute one group; returns host (B, rounds, S) bool success array.
 
     With ``telemetry=True`` returns ``(succ, TelemetryFrame)`` — the frame
     leaves are host arrays with the same leading (B,) slicing as ``succ``
-    (see :mod:`repro.obs.telemetry`); the group still compiles once.
+    (see :mod:`repro.obs.telemetry`); the group still compiles once.  With
+    ``tap=True`` the engine streams per-row block aggregates to the
+    registered tap handlers DURING the run (:mod:`repro.obs.taps`) — same
+    bit-identity and one-compile contract.  Every call attributes its
+    wall-clock (``phase.sweeps_run_group.seconds``) and any compile events
+    it triggered (``compile.sweeps_run_group.*``) to the default metrics
+    registry (:mod:`repro.obs.metrics`).
     """
     if group.rounds < 1:
         names = ", ".join(sc.name for sc in group.scenarios[:3])
@@ -128,11 +149,21 @@ def run_group(
             raise ValueError(f'sweep mesh must have axes ("batch",), got {mesh.axis_names}')
         batch, b = _pad_batch(batch, mesh.devices.size)
         batch = _shard_batch(batch, mesh)
-    out = _run_group(
-        batch.keys, batch.p_gg, batch.p_bb, batch.mu_g, batch.mu_b,
-        batch.deadline, batch.pool,
-        rounds=group.rounds, strategies=group.strategies,
-        round_chunk=round_chunk, telemetry=telemetry,
+    c0 = _obs_counters.compile_events("sweeps.run_group")
+    t0 = time.perf_counter()
+    with _metrics.timed("phase.sweeps_run_group"):
+        out = _run_group(
+            batch.keys, batch.p_gg, batch.p_bb, batch.mu_g, batch.mu_b,
+            batch.deadline, batch.pool,
+            rounds=group.rounds, strategies=group.strategies,
+            round_chunk=round_chunk, telemetry=telemetry,
+            tap=tap, tap_stride=tap_stride,
+        )
+        out = jax.block_until_ready(out)
+    _metrics.record_compile(
+        "sweeps.run_group",
+        _obs_counters.compile_events("sweeps.run_group") - c0,
+        time.perf_counter() - t0,
     )
     if not telemetry:
         return np.asarray(out[:b])
@@ -145,9 +176,12 @@ def run_groups(
     *,
     mesh: Mesh | None = None,
     round_chunk: int | None = None,
+    tap: bool = False,
+    tap_stride: int | None = None,
 ) -> list[np.ndarray]:
     """Execute every group (one compile each); list aligned with ``groups``."""
-    return [run_group(g, mesh=mesh, round_chunk=round_chunk) for g in groups]
+    return [run_group(g, mesh=mesh, round_chunk=round_chunk,
+                      tap=tap, tap_stride=tap_stride) for g in groups]
 
 
 def suggest_round_chunk(
@@ -186,6 +220,8 @@ def run(
     seeds: int = 1,
     mesh: Mesh | None = None,
     round_chunk: int | None = None,
+    tap: bool = False,
+    tap_stride: int | None = None,
     **params,
 ):
     """The one-liner: expand -> group -> execute -> summarize.
@@ -205,5 +241,6 @@ def run(
             raise TypeError("family params only apply to a named family")
         scenarios = tuple(family_or_scenarios)
     groups = build_groups(scenarios, seeds=seeds)
-    succs = run_groups(groups, mesh=mesh, round_chunk=round_chunk)
+    succs = run_groups(groups, mesh=mesh, round_chunk=round_chunk,
+                       tap=tap, tap_stride=tap_stride)
     return results_mod.summarize(groups, succs, scenario_order=scenarios)

@@ -255,10 +255,22 @@ def write_manifest(path: str | os.PathLike, doc: dict[str, Any]) -> None:
     The provenance/warnings stamps are backstopped here too, so writers
     that assemble their document by hand (bench_faults, bench_serving,
     bench_gf) still satisfy the manifest contract.
+
+    Every successful write also appends a compact history record to
+    ``BENCH_history.jsonl`` next to the manifest (``REPRO_BENCH_HISTORY``
+    redirects it; see :mod:`repro.obs.history`) — the trajectory the
+    trend detector and ``benchmarks/run.py --check`` gate on.  The append
+    never raises: a read-only checkout degrades to no history, not a dead
+    bench.
     """
+    from repro.obs import history as _history
+
     doc.setdefault("warnings", [])
     doc.setdefault("provenance", _provenance_fn(time.time()))
     with open(path, "w") as f:
         # allow_nan=False: fail loudly rather than emit non-RFC JSON
         json.dump(doc, f, indent=2, allow_nan=False)
         f.write("\n")
+    _history.append_record(
+        _history.history_path(path), _history.record_from_manifest(path, doc)
+    )

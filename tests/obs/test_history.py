@@ -1,0 +1,168 @@
+"""Benchmark-history tests: the write_manifest append hook, record schema,
+the robust trend detector, and the ``benchmarks/run.py --check`` gate."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import history
+from repro.sweeps import results as sweeps_results
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def _record(bench="sweep_smoke", **metrics):
+    return {
+        "schema": history.SCHEMA_VERSION,
+        "bench": bench,
+        "manifest": f"BENCH_{bench}.json",
+        "written_at": 0.0,
+        "provenance": {k: None for k in
+                       ("git_sha", "git_dirty", "jax", "backend", "device",
+                        "timestamp")},
+        "metrics": metrics,
+        "warnings": 0,
+    }
+
+
+def test_history_path_env_override(tmp_path, monkeypatch):
+    manifest = tmp_path / "BENCH_x.json"
+    assert history.history_path(manifest) == str(
+        tmp_path / history.HISTORY_BASENAME
+    )
+    monkeypatch.setenv(history.HISTORY_ENV, "/elsewhere/h.jsonl")
+    assert history.history_path(manifest) == "/elsewhere/h.jsonl"
+
+
+def test_append_read_roundtrip_and_malformed_lines(tmp_path):
+    path = tmp_path / "h.jsonl"
+    rec = _record(rows_per_sec=100.0)
+    assert history.append_record(path, rec)
+    with open(path, "a") as f:
+        f.write("{torn line\n\n")
+    assert history.append_record(path, _record(rows_per_sec=101.0))
+    got = history.read_history(path)
+    assert len(got) == 2                       # torn line skipped, not fatal
+    assert all(history.valid_record(r) for r in got)
+    # a missing file is an empty history; appends to bad paths return False
+    assert history.read_history(tmp_path / "missing.jsonl") == []
+    assert not history.append_record(tmp_path / "no" / "dir" / "h.jsonl", rec)
+    # non-JSON-able records (NaN) are refused, never raised
+    assert not history.append_record(path, _record(x=float("nan")))
+
+
+def test_write_manifest_appends_history(tmp_path):
+    manifest = tmp_path / "BENCH_demo.json"
+    for i in range(2):
+        sweeps_results.write_manifest(
+            manifest, {"bench": "demo", "rows_per_sec": 100.0 + i,
+                       "flag": True, "results": [{"x": 1}]},
+        )
+    recs = history.read_history(history.history_path(manifest))
+    assert [r["bench"] for r in recs] == ["demo", "demo"]
+    for r in recs:
+        assert history.valid_record(r)
+        assert r["manifest"] == "BENCH_demo.json"
+        # numeric non-bool TOP-LEVEL fields only: the bool and the result
+        # rows stay in the manifest
+        assert set(r["metrics"]) == {"rows_per_sec"}
+    assert recs[0]["metrics"]["rows_per_sec"] == 100.0
+    assert recs[1]["metrics"]["rows_per_sec"] == 101.0
+
+
+def test_metric_direction():
+    assert history.metric_direction("rows_per_sec") == "higher"
+    assert history.metric_direction("speedup_matmul") == "higher"
+    assert history.metric_direction("run_s") == "lower"
+    assert history.metric_direction("compile_seconds") == "lower"
+    assert history.metric_direction("us_per_call") == "lower"
+    assert history.metric_direction("telemetry_compiles") is None
+    assert history.metric_direction("trace_events") is None
+
+
+def test_trend_report_flags_synthetic_slowdown():
+    vals = [100.0, 101.0, 99.0, 100.5, 100.0, 40.0, 39.0]
+    recs = [_record(rows_per_sec=v) for v in vals]
+    report = history.trend_report(recs)
+    assert report["entries"] == len(vals)
+    assert report["benches"] == ["sweep_smoke"]
+    hard = history.hard_regressions(report)
+    assert len(hard) == 1
+    (r,) = hard
+    assert r["kind"] == "trend" and r["severity"] == "hard"
+    assert r["bench"] == "sweep_smoke" and r["metric"] == "rows_per_sec"
+    assert r["value"] == pytest.approx(39.5)
+    assert r["baseline"] == pytest.approx(100.0)
+    assert r["direction"] == "higher"
+    assert "regressed" in r["message"]
+
+
+def test_trend_report_lower_better_and_improvements():
+    # wall-clock DOUBLES -> hard; throughput improves -> info only
+    slow = [_record(run_s=1.0) for _ in range(5)] + \
+           [_record(run_s=2.5), _record(run_s=2.6)]
+    hard = history.hard_regressions(history.trend_report(slow))
+    assert len(hard) == 1 and hard[0]["direction"] == "lower"
+    up = [_record(rows_per_sec=100.0) for _ in range(5)] + \
+         [_record(rows_per_sec=200.0), _record(rows_per_sec=210.0)]
+    report = history.trend_report(up)
+    assert history.hard_regressions(report) == []
+    infos = [r for r in report["regressions"] if r["severity"] == "info"]
+    assert len(infos) == 1 and "improved" in infos[0]["message"]
+
+
+def test_trend_report_robust_to_noise_and_short_series():
+    # single outlier inside the recent window cannot fire the detector
+    # (median of recent=2), nor can normal machine noise within tolerance
+    noisy = [_record(rows_per_sec=v)
+             for v in [100, 98, 103, 101, 99, 100, 75]]
+    assert history.hard_regressions(history.trend_report(noisy)) == []
+    # short series: below min_points nothing is trended
+    short = [_record(rows_per_sec=v) for v in [100, 100, 10, 10]]
+    report = history.trend_report(short)
+    assert report["regressions"] == []
+    assert report["series"]["sweep_smoke"]["rows_per_sec"]["points"] == 4
+    # non-perf metrics never produce series
+    flat = [_record(trace_events=100.0) for _ in range(10)]
+    assert history.trend_report(flat)["series"] == {}
+    with pytest.raises(ValueError):
+        history.trend_report([], recent=0)
+    with pytest.raises(ValueError):
+        history.trend_report([], recent=3, min_points=4)
+
+
+def _run_check(history_path, tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               REPRO_BENCH_HISTORY=str(history_path))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--check", "--quiet",
+         "table_kstar"],
+        capture_output=True, text=True, timeout=560, cwd=_ROOT, env=env,
+    )
+
+
+def test_run_check_gates_on_doctored_history(tmp_path):
+    doctored = tmp_path / "doctored.jsonl"
+    vals = [100.0, 101.0, 99.0, 100.5, 100.0, 40.0, 39.0]
+    with open(doctored, "w") as f:
+        for v in vals:
+            f.write(json.dumps(_record(rows_per_sec=v)) + "\n")
+    proc = _run_check(doctored, tmp_path)
+    assert proc.returncode == 2, proc.stderr
+    assert "TREND REGRESSION" in proc.stderr
+    assert "rows_per_sec" in proc.stderr
+
+
+def test_run_check_passes_on_stable_history(tmp_path):
+    stable = tmp_path / "stable.jsonl"
+    with open(stable, "w") as f:
+        for v in [100.0, 101.0, 99.0, 100.5, 100.0, 100.2, 99.8]:
+            f.write(json.dumps(_record(rows_per_sec=v)) + "\n")
+    proc = _run_check(stable, tmp_path)
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+    assert "TREND REGRESSION" not in proc.stderr

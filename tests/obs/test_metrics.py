@@ -1,0 +1,126 @@
+"""Host metrics registry tests: naming convention, update semantics, the
+three sinks (JSONL / exposition / progress line) and the phase-attribution
+hooks the executors call."""
+
+import io
+import json
+import time
+
+import pytest
+
+from repro.obs.metrics import (DEFAULT, JsonlSink, MetricsRegistry,
+                               ProgressLine, record_compile, tap_to_registry,
+                               timed, valid_name)
+
+
+def test_naming_convention():
+    assert valid_name("tap.engine_pool.events")
+    assert valid_name("phase.sweeps_run_group.seconds")
+    assert not valid_name("noseparator")          # needs >= 2 segments
+    assert not valid_name("Upper.case")
+    assert not valid_name("tap..events")
+    assert not valid_name("tap.1digitfirst")
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("bad name")
+
+
+def test_counter_gauge_histogram_semantics():
+    reg = MetricsRegistry()
+    assert reg.counter("a.count") == 1.0
+    assert reg.counter("a.count", 2.5) == 3.5
+    with pytest.raises(ValueError):
+        reg.counter("a.count", -1.0)              # counters are monotone
+    reg.gauge("a.level", 7.0)
+    assert reg.gauge("a.level", 3.0) == 3.0       # last value wins
+    for v in (1.0, 5.0, 3.0):
+        reg.histogram("a.lat", v)
+    snap = reg.get("a.lat")
+    assert snap == {"kind": "histogram", "count": 3, "sum": 9.0,
+                    "min": 1.0, "max": 5.0}
+    with pytest.raises(ValueError):
+        reg.gauge("a.count", 1.0)                 # kind conflicts are errors
+    with pytest.raises(KeyError):
+        reg.get("a.missing")
+    assert reg.names() == ("a.count", "a.lat", "a.level")
+
+
+def test_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("tap.pool.events", 4)
+    reg.histogram("phase.run.seconds", 0.5)
+    text = reg.exposition()
+    assert text.endswith("\n")
+    assert "# TYPE tap_pool_events counter" in text
+    assert "tap_pool_events 4.0" in text
+    assert "# TYPE phase_run_seconds summary" in text
+    assert "phase_run_seconds_count 1" in text
+    assert "phase_run_seconds_sum 0.5" in text
+
+
+def test_jsonl_sink_writes_and_never_raises(tmp_path):
+    path = tmp_path / "events.jsonl"
+    sink = JsonlSink(str(path))
+    import numpy as np
+    sink({"engine": "serving", "rounds_done": np.int32(8),
+          "vec": np.arange(2)})
+    sink({"bad": float("nan")})                   # allow_nan=False -> dropped
+    assert sink.written == 1 and sink.errors == 1
+    rec = json.loads(path.read_text().strip())
+    assert rec == {"engine": "serving", "rounds_done": 8, "vec": [0, 1]}
+    # unwritable path: every call counts an error, none raises
+    bad = JsonlSink(str(tmp_path / "no" / "dir" / "x.jsonl"))
+    bad({"engine": "x"})
+    assert bad.errors == 1
+
+
+def test_progress_line_renders_and_quiet_is_noop():
+    buf = io.StringIO()
+    p = ProgressLine(total=100, stream=buf, min_interval=0.0, label="t")
+    p({"rounds_done": 50})
+    p.update(100)
+    p.close()
+    out = buf.getvalue()
+    assert "rounds/s" in out and "ETA" in out and "100/100" in out
+    quiet = ProgressLine(total=100, stream=buf, enabled=False)
+    before = buf.getvalue()
+    quiet.update(10)
+    quiet.close()
+    assert buf.getvalue() == before               # --quiet writes nothing
+
+
+def test_tap_to_registry_folds_events():
+    reg = MetricsRegistry()
+    handler = tap_to_registry(reg)
+    handler({"engine": "engine.pool", "block": 0, "row": 0,
+             "rounds_done": 16, "host_time": 1.0})
+    handler({"engine": "engine.pool", "block": 1, "row": 0,
+             "rounds_done": 32, "host_time": 1.5})
+    assert reg.get("tap.engine_pool.events")["value"] == 2.0
+    assert reg.get("tap.engine_pool.rounds_done")["value"] == 32.0
+    blk = reg.get("tap.engine_pool.block_seconds")
+    assert blk["count"] == 1 and abs(blk["sum"] - 0.5) < 1e-9
+
+
+def test_timed_and_record_compile():
+    reg = MetricsRegistry()
+    with timed("phase.demo", reg):
+        time.sleep(0.01)
+    snap = reg.get("phase.demo.seconds")
+    assert snap["count"] == 1 and snap["sum"] >= 0.01
+    record_compile("sweeps.run_group", 0, 1.0, reg)   # warm call: no metric
+    assert "compile.sweeps_run_group.events" not in reg.names()
+    record_compile("sweeps.run_group", 1, 2.0, reg)
+    assert reg.get("compile.sweeps_run_group.events")["value"] == 1.0
+    assert reg.get("compile.sweeps_run_group.seconds")["sum"] == 2.0
+
+
+def test_default_registry_is_shared():
+    name = "test.metrics_shared.probe"
+    base = 0.0
+    try:
+        base = DEFAULT.get(name)["value"]
+    except KeyError:
+        pass
+    DEFAULT.counter(name)
+    assert DEFAULT.get(name)["value"] == base + 1.0

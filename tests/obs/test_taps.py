@@ -1,0 +1,295 @@
+"""Tap property tests: ``tap=on`` streams block aggregates DURING the
+compiled scans while leaving every engine output bit-identical, tracing
+zero callbacks when off, and adding zero compiles beyond the family's one
+computation (the same contract ``telemetry=`` keeps)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, serving, sweeps
+from repro.core import throughput
+from repro.core.lea import PoolLoad
+from repro.obs import (EVENT_STREAMS, TAP_ENGINES, capture_taps,
+                       compile_events, validate_event)
+from repro.obs.taps import resolve_stride, stride_boundaries
+
+N = 8
+ROUNDS = 48
+STRATEGIES = ("lea", "static", "oracle")
+KSTAR, ELL_G, ELL_B = 20, 5, 1
+MU_G, MU_B, DEADLINE = 5.0, 1.0, 1.0
+P_GG, P_BB = 0.8, 0.7
+
+
+def _pool(n=N):
+    return PoolLoad(
+        kstar=jnp.int32(KSTAR), ell_g=jnp.int32(ELL_G), ell_b=jnp.int32(ELL_B),
+        mask=jnp.ones((n,), bool),
+    )
+
+
+def _engine(key, *, tap=False, tap_stride=None, round_chunk=None):
+    return throughput.simulate_strategies_pool(
+        key, _pool(),
+        jnp.full((N,), P_GG, jnp.float32), jnp.full((N,), P_BB, jnp.float32),
+        MU_G, MU_B, DEADLINE, rounds=ROUNDS, strategies=STRATEGIES,
+        round_chunk=round_chunk, tap=tap, tap_stride=tap_stride,
+    )
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def test_stride_helpers():
+    assert resolve_stride(48, None) == 48
+    assert resolve_stride(48, 16) == 16
+    assert resolve_stride(8, 100) == 8        # clamped to the horizon
+    with pytest.raises(ValueError):
+        resolve_stride(48, 0)
+    assert stride_boundaries(48, 16) == (16, 32, 48)
+    assert stride_boundaries(48, 20) == (20, 40, 48)  # always ends at rounds
+    assert stride_boundaries(48, 48) == (48,)
+
+
+def test_event_streams_catalogue_matches_engines():
+    assert set(EVENT_STREAMS) == set(TAP_ENGINES)
+
+
+# ------------------------------------------------------------ core engine
+
+
+@pytest.mark.parametrize("round_chunk", [None, 16, 20])
+def test_engine_tap_bit_identical_and_off_is_silent(round_chunk):
+    key = jax.random.PRNGKey(0)
+    with capture_taps() as off_events:
+        off = _engine(key, round_chunk=round_chunk)
+        jax.block_until_ready(off)
+    assert off_events == []                    # tap=off traces NO callbacks
+    with capture_taps() as events:
+        on = _engine(key, tap=True, tap_stride=16, round_chunk=round_chunk)
+        jax.block_until_ready(on)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    assert len(events) > 0
+    for e in events:
+        validate_event(e)
+        assert e["engine"] == "engine.pool"
+
+
+def test_engine_tap_one_compile_per_signature():
+    c0 = compile_events("engine.simulate_strategies_pool")
+    with capture_taps():
+        _engine(jax.random.PRNGKey(3), tap=True, tap_stride=16)
+        c_on = compile_events("engine.simulate_strategies_pool") - c0
+        _engine(jax.random.PRNGKey(4), tap=True, tap_stride=16)  # warm
+    assert c_on <= 1
+    assert compile_events("engine.simulate_strategies_pool") == c0 + c_on
+
+
+def test_engine_tap_monotone_and_consistent_with_outputs():
+    key = jax.random.PRNGKey(5)
+    with capture_taps() as events:
+        succ = _engine(key, tap=True, tap_stride=16)
+        jax.block_until_ready(succ)
+    events.sort(key=lambda e: int(e["block"]))
+    done = [int(e["rounds_done"]) for e in events]
+    assert done == [16, 32, 48]
+    succ_cum = [np.asarray(e["succ_so_far"]) for e in events]
+    for prev, cur in zip(succ_cum, succ_cum[1:]):
+        assert (cur >= prev).all()             # cumulative successes grow
+    thr = [np.asarray(e["throughput_so_far"]) for e in events]
+    for t in thr:
+        assert (t >= 0).all() and (t <= 1).all()
+    # the final block aggregate IS the run total
+    np.testing.assert_array_equal(
+        succ_cum[-1], np.asarray(succ).astype(np.int64).sum(axis=0)
+    )
+    np.testing.assert_allclose(
+        thr[-1], np.asarray(succ).mean(axis=0), rtol=1e-6
+    )
+
+
+def test_sweep_pool_tap_labels_rows():
+    b = 3
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    pool = PoolLoad(
+        kstar=jnp.full((b,), KSTAR, jnp.int32),
+        ell_g=jnp.full((b,), ELL_G, jnp.int32),
+        ell_b=jnp.full((b,), ELL_B, jnp.int32),
+        mask=jnp.ones((b, N), bool),
+    )
+    args = (keys, pool,
+            jnp.full((b, N), P_GG, jnp.float32),
+            jnp.full((b, N), P_BB, jnp.float32),
+            MU_G, MU_B, DEADLINE)
+    kw = dict(rounds=32, strategies=("lea", "static"))
+    off = throughput.sweep_pool(*args, **kw)
+    with capture_taps() as events:
+        on = throughput.sweep_pool(*args, tap=True, tap_stride=16, **kw)
+        jax.block_until_ready(on)
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(on))
+    per_row = {}
+    for e in events:
+        validate_event(e)
+        per_row.setdefault(int(e["row"]), []).append(e)
+    assert sorted(per_row) == list(range(b))
+    for es in per_row.values():
+        es.sort(key=lambda e: int(e["block"]))
+        assert [int(e["rounds_done"]) for e in es] == [16, 32]
+
+
+# ---------------------------------------------------------------- faults
+
+
+def _fault_args(b=3):
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b))
+    pool = PoolLoad(
+        kstar=jnp.full((b,), KSTAR, jnp.int32),
+        ell_g=jnp.full((b,), ELL_G, jnp.int32),
+        ell_b=jnp.full((b,), ELL_B, jnp.int32),
+        mask=jnp.ones((b, N), bool),
+    )
+    channel = faults.make_channel([
+        ("preempt", {"p_preempt": jnp.full((b,), 0.3, jnp.float32)}),
+        ("packet_bernoulli", {"p_drop": jnp.full((b,), 0.1, jnp.float32)}),
+    ])
+    return (keys, pool, jnp.full((b, N), P_GG, jnp.float32),
+            jnp.full((b, N), P_BB, jnp.float32), MU_G, MU_B, DEADLINE,
+            channel, 10)
+
+
+def test_faults_tap_bit_identical_monotone_rows():
+    args = _fault_args()
+    kw = dict(rounds=32, strategies=("lea", "static"), r=2, packets=2, p1=1)
+    off = faults.sweep_faults(*args, **kw)
+    c0 = compile_events("faults.sweep")
+    with capture_taps() as events:
+        on = faults.sweep_faults(*args, tap=True, tap_stride=8, **kw)
+        jax.block_until_ready(on)
+    c_on = compile_events("faults.sweep") - c0
+    on2 = faults.sweep_faults(*args, tap=True, tap_stride=8, **kw)
+    jax.block_until_ready(on2)
+    assert c_on <= 1
+    assert compile_events("faults.sweep") == c0 + c_on    # warm repeat
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    per_row = {}
+    for e in events:
+        validate_event(e)
+        assert e["engine"] == "faults.sweep"
+        per_row.setdefault(int(e["row"]), []).append(e)
+    assert sorted(per_row) == [0, 1, 2]
+    for r, es in per_row.items():
+        es.sort(key=lambda e: int(e["block"]))
+        for key in ("recovered_aon_so_far", "recovered_conserve_so_far",
+                    "partial_so_far", "preempted_so_far",
+                    "packets_lost_so_far"):
+            vals = [np.asarray(e[key]) for e in es]
+            for prev, cur in zip(vals, vals[1:]):
+                assert (cur >= prev).all(), (r, key)
+        # final aggregates reconcile with the outcome streams
+        last = es[-1]
+        np.testing.assert_array_equal(
+            np.asarray(last["recovered_aon_so_far"]),
+            np.asarray(off.full_aon)[r].astype(np.int64).sum(axis=0),
+        )
+        # AON <= conserve pointwise, so the aggregates inherit the order
+        assert (np.asarray(last["recovered_aon_so_far"])
+                <= np.asarray(last["recovered_conserve_so_far"])).all()
+
+
+# --------------------------------------------------------------- serving
+
+
+def _serving_args(b=2):
+    keys = jax.vmap(lambda i: jax.random.PRNGKey(100 + i))(jnp.arange(b))
+    spec = serving.RequestSpec(
+        kstar=jnp.full((b,), 50, jnp.int32),
+        ell_g=jnp.full((b,), 10, jnp.int32),
+        ell_b=jnp.full((b,), 3, jnp.int32),
+        deadline_rel=jnp.full((b,), 3, jnp.int32),
+        admit_threshold=jnp.zeros((b,), jnp.float32),
+        reserve_cap=jnp.full((b,), serving.ADMIT_ALL_CAP, jnp.float32),
+    )
+    process = serving.make_process(
+        "poisson", rate=jnp.full((b,), 0.6, jnp.float32)
+    )
+    n = 15
+    return (keys, jnp.ones((b, n), bool),
+            jnp.full((b, n), P_GG, jnp.float32),
+            jnp.full((b, n), P_BB, jnp.float32),
+            10.0, 3.0, 1.0, spec, process)
+
+
+def test_serving_tap_bit_identical_strategy_rows_one_compile():
+    args = _serving_args()
+    kw = dict(rounds=40, strategies=("lea",), capacity=2)
+    off = serving.sweep_serving(*args, **kw)
+    c0 = compile_events("serving.sweep")
+    with capture_taps() as events:
+        on = serving.sweep_serving(*args, tap=True, tap_stride=10, **kw)
+        jax.block_until_ready(on)
+    c_on = compile_events("serving.sweep") - c0
+    on2 = serving.sweep_serving(*args, tap=True, tap_stride=10, **kw)
+    jax.block_until_ready(on2)
+    assert c_on <= 1
+    assert compile_events("serving.sweep") == c0 + c_on
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    per = {}
+    for e in events:
+        validate_event(e)
+        assert e["engine"] == "serving"
+        per.setdefault((int(e["row"]), int(e["strategy"])), []).append(e)
+    assert sorted(per) == [(0, 0), (1, 0)]
+    for (r, s), es in per.items():
+        es.sort(key=lambda e: int(e["block"]))
+        assert [int(e["rounds_done"]) for e in es] == [10, 20, 30, 40]
+        adm = [int(e["admitted_so_far"]) for e in es]
+        srv = [int(e["served_on_time_so_far"]) for e in es]
+        assert adm == sorted(adm) and srv == sorted(srv)
+        # the final block aggregate IS the outcome counter
+        assert adm[-1] == int(np.asarray(off.admitted)[r, s])
+        assert srv[-1] == int(np.asarray(off.served_on_time)[r, s])
+        # occupancy is bounded by the queue capacity
+        assert all(0 <= int(e["occupancy"]) <= kw["capacity"] for e in es)
+
+
+def test_serving_tap_streams_during_scan():
+    """The acceptance gate: tap events land on the host strictly BEFORE the
+    compiled scan completes — live streaming, not post-hoc replay."""
+    args = _serving_args(b=1)
+    with capture_taps() as events:
+        out = serving.sweep_serving(
+            *args, rounds=40, strategies=("lea",), capacity=2,
+            tap=True, tap_stride=10,
+        )
+        jax.block_until_ready(out)
+        done_t = time.perf_counter()
+    assert len(events) == 4
+    assert all(e["host_time"] < done_t for e in events)
+    # block order is preserved per (row, strategy): the token chain
+    # serializes the unordered callbacks
+    times = [e["host_time"] for e in sorted(events,
+                                            key=lambda e: int(e["block"]))]
+    assert times == sorted(times)
+
+
+# ------------------------------------------------------------- executor
+
+
+def test_sweeps_executor_tap_threads_through():
+    res_off = sweeps.run("deadline_sweep", seeds=1)
+    with capture_taps() as events:
+        res_on = sweeps.run("deadline_sweep", seeds=1, tap=True,
+                            tap_stride=32)
+    for a, b in zip(res_off, res_on):
+        assert a.throughput == b.throughput
+    assert len(events) > 0
+    for e in events:
+        validate_event(e)
+        assert e["engine"] == "engine.pool"
+        assert int(e["row"]) >= 0              # executor labels batch rows

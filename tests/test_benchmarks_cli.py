@@ -228,7 +228,16 @@ def test_committed_obs_report_manifest_and_trace():
         "BENCH_gf.json", "BENCH_faults.json", "BENCH_serving.json",
     }
     assert doc["missing_provenance"] == []
-    # the committed trace itself must be a valid trace-event document
+    # the live tier rode along: tap events streamed during the demo run and
+    # the trend section spans a real history trajectory
+    assert doc["tap_events"] > 0
+    assert doc["trend"]["entries"] >= 2
+    assert "regressions" in doc["trend"] and "series" in doc["trend"]
+    # the committed trace itself must be a valid trace-event document, and
+    # it lives under benchmarks/artifacts/ (the root stays manifest-only)
+    assert doc["trace_path"].replace(os.sep, "/").startswith(
+        "benchmarks/artifacts/"
+    )
     with open(os.path.join(_ROOT, doc["trace_path"])) as f:
         trace = json.load(f)
     stats = validate_trace(trace)
