@@ -17,11 +17,14 @@ rows without raising (exit 1 otherwise); ``--check`` adds exit 2 when the
 robust trend detector (``repro.obs.history.trend_report``) flags a hard
 regression — the median of the newest history entries leaving the
 committed median ± max(tol·|median|, z·MAD) envelope on the worse side
-for a perf metric.  Seven targets additionally refresh a manifest at the
+for a perf metric.  Eight targets additionally refresh a manifest at the
 repo root (each blurb in ``SUITES`` names its file): ``fig3_sim`` ->
 ``BENCH_fig3.json`` (rounds/sec, allocator us/call), ``sweep_smoke`` ->
 ``BENCH_sweep.json`` (with a soft rows/sec regression check against the
-committed baseline), ``bench_policies`` -> ``BENCH_policies.json``
+committed baseline), ``bench_speed`` -> ``BENCH_speed.json`` (sync vs
+async-pipelined executor rows/sec measured in one process, donated-carry
+proof, tap overlap accounting and the persistent-compile-cache
+cold-vs-warm process row), ``bench_policies`` -> ``BENCH_policies.json``
 (per-policy throughput, baseline ratio, final regret + CI vs the oracle),
 ``bench_gf`` -> ``BENCH_gf.json`` (exact GF(p) device-vs-numpy speedups,
 >= 5x acceptance on the exact coded round), ``bench_faults`` ->
@@ -66,6 +69,9 @@ SUITES = [
      "recovery-threshold table (eqs. 15/16)"),
     ("sweep_smoke", "sweep_smoke",
      "repro.sweeps gate: sharded+chunked grid, bit-exact vs engine; writes BENCH_sweep.json"),
+    ("bench_speed", "bench_speed",
+     "raw-speed gate: sync vs async-pipelined executor, donated carries, "
+     "persistent-cache warm restart; writes BENCH_speed.json"),
     ("bench_policies", "bench_policies",
      "scheduling-policy shoot-out with regret columns; writes BENCH_policies.json"),
     ("bench_gf", "bench_gf",
@@ -115,6 +121,13 @@ def main(argv: list[str] | None = None) -> None:
     selected = [row for row in SUITES if not argv or row[0] in argv]
 
     import importlib
+
+    # REPRO_COMPILE_CACHE=<dir>: persistent XLA compile cache — one-compile-
+    # per-family survives process restarts (repro.launch.cache; the hit
+    # listener keeps the unified compile counters honest on warm restarts)
+    from repro.launch.cache import enable_compile_cache
+
+    enable_compile_cache()
 
     # REPRO_PROFILE=<dir> wraps the whole selection in a jax.profiler trace;
     # each suite gets a host-side TraceAnnotation span (repro.obs.profiling)

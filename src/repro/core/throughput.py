@@ -364,6 +364,93 @@ def _check_chain_shapes(p_gg: jnp.ndarray, p_bb: jnp.ndarray, rounds: int) -> No
         )
 
 
+def engine_preamble(
+    key: jax.Array,
+    load,                      # LoadParams (static) or lea.PoolLoad (traced)
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    rounds: int,
+    strategies: tuple[str, ...],
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The per-simulation preamble every engine flavour shares.
+
+    ``(states (M, n), round_keys (M, 2), p_alloc (A, M, n), pi_g (n,))`` on
+    EXACTLY the PRNG discipline of :func:`simulate_strategies` — the same
+    ``split(key)``, the same masked trajectory, the same policy-stream
+    ``fold_in`` — so a caller that re-blocks the per-round work itself (the
+    ``repro.sweeps`` pipelined executor) consumes bit-identical inputs.
+    ``p_alloc`` has a zero-size leading axis when no allocator strategy is
+    requested (the uniform-signature convention of the block body).
+    """
+    masked = isinstance(load, lea_mod.PoolLoad)
+    k_traj, k_rounds = jax.random.split(key)
+    with _phase("trajectory"):
+        states = markov.sample_trajectory(
+            k_traj, p_gg, p_bb, rounds,
+            worker_mask=load.mask if masked else None,
+        )                                                          # (M, n)
+    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
+    round_keys = jax.random.split(k_rounds, rounds)
+    alloc_names = allocator_strategies(strategies)
+    if alloc_names:
+        with _phase("policy_replay"):
+            p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
+    else:  # keep the block signature uniform; zero-size axis costs nothing
+        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
+    return states, round_keys, p_alloc, pi_g
+
+
+def engine_block(
+    states_b: jnp.ndarray,     # (m, n) — a block of rounds
+    keys_b: jnp.ndarray,       # (m, 2)
+    p_alloc_b: jnp.ndarray,    # (A, m, n)
+    pi_g: jnp.ndarray,         # (n,)
+    load,                      # LoadParams (static) or lea.PoolLoad (traced)
+    strategies: tuple[str, ...],
+    mu_g,
+    mu_b,
+    deadline,
+) -> jnp.ndarray:
+    """One round block scored: (m, S) success indicators.
+
+    Pure per-round work (:func:`_rollout_block` + :func:`_score_block_stats`
+    — the body the chunked ``lax.map`` runs), so any partition of the M
+    rounds into blocks, in any dispatch order, yields bit-identical rows.
+    This is the unit the pipelined executor dispatches asynchronously.
+    """
+    loads_mat, feasible, _prefix = _rollout_block(
+        states_b, keys_b, p_alloc_b, pi_g, load, strategies
+    )
+    return _score_block(
+        loads_mat, feasible, states_b, mu_g, mu_b, deadline, load.kstar
+    )
+
+
+def estimator_error_rounds(
+    states: jnp.ndarray,
+    p_alloc: jnp.ndarray,
+    p_gg: jnp.ndarray,
+    p_bb: jnp.ndarray,
+    pi_g: jnp.ndarray,
+    mask: jnp.ndarray | None,
+) -> jnp.ndarray:
+    """(M, A) mean |p_alloc - genie p_good| per round, masked workers excluded.
+
+    The estimator-error stream shared by the telemetry frame and the tap
+    aggregates — one definition so every consumer folds the same floats.
+    """
+    from repro.policies.estimators import oracle_p_good
+
+    p_true = oracle_p_good(states, p_gg, p_bb, pi_g)           # (M, n)
+    err = jnp.abs(p_alloc - p_true[None])                      # (A, M, n)
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        est = jnp.sum(err * w, axis=-1) / jnp.maximum(jnp.sum(w), 1.0)
+    else:
+        est = jnp.mean(err, axis=-1)                           # (A, M)
+    return jnp.moveaxis(est, 0, 1)                             # (M, A)
+
+
 def _simulate_impl(
     key: jax.Array,
     load,                      # LoadParams (static) or lea.PoolLoad (traced)
@@ -404,20 +491,10 @@ def _simulate_impl(
     _check_strategies(strategies)
     _check_chain_shapes(p_gg, p_bb, rounds)
     masked = isinstance(load, lea_mod.PoolLoad)
-    k_traj, k_rounds = jax.random.split(key)
-    with _phase("trajectory"):
-        states = markov.sample_trajectory(
-            k_traj, p_gg, p_bb, rounds,
-            worker_mask=load.mask if masked else None,
-        )                                                          # (M, n)
-    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
-    round_keys = jax.random.split(k_rounds, rounds)
+    states, round_keys, p_alloc, pi_g = engine_preamble(
+        key, load, p_gg, p_bb, rounds, strategies
+    )
     alloc_names = allocator_strategies(strategies)
-    if alloc_names:
-        with _phase("policy_replay"):
-            p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)  # (A, M, n)
-    else:  # keep the block signature uniform; zero-size axis costs nothing
-        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
     kstar = load.kstar
 
     def block(states_b, keys_b, p_alloc_b):
@@ -439,20 +516,12 @@ def _simulate_impl(
         )
 
     def est_err_rounds():
-        # estimator error vs. the genie's true conditional p_good, masked
-        # workers excluded — O(A*M*n), computed once outside the blocks;
-        # shared by the telemetry frame and the tap aggregates (same traced
-        # values, same order of operations either way)
-        from repro.policies.estimators import oracle_p_good
-
-        p_true = oracle_p_good(states, p_gg, p_bb, pi_g)           # (M, n)
-        err = jnp.abs(p_alloc - p_true[None])                      # (A, M, n)
-        if masked:
-            w = load.mask.astype(jnp.float32)
-            est = jnp.sum(err * w, axis=-1) / jnp.maximum(jnp.sum(w), 1.0)
-        else:
-            est = jnp.mean(err, axis=-1)                           # (A, M)
-        return jnp.moveaxis(est, 0, 1)                             # (M, A)
+        # estimator error vs. the genie's true conditional p_good — O(A*M*n),
+        # computed once outside the blocks; shared by the telemetry frame and
+        # the tap aggregates (same traced values either way)
+        return estimator_error_rounds(
+            states, p_alloc, p_gg, p_bb, pi_g, load.mask if masked else None
+        )
 
     def with_frame(succ, tel):
         prefix_t, load_total_t, received_t, feasible_t = tel
@@ -664,19 +733,9 @@ def _rollout_impl(
     """Shared body of :func:`rollout` / :func:`rollout_pool`."""
     _check_strategies(strategies)
     _check_chain_shapes(p_gg, p_bb, rounds)
-    masked = isinstance(load, lea_mod.PoolLoad)
-    k_traj, k_rounds = jax.random.split(key)
-    states = markov.sample_trajectory(
-        k_traj, p_gg, p_bb, rounds,
-        worker_mask=load.mask if masked else None,
+    states, round_keys, p_alloc, pi_g = engine_preamble(
+        key, load, p_gg, p_bb, rounds, strategies
     )
-    pi_g = markov.stationary_good_prob(*_chain_row0(p_gg, p_bb))
-    round_keys = jax.random.split(k_rounds, rounds)
-    alloc_names = allocator_strategies(strategies)
-    if alloc_names:
-        p_alloc = _p_good_rows(states, p_gg, p_bb, alloc_names, key)
-    else:
-        p_alloc = jnp.zeros((0,) + states.shape, jnp.float32)
     loads_mat, feasible, _prefix = _rollout_block(
         states, round_keys, p_alloc, pi_g, load, strategies
     )

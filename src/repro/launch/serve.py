@@ -99,6 +99,11 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
     if args.smoke:
         args.rounds = min(args.rounds, 64)
+    # REPRO_COMPILE_CACHE=<dir>: persistent XLA compile cache, so restarting
+    # the CLI on an already-seen config skips the cold compile entirely
+    from repro.launch.cache import enable_compile_cache
+
+    enable_compile_cache()
 
     spec = CodeSpec(args.n, args.r, args.k, deg_f=args.deg_f)
     lp = LoadParams(

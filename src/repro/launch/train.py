@@ -46,6 +46,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--dp-shards", type=int, default=8)
     ap.add_argument("--compress", default="none", choices=["none", "int8", "topk"])
     args = ap.parse_args(argv)
+    # REPRO_COMPILE_CACHE=<dir>: persistent XLA compile cache across restarts
+    from repro.launch.cache import enable_compile_cache
+
+    enable_compile_cache()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, microbatch=1)

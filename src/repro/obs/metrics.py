@@ -232,12 +232,21 @@ def _jsonable(v: Any) -> Any:
 class ProgressLine:
     """Periodic stderr progress line: rounds/sec and ETA.
 
-    Drive it as a tap handler (it reads ``rounds_done`` from events; rows
-    and strategies re-announce the same rounds, so it tracks the MAX seen)
-    or host-side via :meth:`update`.  Lines are rewritten in place
-    (``\\r``) at most every ``min_interval`` seconds; :meth:`close` ends
-    the line.  ``enabled=False`` (the ``--quiet`` path) makes every call a
-    no-op.
+    Drive it as a tap handler (it reads ``rounds_done`` from events) or
+    host-side via :meth:`update`.  Lines are rewritten in place (``\\r``)
+    at most every ``min_interval`` seconds; :meth:`close` ends the line.
+    ``enabled=False`` (the ``--quiet`` path) makes every call a no-op.
+
+    Out-of-order folding: async pipelined executors complete blocks out of
+    order ACROSS rows (row 3's block 2 can land before row 0's block 1), so
+    a single max-watermark over ``rounds_done`` would jump to the fastest
+    row and report a finished-looking ETA while most rows still run.  Tap
+    events are instead folded as a per-``row`` watermark — max
+    ``rounds_done`` per row, immune to event reordering within a row — and
+    the line reports the MEAN across rows seen, which matches the true
+    per-row progress when rows advance together and degrades gracefully
+    when they don't.  Host-side :meth:`update` (no row structure) keeps the
+    plain single-watermark semantics.
     """
 
     def __init__(self, total: int | None = None, *, stream=None,
@@ -250,6 +259,7 @@ class ProgressLine:
         self.label = label
         self.rounds_done = 0
         self.events = 0
+        self._row_rounds: dict[int, int] = {}
         self._t0: float | None = None
         self._last_write = 0.0
         self._lock = threading.Lock()
@@ -258,21 +268,46 @@ class ProgressLine:
         rd = event.get("rounds_done")
         if rd is None:
             return
-        self.update(int(np.asarray(rd)))
+        row = event.get("row")
+        if row is None:
+            self.update(int(np.asarray(rd)))
+            return
+        if not self.enabled:
+            return
+        now = time.perf_counter()
+        with self._lock:
+            row, rd = int(np.asarray(row)), int(np.asarray(rd))
+            self._row_rounds[row] = max(self._row_rounds.get(row, 0), rd)
+            self.rounds_done = int(
+                sum(self._row_rounds.values()) / len(self._row_rounds)
+            )
+            if not self._tick(now):
+                return
+            line = self._render(now)
+        self._write(line)
 
     def update(self, rounds_done: int) -> None:
         if not self.enabled:
             return
         now = time.perf_counter()
         with self._lock:
-            self.events += 1
-            if self._t0 is None:
-                self._t0 = now
             self.rounds_done = max(self.rounds_done, int(rounds_done))
-            if now - self._last_write < self.min_interval:
+            if not self._tick(now):
                 return
-            self._last_write = now
             line = self._render(now)
+        self._write(line)
+
+    def _tick(self, now: float) -> bool:
+        """Event bookkeeping under the lock; True when a line is due."""
+        self.events += 1
+        if self._t0 is None:
+            self._t0 = now
+        if now - self._last_write < self.min_interval:
+            return False
+        self._last_write = now
+        return True
+
+    def _write(self, line: str) -> None:
         try:
             self.stream.write("\r" + line)
             self.stream.flush()

@@ -109,11 +109,19 @@ def capture_taps() -> Iterator[list[dict]]:
             run_group(group, tap=True)
         assert events and events[-1]["rounds_done"] == rounds
     """
+    import jax
+
     events: list[dict] = []
     name = f"_capture_{id(events)}"
+    # unordered io_callbacks may still be in flight from a computation that
+    # finished OUTSIDE this block (block_until_ready on outputs does not
+    # fence pure effects) — drain them at both boundaries so the list holds
+    # exactly the events of the block: no stragglers leak in, none leak out
+    jax.effects_barrier()
     add_tap(name, events.append)
     try:
         yield events
+        jax.effects_barrier()
     finally:
         remove_tap(name)
 

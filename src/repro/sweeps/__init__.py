@@ -26,8 +26,9 @@ The one-liner::
 
 from repro.obs.telemetry import TelemetryFrame
 
-from .executor import (compile_cache_size, run, run_group, run_groups,
-                       suggest_round_chunk)
+from .executor import (compile_cache_size, last_pipeline_stats,
+                       pipeline_block_hlo, run, run_group, run_groups,
+                       run_multihost, suggest_round_chunk)
 from .registry import (Scenario, ScenarioBatch, SweepGroup, as_dense_schedule,
                        build_groups, catalogue, describe, expand, family_names,
                        register)
@@ -37,7 +38,8 @@ from .results import (ScenarioResult, manifest, summarize, summarize_group,
 __all__ = [
     "Scenario", "ScenarioBatch", "ScenarioResult", "SweepGroup", "TelemetryFrame",
     "as_dense_schedule", "build_groups", "catalogue", "compile_cache_size",
-    "describe", "expand", "family_names", "manifest", "register", "run",
-    "run_group", "run_groups", "suggest_round_chunk", "summarize",
-    "summarize_group", "write_manifest",
+    "describe", "expand", "family_names", "last_pipeline_stats", "manifest",
+    "pipeline_block_hlo", "register", "run", "run_group", "run_groups",
+    "run_multihost", "suggest_round_chunk", "summarize", "summarize_group",
+    "write_manifest",
 ]

@@ -1,0 +1,120 @@
+"""2-process ``jax.distributed`` sweep: multi-host manifest == single-host.
+
+The parent (no argv) computes the single-host reference manifest, then
+spawns itself twice with ``--worker <pid>`` (coordinator on a localhost
+port, 2 processes).  Each worker joins the grid via
+``repro.launch.mesh.init_distributed``, runs
+``repro.sweeps.run_multihost`` — interleaved row shards through the
+ordinary executor on LOCAL devices, spool-file merge on process 0 — and
+process 0 writes its manifest.  The parent asserts the merged multi-host
+document is BIT-identical (same JSON, fixed timestamp) to the single-host
+one, prints the marker.
+
+World=1 degeneration is also pinned here: ``run_multihost`` outside any
+grid must return byte-identical results to plain ``run``.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+
+FAMILY_KW = dict(ks=(50, 99), lams=(0.2, 0.7), rounds=96)
+SEEDS = 2
+MARKER = "SWEEPS_MULTIHOST_OK"
+
+
+def _manifest_doc(results):
+    from repro.sweeps import results as results_mod
+
+    doc = results_mod.manifest(results, bench="multihost_test", timestamp=0.0)
+    # provenance is host/process state, not simulation output — the
+    # bit-identity claim is about every computed row
+    doc.pop("provenance", None)
+    return doc
+
+
+def _run_single():
+    from repro.sweeps import run
+
+    return run("hetero_kstar", seeds=SEEDS, **FAMILY_KW)
+
+
+def worker(pid: int, coord: str, spool: str, out_path: str) -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    from repro.launch.mesh import init_distributed, make_sweep_mesh
+    from repro.sweeps import run_multihost
+
+    wpid, nprocs = init_distributed(coordinator=coord, num_processes=2,
+                                    process_id=pid)
+    assert (wpid, nprocs) == (pid, 2), (wpid, nprocs)
+    results = run_multihost("hetero_kstar", seeds=SEEDS, spool_dir=spool,
+                            mesh=make_sweep_mesh(), round_chunk=24,
+                            pipeline=True, **FAMILY_KW)
+    if pid == 0:
+        assert results is not None
+        with open(out_path, "w") as f:
+            json.dump(_manifest_doc(results), f, indent=2)
+    else:
+        assert results is None
+    import jax
+
+    jax.distributed.shutdown()
+
+
+def main() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # single-host reference, same executor knobs
+        from repro.launch.mesh import make_sweep_mesh, world
+        from repro.sweeps import run, run_multihost
+
+        assert world() == (0, 1)
+        ref = run("hetero_kstar", seeds=SEEDS, mesh=make_sweep_mesh(),
+                  round_chunk=24, pipeline=True, **FAMILY_KW)
+        ref_doc = _manifest_doc(ref)
+
+        # world=1 degeneration: run_multihost IS run outside any grid
+        deg = run_multihost("hetero_kstar", seeds=SEEDS,
+                            spool_dir=os.path.join(tmp, "unused"),
+                            mesh=make_sweep_mesh(), round_chunk=24,
+                            pipeline=True, **FAMILY_KW)
+        assert json.dumps(_manifest_doc(deg), sort_keys=True) == \
+            json.dumps(ref_doc, sort_keys=True), "world=1 degeneration broke"
+
+        # 2-process grid: same manifest, bit for bit
+        with socket.socket() as s:
+            s.bind(("localhost", 0))
+            coord = f"localhost:{s.getsockname()[1]}"
+        spool = os.path.join(tmp, "spool")
+        out_path = os.path.join(tmp, "multihost.json")
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)   # workers set their own
+        procs = [
+            subprocess.Popen(
+                [sys.executable, os.path.abspath(__file__), "--worker",
+                 str(pid), coord, spool, out_path],
+                env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                text=True,
+            )
+            for pid in range(2)
+        ]
+        logs = [p.communicate(timeout=540)[0] for p in procs]
+        for p, log in zip(procs, logs):
+            assert p.returncode == 0, f"worker failed:\n{log}"
+        with open(out_path) as f:
+            multi_doc = json.load(f)
+        assert json.dumps(multi_doc, sort_keys=True) == \
+            json.dumps(ref_doc, sort_keys=True), (
+            "multi-host manifest != single-host")
+        print(MARKER)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--worker":
+        worker(int(sys.argv[2]), sys.argv[3], sys.argv[4], sys.argv[5])
+    else:
+        main()

@@ -54,3 +54,9 @@ def test_moe_expert_parallel_matches_dense():
 
 def test_sweeps_sharded_executor_matches_unsharded():
     _run("_sweeps_sharded.py", "SWEEPS_SHARDED_OK")
+
+
+def test_sweeps_multihost_merge_matches_single_host():
+    """2-process jax.distributed grid: spool-merged manifest bit-identical
+    to the single-host run (plus the world=1 degeneration)."""
+    _run("_sweeps_multihost.py", "SWEEPS_MULTIHOST_OK")

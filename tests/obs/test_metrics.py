@@ -89,6 +89,41 @@ def test_progress_line_renders_and_quiet_is_noop():
     assert buf.getvalue() == before               # --quiet writes nothing
 
 
+def test_progress_line_eta_under_out_of_order_blocks():
+    """Async pipelining delivers block events out of order across rows; the
+    line must fold a per-(row, block) watermark, not a global max."""
+    import random
+
+    buf = io.StringIO()
+    p = ProgressLine(total=100, stream=buf, min_interval=0.0)
+    # 4 rows x 4 blocks of 25 rounds, shuffled delivery
+    events = [{"row": r, "block": b, "rounds_done": (b + 1) * 25}
+              for r in range(4) for b in range(4)]
+    random.Random(0).shuffle(events)
+    partial_done = []
+    for e in events[:8]:
+        p(e)
+        partial_done.append(p.rounds_done)
+    # a single max-watermark would already claim 100 after any one row's
+    # final block; the per-row fold reports mean progress across rows seen
+    first_final = next(i for i, e in enumerate(events) if e["rounds_done"] == 100)
+    assert first_final < 8                       # shuffle really is adversarial
+    assert any(d < 100 for d in partial_done[first_final:])
+    for e in events[8:]:
+        p(e)
+    assert p.rounds_done == 100                  # all rows done -> exact
+    # duplicate/late re-delivery of an old block cannot move progress back
+    p({"row": 2, "block": 0, "rounds_done": 25})
+    assert p.rounds_done == 100
+    p.close()
+    assert "100/100" in buf.getvalue()
+    # host-side update() keeps the plain single-watermark semantics
+    q = ProgressLine(total=10, stream=io.StringIO(), min_interval=0.0)
+    q.update(7)
+    q.update(3)
+    assert q.rounds_done == 7
+
+
 def test_tap_to_registry_folds_events():
     reg = MetricsRegistry()
     handler = tap_to_registry(reg)

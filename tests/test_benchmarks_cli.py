@@ -67,6 +67,7 @@ def test_suite_blurbs_name_exactly_the_manifests_they_write():
     writers = {
         "fig3_sim": "BENCH_fig3.json",
         "sweep_smoke": "BENCH_sweep.json",
+        "bench_speed": "BENCH_speed.json",
         "bench_policies": "BENCH_policies.json",
         "bench_gf": "BENCH_gf.json",
         "bench_faults": "BENCH_faults.json",
@@ -93,7 +94,7 @@ def test_every_committed_manifest_is_provenance_stamped():
     from repro.obs.provenance import has_required_fields
 
     paths = sorted(glob.glob(os.path.join(_ROOT, "BENCH_*.json")))
-    assert len(paths) >= 7, paths        # all seven writers are committed
+    assert len(paths) >= 8, paths        # all eight writers are committed
     for path in paths:
         with open(path) as f:
             doc = json.load(f)
@@ -104,6 +105,50 @@ def test_every_committed_manifest_is_provenance_stamped():
         assert isinstance(doc.get("warnings"), list), name
         for w in doc["warnings"]:
             assert {"kind", "bench", "metric", "message"} <= set(w), (name, w)
+
+
+def test_bench_speed_is_a_registered_target_and_listed():
+    from benchmarks.run import SUITES
+
+    names = [name for name, _, _ in SUITES]
+    assert "bench_speed" in names
+    proc = _run_cli("--list")
+    assert proc.returncode == 0, proc.stderr
+    assert "bench_speed" in proc.stdout and "BENCH_speed.json" in proc.stdout
+
+
+def test_committed_bench_speed_manifest_shape_and_invariants():
+    """BENCH_speed.json is a committed artifact: the bit-identity, donation
+    and warm-restart-0-compiles acceptance results must hold in the
+    committed numbers.  rows/sec and the speedup itself are
+    machine-dependent and follow the soft-gate convention (a miss is a
+    recorded warning, never a hidden one), so only their presence, the
+    honest before/after pairing and the structural flags are pinned."""
+    import json
+
+    with open(os.path.join(_ROOT, "BENCH_speed.json")) as f:
+        doc = json.load(f)
+    assert doc["bench"] == "bench_speed"
+    assert doc["family"] == "hetero_kstar"
+    # hard in-run gates, recorded
+    assert doc["bitexact_async_vs_sync"] is True
+    assert doc["donated_runtime"] is True
+    assert doc["donation_hlo_alias"] is True
+    # warm restart of the cached family attributed ZERO backend compiles
+    assert doc["cache_warm_backend_compiles"] == 0
+    assert doc["cache_cold_backend_compiles"] >= 1
+    assert doc["cache_warm_persistent_hits"] >= 1
+    # before/after measured in one process: both sides present and positive
+    assert doc["sync_rows_per_sec"] > 0 and doc["async_rows_per_sec"] > 0
+    assert doc["speedup_async_vs_sync"] == (
+        doc["async_rows_per_sec"] / doc["sync_rows_per_sec"])
+    assert doc["speedup_bar"] == 1.3
+    # a below-bar committed run must carry the structured warning
+    if doc["speedup_below_bar"]:
+        assert any(w["kind"] == "speedup_bar" for w in doc["warnings"])
+    # tap overlap accounting rode along (count > 0 iff events streamed)
+    assert doc["tap_block_seconds_count"] > 0
+    assert doc["pipeline_stats"]["blocks"] >= 1
 
 
 def test_bench_faults_is_a_registered_target_and_listed():
